@@ -1,0 +1,24 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+ROWS = []
+
+
+def record(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def time_supersteps(run_result) -> float:
+    """Mean steady-state per-superstep wall seconds: drops supersteps whose
+    wall time includes a jit compile (first step, capacity regrows,
+    frontier refits)."""
+    walls = [s["wall_s"] for s in run_result.stats
+             if "wall_s" in s and not s.get("recompiled", False)]
+    if not walls:
+        walls = [s["wall_s"] for s in run_result.stats if "wall_s" in s][1:]
+    return float(np.mean(walls)) if walls else run_result.wall_s

@@ -1,0 +1,45 @@
+"""Paper Figure 10/11: overall and per-iteration execution time vs dataset
+size (Webmap ladder for PageRank, BTC ladder for SSSP/CC)."""
+from __future__ import annotations
+
+from repro.core import load_graph, run_host
+from repro.graph import DATASETS, SSSP, ConnectedComponents, PageRank
+
+from benchmarks.common import record, time_supersteps
+
+LADDERS = {
+    "pagerank": ["webmap-tiny", "webmap-xsmall", "webmap-small"],
+    "sssp": ["btc-tiny", "btc-xsmall", "btc-small"],
+    "cc": ["btc-tiny", "btc-xsmall", "btc-small"],
+}
+
+
+def _prog(name, n):
+    if name == "pagerank":
+        return PageRank(n, iterations=8), 2
+    if name == "sssp":
+        return SSSP(source=0), 1
+    return ConnectedComponents(), 1
+
+
+def main(full: bool = False):
+    out = {}
+    for algo, ladder in LADDERS.items():
+        if full:
+            ladder = ladder + [ladder[-1].rsplit("-", 1)[0] + "-medium"]
+        for ds in ladder:
+            edges, n = DATASETS[ds]()
+            prog, vd = _prog(algo, n)
+            plan = prog.suggested_plan
+            vert = load_graph(edges, n, P=4, value_dims=vd)
+            res = run_host(vert, prog, plan, max_supersteps=30)
+            per_it = time_supersteps(res)
+            out[(algo, ds)] = (res.wall_s, per_it)
+            record(f"exec_time/{algo}/{ds}", per_it * 1e6,
+                   f"overall_s={res.wall_s:.2f};supersteps={res.supersteps};"
+                   f"edges={len(edges)}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

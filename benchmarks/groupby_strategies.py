@@ -1,0 +1,30 @@
+"""Paper Figure 7 + [13]: the four parallel group-by strategies
+(sort/scatter x partitioning/merging connector) on PageRank."""
+from __future__ import annotations
+
+from repro.core import PhysicalPlan, load_graph, run_host
+from repro.graph import PageRank, rmat_graph
+
+from benchmarks.common import record, time_supersteps
+
+
+def main(scale: int = 1):
+    n = 20_000 * scale
+    edges = rmat_graph(n, 12 * n, seed=3)
+    out = {}
+    for gb in ("scatter", "sort"):
+        for conn in ("partitioning", "partitioning_merging"):
+            plan = PhysicalPlan(join="full_outer", groupby=gb,
+                                connector=conn, sender_combine=True)
+            vert = load_graph(edges, n, P=4, value_dims=2)
+            prog = PageRank(n, iterations=8)
+            res = run_host(vert, prog, plan, max_supersteps=10)
+            t = time_supersteps(res)
+            out[(gb, conn)] = t
+            record(f"groupby/{gb}/{conn}", t * 1e6,
+                   f"supersteps={res.supersteps}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

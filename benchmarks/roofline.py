@@ -1,0 +1,66 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json).
+
+Per (arch x shape x mesh): the three terms (compute / memory / collective,
+seconds), the dominant bottleneck, MODEL_FLOPS = 6*N_active*D, the
+useful-FLOPs ratio, and the roofline fraction. This is the §Roofline source
+of truth for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import record
+
+
+def load_records(dryrun_dir="results/dryrun", tag="baseline"):
+    recs = []
+    for f in sorted(Path(dryrun_dir).glob(f"{tag}_*.json")):
+        r = json.loads(f.read_text())
+        recs.append(r)
+    return recs
+
+
+def table(recs, mesh="single"):
+    rows = []
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": "skipped", "reason": r["reason"]})
+            continue
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": "error"})
+            continue
+        t = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"], "dominant": t["dominant"],
+            "useful_ratio": t.get("useful_flops_ratio"),
+            "roofline_frac": t.get("roofline_fraction"),
+            "mem_gib": r["memory"]["total_per_device_bytes"] / 2 ** 30,
+        })
+    return rows
+
+
+def main():
+    recs = load_records()
+    rows = table(recs, "single")
+    ok = [r for r in rows if r["status"] == "ok"]
+    for r in ok:
+        record(f"roofline/{r['arch']}/{r['shape']}",
+               r[r['dominant']] * 1e6,
+               f"dominant={r['dominant']};frac={r['roofline_frac']:.4f};"
+               f"useful={r['useful_ratio']:.3f};mem={r['mem_gib']:.1f}GiB"
+               if r["roofline_frac"] is not None else
+               f"dominant={r['dominant']}")
+    n_multi = sum(1 for r in recs
+                  if r.get("mesh") == "multi" and r.get("status") == "ok")
+    record("roofline/multi_pod_cells_ok", n_multi, "2x16x16 mesh compiles")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--full`` runs the bigger
+dataset ladders; default sizes finish on a single CPU core in ~10 minutes.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args = ap.parse_args()
+
+    from benchmarks import (execution_time, groupby_strategies, loc,
+                            out_of_core, plan_flexibility, roofline,
+                            scalability, throughput)
+    benches = {
+        "loc": lambda: loc.main(),
+        "roofline": lambda: roofline.main(),
+        "plan_flexibility": lambda: plan_flexibility.main(),
+        "groupby_strategies": lambda: groupby_strategies.main(),
+        "execution_time": lambda: execution_time.main(full=args.full),
+        "out_of_core": lambda: out_of_core.main(),
+        "scalability": lambda: scalability.main(),
+        "throughput": lambda: throughput.main(),
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr, flush=True)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

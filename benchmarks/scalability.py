@@ -1,0 +1,43 @@
+"""Paper Figure 12: scaling with worker count. This container has ONE core,
+so wall-clock parallel speedup is not measurable; we report the structural
+scaling quantities the paper discusses: per-superstep message volume and
+exchanged bytes vs partition count (the combiner's falling effectiveness as
+P grows — the cause of Fig 12a's gap to ideal), plus scale-up (graph grows
+with P) superstep times."""
+from __future__ import annotations
+
+from repro.core import load_graph, run_host
+from repro.graph import PageRank, rmat_graph
+
+from benchmarks.common import record, time_supersteps
+
+
+def main(scale: int = 1):
+    n = 12_000 * scale
+    edges = rmat_graph(n, 10 * n, seed=5)
+    out = {}
+    # speedup-shape: fixed graph, growing P -> message volume after
+    # sender-combine grows (combiner less effective), as in Fig 12a
+    for P in (1, 2, 4, 8):
+        prog = PageRank(n, iterations=6)
+        vert = load_graph(edges, n, P=P, value_dims=2)
+        res = run_host(vert, prog, prog.suggested_plan, max_supersteps=8)
+        msgs = max(s.get("messages", 0) for s in res.stats)
+        out[("fixed", P)] = msgs
+        record(f"scale/fixed_graph/P{P}", time_supersteps(res) * 1e6,
+               f"peak_combined_msgs={msgs}")
+    # scale-up: graph grows proportionally to P (Fig 12c)
+    for k, P in ((1, 1), (2, 2), (4, 4)):
+        nk = n * k
+        ek = rmat_graph(nk, 10 * nk, seed=6)
+        prog = PageRank(nk, iterations=6)
+        vert = load_graph(ek, nk, P=P, value_dims=2)
+        res = run_host(vert, prog, prog.suggested_plan, max_supersteps=8)
+        out[("scaleup", P)] = time_supersteps(res)
+        record(f"scale/scaleup/P{P}", time_supersteps(res) * 1e6,
+               f"vertices={nk}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Architecture registry: importing this package registers all configs."""
+from repro.configs.base import (AttnConfig, ModelConfig, MoEConfig, REGISTRY,
+                                SHAPES, ShapeCell, SSMConfig, get_config,
+                                runnable_cells)
+
+# one module per assigned architecture (+ the paper's own graph configs live
+# in repro.graph.generators)
+from repro.configs import (falcon_mamba_7b, gemma3_12b, h2o_danube_3_4b,
+                           hubert_xlarge, internvl2_76b,
+                           llama4_maverick_400b_a17b, qwen2_moe_a2_7b,
+                           stablelm_12b, yi_34b, zamba2_1_2b)  # noqa: F401
+
+ALL_ARCHS = tuple(sorted(REGISTRY.keys()))
+
+__all__ = [
+    "AttnConfig", "ModelConfig", "MoEConfig", "SSMConfig", "ShapeCell",
+    "SHAPES", "REGISTRY", "ALL_ARCHS", "get_config", "runnable_cells",
+]

@@ -1,0 +1,95 @@
+"""Connectors (paper Section 4): m-to-n partitioning / partitioning-merging
+data exchange, with fixed-capacity buckets + validity masks (the static-
+shape adaptation of tuple streams; overflow is counted and surfaces in GS
+so the driver can grow capacity — the moral equivalent of a spill).
+
+Two transports for the same bucketed exchange:
+* emulated   — partitions stacked on a leading axis, exchange = transpose
+               (single-host tests/benches);
+* shard_map  — ``jax.lax.all_to_all`` over the mesh axis (production; on
+               the multi-pod mesh the flattened ("pod","data","model") axis
+               makes XLA generate the hierarchical ICI/DCI exchange).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def bucket_by_owner(dst, payload, valid, P: int, bucket_cap: int, *,
+                    sort_by_dst: bool, partition: str = "hash",
+                    capacity: int = 0, presorted: bool = False):
+    """Per partition: route messages into P fixed-capacity buckets.
+
+    dst: (K,) global vid; payload: (K, D). sort_by_dst=True is the
+    'partitioning merging' connector (buckets arrive dst-sorted).
+    partition="range" with presorted=True (input already dst-sorted, e.g.
+    from the sender combine) skips the sort entirely — owners are
+    contiguous in dst order.
+    Returns (b_dst (P,C), b_payload (P,C,D), b_valid (P,C), overflow ())."""
+    K = dst.shape[0]
+    D = payload.shape[-1]
+    if partition == "range":
+        owner = jnp.where(valid, jnp.minimum(dst // capacity, P - 1), P)
+    else:
+        owner = jnp.where(valid, dst % P, P)
+    if partition == "range" and presorted:
+        # dst ascending among valid rows => owners contiguous: positions
+        # are computable WITHOUT any sort (rank among valid minus the
+        # owner's first rank, via an O(P) scatter-min)
+        vrank = jnp.cumsum(valid) - 1
+        big = jnp.iinfo(jnp.int32).max
+        owner_start = jnp.full((P + 1,), big, jnp.int32).at[owner].min(
+            jnp.where(valid, vrank, big).astype(jnp.int32))
+        so, sd, sp, sv = owner, dst, payload, valid
+        pos = (vrank - owner_start[owner.clip(0, P)]).astype(jnp.int32)
+    else:
+        if sort_by_dst or partition == "range":
+            # stable two-pass radix: by dst, then owner (no 64-bit keys);
+            # for range partitioning dst order already groups owners
+            o1 = jnp.argsort(jnp.where(valid, dst,
+                                       jnp.iinfo(jnp.int32).max),
+                             stable=True)
+            order = o1 if partition == "range" else \
+                o1[jnp.argsort(owner[o1], stable=True)]
+        else:
+            order = jnp.argsort(owner, stable=True)
+        so = owner[order]
+        sd = dst[order]
+        sp = payload[order]
+        sv = valid[order]
+        # position within owner bucket: arange - first index of this owner
+        first = jnp.searchsorted(so, jnp.arange(P + 1), side="left")
+        pos = jnp.arange(K) - first[so.clip(0, P)]
+    keep = sv & (pos < bucket_cap)
+    flat = jnp.where(keep, so * bucket_cap + pos, P * bucket_cap)
+    b_dst = jnp.full((P * bucket_cap + 1,), -1, jnp.int32)
+    b_dst = b_dst.at[flat].set(sd, mode="drop")
+    b_pay = jnp.zeros((P * bucket_cap + 1, D), payload.dtype)
+    b_pay = b_pay.at[flat].set(sp, mode="drop")
+    b_val = jnp.zeros((P * bucket_cap + 1,), bool)
+    b_val = b_val.at[flat].set(keep, mode="drop")
+    overflow = jnp.sum(sv & (pos >= bucket_cap))
+    return (b_dst[:-1].reshape(P, bucket_cap),
+            b_pay[:-1].reshape(P, bucket_cap, D),
+            b_val[:-1].reshape(P, bucket_cap),
+            overflow)
+
+
+def exchange_emulated(b_dst, b_pay, b_val):
+    """Stacked-global transport: (P_src, P_dst, C, ...) -> transpose.
+    Receiver p sees P_src runs of C messages."""
+    return (b_dst.transpose(1, 0, 2),
+            b_pay.transpose(1, 0, 2, 3),
+            b_val.transpose(1, 0, 2))
+
+
+def exchange_shard_map(b_dst, b_pay, b_val, axis_name):
+    """shard_map transport: per-shard buckets (P_local=1, n_parts, C, ...)
+    exchanged with all_to_all over `axis_name` (tuple axes = the flattened
+    multi-pod mesh; XLA emits the hierarchical ICI/DCI exchange)."""
+    a2a = lambda x: jax.lax.all_to_all(x, axis_name, split_axis=1,
+                                       concat_axis=1, tiled=True)
+    return a2a(b_dst), a2a(b_pay), a2a(b_val)

@@ -1,0 +1,197 @@
+"""Job drivers.
+
+* ``run_jit``  — whole computation as one ``lax.while_loop`` (fastest;
+                 fixed capacities; overflow aborts via GS flag).
+* ``run_host`` — Python superstep loop around the jitted superstep: this is
+                 the driver that can checkpoint at superstep boundaries
+                 (paper Section 5.5), collect per-superstep statistics
+                 (Section 5.7 statistics collector), and transparently GROW
+                 message capacity on overflow by re-running the superstep
+                 from the retained previous state (the static-shape
+                 analogue of an operator spilling to disk).
+* ``run_out_of_core`` — lives in core/ooc.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.plan import PhysicalPlan
+from repro.core.program import VertexProgram
+from repro.core.relations import (GlobalState, MsgRel, VertexRel,
+                                  empty_msgs, init_gs, out_degrees)
+from repro.core.superstep import EngineConfig, make_superstep
+
+
+@dataclass
+class RunResult:
+    vertex: VertexRel
+    gs: GlobalState
+    supersteps: int
+    stats: list = field(default_factory=list)
+    wall_s: float = 0.0
+
+
+def default_engine_config(vert: VertexRel, program: VertexProgram,
+                          plan: PhysicalPlan, *, slack: float = 1.5,
+                          axis_name=None) -> EngineConfig:
+    P, Np = vert.vid.shape
+    Ep = vert.edge_src.shape[1]
+    if plan.sender_combine:
+        # after sender-side combining, <= Np distinct receivers per bucket
+        cap = min(int((Ep / P + 8) * slack), Np + 8)
+    else:
+        cap = int((Ep / P + 8) * slack)
+    return EngineConfig(n_parts=P, bucket_cap=max(cap, 8),
+                        frontier_cap=int(Np * plan.frontier_capacity) + 8,
+                        axis_name=axis_name)
+
+
+def init_vertex_values(vert: VertexRel, program: VertexProgram,
+                       gs: GlobalState) -> VertexRel:
+    deg = out_degrees(vert)
+    value = program.init_value(vert.vid, deg, gs)
+    return dataclasses.replace(vert, value=jnp.where(
+        (vert.vid >= 0)[..., None], value, 0.0))
+
+
+def run_jit(vert: VertexRel, program: VertexProgram,
+            plan: PhysicalPlan = PhysicalPlan(), *,
+            max_supersteps: int = 50,
+            ec: Optional[EngineConfig] = None) -> RunResult:
+    t0 = time.time()
+    ec = ec or default_engine_config(vert, program, plan)
+    step = make_superstep(program, plan, ec)
+    gs = init_gs(program.agg_dims)
+    vert = init_vertex_values(vert, program, gs)
+    msg = empty_msgs(vert.num_partitions, ec.n_parts * ec.bucket_cap,
+                     program.msg_dims)
+
+    def cond(state):
+        v, m, g = state
+        return (~g.halt) & (g.superstep < max_supersteps) & \
+            (g.overflow == 0)
+
+    def body(state):
+        return step(*state)
+
+    v, m, g = jax.jit(
+        lambda s: jax.lax.while_loop(cond, body, s))((vert, msg, gs))
+    jax.block_until_ready(g.superstep)
+    if int(g.overflow) > 0:
+        raise RuntimeError(
+            f"message capacity overflow ({int(g.overflow)} dropped); "
+            "use run_host (auto-grows) or raise bucket_cap")
+    return RunResult(vertex=v, gs=g, supersteps=int(g.superstep),
+                     wall_s=time.time() - t0)
+
+
+def run_host(vert: VertexRel, program: VertexProgram,
+             plan: PhysicalPlan = PhysicalPlan(), *,
+             max_supersteps: int = 50,
+             ec: Optional[EngineConfig] = None,
+             checkpoint_every: int = 0,
+             checkpoint_dir: Optional[str] = None,
+             on_superstep: Optional[Callable] = None,
+             failure_injector: Optional[Callable] = None) -> RunResult:
+    """Host-loop driver with statistics, checkpointing, capacity growth and
+    (for tests) failure injection."""
+    from repro.runtime.checkpoint import save_checkpoint
+
+    t0 = time.time()
+    ec = ec or default_engine_config(vert, program, plan)
+    step = jax.jit(make_superstep(program, plan, ec))
+    gs = init_gs(program.agg_dims)
+    vert = init_vertex_values(vert, program, gs)
+    msg = empty_msgs(vert.num_partitions, ec.n_parts * ec.bucket_cap,
+                     program.msg_dims)
+    stats = []
+    i = 0
+    recompiled = True  # first step includes the jit compile
+    while i < max_supersteps:
+        ts = time.time()
+        this_recompiled = recompiled
+        recompiled = False
+        prev = (vert, msg, gs)
+        vert2, msg2, gs2 = step(vert, msg, gs)
+        jax.block_until_ready(gs2.superstep)
+        if int(gs2.overflow) > int(gs.overflow):
+            # grow capacities x2 and REDO this superstep from `prev`
+            ec = dataclasses.replace(ec, bucket_cap=ec.bucket_cap * 2,
+                                     mutation_cap=ec.mutation_cap * 2,
+                                     frontier_cap=ec.frontier_cap * 2)
+            step = jax.jit(make_superstep(program, plan, ec))
+            vert, msg, gs = prev
+            msg = _regrow_msgs(msg, ec)
+            stats.append({"superstep": i, "event": "regrow",
+                          "bucket_cap": ec.bucket_cap})
+            recompiled = True
+            continue
+        vert, msg, gs = vert2, msg2, gs2
+        i += 1
+        # adaptive frontier refit (left-outer plan): when the live set
+        # collapses, shrink the frontier capacity so each superstep only
+        # pays O(|frontier|) — one recompile, amortized across supersteps
+        if plan.join == "left_outer":
+            act = int(gs.active_count) // max(vert.num_partitions, 1) + 1
+            if act * 4 < ec.frontier_cap and ec.frontier_cap > 64:
+                ec = dataclasses.replace(
+                    ec, frontier_cap=max(64, act * 2))
+                step = jax.jit(make_superstep(program, plan, ec))
+                stats.append({"superstep": i, "event": "frontier-refit",
+                              "frontier_cap": ec.frontier_cap})
+                recompiled = True
+        stats.append({
+            "superstep": i,
+            "active": int(gs.active_count),
+            "messages": int(gs.msg_count),
+            "wall_s": time.time() - ts,
+            "recompiled": this_recompiled,  # wall includes a jit compile
+        })
+        if failure_injector is not None:
+            failure_injector(i, vert, msg, gs)
+        if checkpoint_every and i % checkpoint_every == 0 \
+                and checkpoint_dir:
+            save_checkpoint(checkpoint_dir, i, vert, msg, gs)
+        if on_superstep is not None:
+            on_superstep(i, vert, msg, gs, stats[-1])
+        if bool(gs.halt):
+            break
+    return RunResult(vertex=vert, gs=gs, supersteps=i, stats=stats,
+                     wall_s=time.time() - t0)
+
+
+def _regrow_msgs(msg: MsgRel, ec: EngineConfig) -> MsgRel:
+    """Pad capacity per source-run (preserves the (n_parts, C) run layout
+    that the merging connector's receiver group-by relies on). Restored
+    checkpoints whose capacity is not run-structured are end-padded (their
+    first superstep must use a sorting group-by, which the default plans
+    do)."""
+    P = msg.dst.shape[0]
+    n, C_new = ec.n_parts, ec.bucket_cap
+    if msg.capacity % n:
+        pad = n * C_new - msg.capacity
+        if pad <= 0:
+            return msg
+        return MsgRel(
+            dst=jnp.pad(msg.dst, ((0, 0), (0, pad)), constant_values=-1),
+            payload=jnp.pad(msg.payload, ((0, 0), (0, pad), (0, 0))),
+            valid=jnp.pad(msg.valid, ((0, 0), (0, pad))))
+    C_old = msg.capacity // n
+    pad = C_new - C_old
+    if pad <= 0:
+        return msg
+
+    def r(a, fill):
+        a = a.reshape((P, n, C_old) + a.shape[2:])
+        widths = [(0, 0), (0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 3)
+        a = jnp.pad(a, widths, constant_values=fill)
+        return a.reshape((P, n * C_new) + a.shape[3:])
+
+    return MsgRel(dst=r(msg.dst, -1), payload=r(msg.payload, 0),
+                  valid=r(msg.valid, False))

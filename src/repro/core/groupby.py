@@ -1,0 +1,136 @@
+"""Group-by operators (paper Section 5.3.1, Figure 7).
+
+All functions operate per partition and are vmapped over the leading P axis
+by the superstep. Two families:
+
+* scatter  — hash group-by analogue: monoid scatter straight into dense
+             vid-slot-aligned buffers (named ops only).
+* sort     — sort-based group-by: argsort by key + segmented fold via
+             ``lax.associative_scan`` (supports arbitrary associative
+             combine UDFs, like the paper's combine).
+* run-combine — one-pass combine of presorted runs (the receiver side of
+             the m-to-n partitioning MERGING connector: "preclustered").
+
+The monoid table mirrors Hyracks' aggregate library.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+MONOIDS = {
+    "sum": (lambda a, b: a + b, 0.0),
+    "min": (jnp.minimum, jnp.inf),
+    "max": (jnp.maximum, -jnp.inf),
+}
+
+
+def compact(mask: jax.Array, cap: int):
+    """O(N) stream compaction: indices of True entries, -1 padded.
+    Returns (idx (cap,), count, overflow)."""
+    n = mask.shape[0]
+    pos = jnp.cumsum(mask) - 1
+    count = jnp.sum(mask)
+    idx = jnp.full((cap,), -1, jnp.int32)
+    idx = idx.at[jnp.where(mask, pos, cap)].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")
+    return idx, jnp.minimum(count, cap), jnp.maximum(count - cap, 0)
+
+
+# ---------------------------------------------------------------------------
+# scatter (hash) group-by -> dense slots
+# ---------------------------------------------------------------------------
+
+
+def scatter_combine_dense(slot, payload, valid, Np: int, op: str):
+    """slot: (M,) int32; payload: (M,D); -> (dense (Np,D), has_msg (Np,))."""
+    fn, ident = MONOIDS[op]
+    D = payload.shape[-1]
+    tgt = jnp.where(valid, slot, Np)
+    dense = jnp.full((Np, D), ident, payload.dtype)
+    upd = jnp.where(valid[:, None], payload,
+                    jnp.full_like(payload, ident))
+    if op == "sum":
+        dense = dense.at[tgt].add(upd, mode="drop")
+    elif op == "min":
+        dense = dense.at[tgt].min(upd, mode="drop")
+    else:
+        dense = dense.at[tgt].max(upd, mode="drop")
+    has = jnp.zeros((Np,), bool).at[tgt].max(valid, mode="drop")
+    return dense, has
+
+
+# ---------------------------------------------------------------------------
+# sort-based group-by -> compact unique (slot, payload) runs
+# ---------------------------------------------------------------------------
+
+
+def _segmented_fold(flags, vals, combine):
+    """Inclusive segmented fold: flags mark segment starts."""
+    def op(a, b):
+        fa, va = a
+        fb, vb = b
+        return (fa | fb,
+                jnp.where(fb[..., None] if vb.ndim > fb.ndim else fb,
+                          vb, combine(va, vb)))
+    f, v = jax.lax.associative_scan(op, (flags, vals))
+    return v
+
+
+def sort_combine(slot, payload, valid, combine: Callable, identity):
+    """Sort by slot and fold each run. Returns (sorted_slot (M,),
+    folded (M,D), is_last (M,)) where is_last marks one entry per group."""
+    M = slot.shape[0]
+    key = jnp.where(valid, slot, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(key)
+    ks = key[order]
+    ps = payload[order]
+    vs = valid[order]
+    starts = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+    folded = _segmented_fold(starts, ps, combine)
+    is_last = jnp.concatenate([ks[1:] != ks[:-1], jnp.ones((1,), bool)])
+    return ks, folded, is_last & vs
+
+
+def sort_combine_dense(slot, payload, valid, Np: int, combine, identity):
+    """Sort group-by materialized to dense slots (full-outer join input)."""
+    ks, folded, is_last = sort_combine(slot, payload, valid, combine,
+                                       identity)
+    D = payload.shape[-1]
+    tgt = jnp.where(is_last & (ks < Np), ks, Np)
+    dense = jnp.broadcast_to(identity, (Np, D)).astype(payload.dtype)
+    dense = dense.at[tgt].set(folded, mode="drop")
+    has = jnp.zeros((Np,), bool).at[tgt].max(is_last, mode="drop")
+    return dense, has
+
+
+# ---------------------------------------------------------------------------
+# run-combine (receiver of the merging connector): input is R presorted
+# runs of length C; one segmented pass per run, then <=R partials per slot
+# are scatter-combined (strictly cheaper than a fresh full sort).
+# ---------------------------------------------------------------------------
+
+
+def run_combine_dense(slot_runs, payload_runs, valid_runs, Np: int,
+                      op: str):
+    """slot_runs: (R, C); payload_runs: (R, C, D)."""
+    fn, ident = MONOIDS[op]
+    R, C = slot_runs.shape
+
+    def per_run(slot, pay, val):
+        key = jnp.where(val, slot, jnp.iinfo(jnp.int32).max)
+        starts = jnp.concatenate([jnp.ones((1,), bool),
+                                  key[1:] != key[:-1]])
+        folded = _segmented_fold(starts, pay, lambda a, b: fn(a, b))
+        is_last = jnp.concatenate([key[1:] != key[:-1],
+                                   jnp.ones((1,), bool)]) & val
+        return key, folded, is_last
+
+    keys, folded, lasts = jax.vmap(per_run)(slot_runs, payload_runs,
+                                            valid_runs)
+    return scatter_combine_dense(keys.reshape(-1),
+                                 folded.reshape(R * C, -1),
+                                 lasts.reshape(-1), Np, op)

@@ -1,0 +1,146 @@
+"""Out-of-core execution (the paper's central claim, Sections 2.3/5.4/7.2).
+
+On Hyracks, operators spill to disk through the buffer cache, so the same
+plans run in-memory and out-of-core. The TPU-adapted memory hierarchy is
+HBM <-> host DRAM: the Vertex relation lives on the HOST; each superstep
+streams SUPER-PARTITIONS (groups of partitions sized to a device-memory
+budget) through the jitted partial superstep, collecting outgoing message
+buckets host-side (the "sender-side materializing pipelined" policy) and
+delivering them at the next superstep.
+
+storage="delta" (LSM analogue): only CHANGED vertex values are shipped
+back to the host each superstep instead of the full value array — the
+deferred-merge write path, right for sparse-update workloads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.driver import RunResult, default_engine_config
+from repro.core.plan import PhysicalPlan
+from repro.core.program import VertexProgram
+from repro.core.relations import GlobalState, MsgRel, VertexRel, init_gs
+from repro.core.superstep import EngineConfig, make_superstep
+
+
+def run_out_of_core(vert: VertexRel, program: VertexProgram,
+                    plan: PhysicalPlan = PhysicalPlan(), *,
+                    budget_partitions: int,
+                    max_supersteps: int = 50,
+                    ec: Optional[EngineConfig] = None) -> RunResult:
+    """budget_partitions = how many partitions fit in device memory at once
+    (the HBM budget). P % budget_partitions must be 0."""
+    t0 = time.time()
+    P, Np = vert.vid.shape
+    assert P % budget_partitions == 0
+    n_sp = P // budget_partitions
+    sp = budget_partitions
+    ec = ec or default_engine_config(vert, program, plan)
+    ec = dataclasses.replace(ec, ooc_collect=True)
+    step = jax.jit(make_superstep(program, plan, ec))
+
+    # host-resident state (the "disk")
+    host = {k: np.array(getattr(vert, k)) for k in
+            ("vid", "halt", "value", "edge_src", "edge_dst", "edge_val")}
+    gs = init_gs(program.agg_dims)
+    # init values on device per super-partition (streams once)
+    from repro.core.driver import init_vertex_values
+    for s in range(n_sp):
+        sl = slice(s * sp, (s + 1) * sp)
+        vpart = VertexRel(**{k: jnp.asarray(host[k][sl]) for k in host})
+        vpart = init_vertex_values(vpart, program, gs)
+        host["value"][sl] = np.asarray(vpart.value)
+
+    D = program.msg_dims
+    C = ec.bucket_cap
+    # per-destination-partition host message queues
+    inbox = [[] for _ in range(P)]
+    stats = []
+    i = 0
+    delta_bytes = full_bytes = 0
+    while i < max_supersteps:
+        ts = time.time()
+        M_in = max(max((sum(len(a[0]) for a in inbox[q])
+                        for q in range(P)), default=1), 1)
+        new_inbox = [[] for _ in range(P)]
+        halt_all = True
+        msg_count = 0
+        overflow = 0
+        active = 0
+        agg = np.zeros((program.agg_dims,), np.float32)
+        for s in range(n_sp):
+            sl = slice(s * sp, (s + 1) * sp)
+            vpart = VertexRel(**{k: jnp.asarray(host[k][sl]) for k in host})
+            # build padded incoming message block for these partitions
+            md = np.full((sp, M_in), -1, np.int32)
+            mp = np.zeros((sp, M_in, D), np.float32)
+            mv = np.zeros((sp, M_in), bool)
+            for j in range(sp):
+                q = s * sp + j
+                pos = 0
+                for d_arr, p_arr in inbox[q]:
+                    c = len(d_arr)
+                    md[j, pos:pos + c] = d_arr
+                    mp[j, pos:pos + c] = p_arr
+                    mv[j, pos:pos + c] = True
+                    pos += c
+            msg = MsgRel(dst=jnp.asarray(md), payload=jnp.asarray(mp),
+                         valid=jnp.asarray(mv))
+            old_value = host["value"][sl].copy()
+            v2, buckets, g2 = step(vpart, msg, gs)
+            jax.block_until_ready(g2.superstep)
+            # write back vertex state (delta vs full storage policy)
+            new_value = np.asarray(v2.value)
+            if plan.storage == "delta":
+                changed = np.any(new_value != old_value, axis=-1)
+                host["value"][sl][changed] = new_value[changed]
+                delta_bytes += int(changed.sum()) * new_value.shape[-1] * 4
+            else:
+                host["value"][sl] = new_value
+                full_bytes += new_value.size * 4
+            host["halt"][sl] = np.asarray(v2.halt)
+            host["vid"][sl] = np.asarray(v2.vid)
+            host["edge_dst"][sl] = np.asarray(v2.edge_dst)
+            host["edge_val"][sl] = np.asarray(v2.edge_val)
+            # collect outgoing buckets into destination inboxes
+            b_dst = np.asarray(buckets.dst)      # (sp, P, C)
+            b_pay = np.asarray(buckets.payload)  # (sp, P, C, D)
+            b_val = np.asarray(buckets.valid)
+            for j in range(sp):
+                for q in range(P):
+                    ok = b_val[j, q]
+                    if ok.any():
+                        new_inbox[q].append((b_dst[j, q][ok],
+                                             b_pay[j, q][ok]))
+            halt_all &= bool(np.all(np.asarray(v2.halt) |
+                                    (np.asarray(v2.vid) < 0)))
+            msg_count += int(np.asarray(buckets.valid).sum())
+            overflow += int(g2.overflow) - int(gs.overflow)
+            active += int(g2.active_count)
+            agg += np.asarray(g2.aggregate)
+        if overflow:
+            raise RuntimeError("OOC bucket overflow; raise bucket_cap")
+        inbox = new_inbox
+        i += 1
+        gs = GlobalState(halt=jnp.asarray(halt_all and msg_count == 0),
+                         aggregate=jnp.asarray(agg),
+                         superstep=jnp.asarray(i, jnp.int32),
+                         overflow=gs.overflow,
+                         active_count=jnp.asarray(active, jnp.int32),
+                         msg_count=jnp.asarray(msg_count, jnp.int32))
+        stats.append({"superstep": i, "active": active,
+                      "messages": msg_count,
+                      "wall_s": time.time() - ts,
+                      "delta_bytes": delta_bytes,
+                      "full_bytes": full_bytes})
+        if bool(gs.halt):
+            break
+    final = VertexRel(**{k: jnp.asarray(host[k]) for k in host})
+    return RunResult(vertex=final, gs=gs, supersteps=i, stats=stats,
+                     wall_s=time.time() - t0)

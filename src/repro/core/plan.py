@@ -1,0 +1,73 @@
+"""Physical plan choices (the paper's Section 5.3 "sixteen tailored
+executions": 2 joins x 4 group-bys x 2 storage).
+
+join:
+  full_outer   scan every vertex slot; messages scattered into dense
+               vid-aligned buffers (paper: index full outer join — right
+               for message-dense algorithms, e.g. PageRank)
+  left_outer   compact the frontier (vertices with messages or active) and
+               gather only those rows (paper: index left outer join + Vid
+               index — right for message-sparse algorithms, e.g. SSSP)
+
+groupby:
+  scatter      hash group-by: monoid scatter into dense slots (HashSort
+               analogue; named combine ops only)
+  sort         sort by dst + segmented combine of sorted runs (sort-based
+               group-by; supports arbitrary associative combine UDFs)
+
+connector:
+  partitioning          unsorted buckets + fully-pipelined all_to_all;
+                        receiver re-groups
+  partitioning_merging  sender sorts buckets by dst before the exchange
+                        (m-to-n partitioning merging connector; receiver
+                        group-by sees presorted runs)
+
+sender_combine: pre-aggregate messages per destination on the sender
+  (the paper's combiner applied in dataflow D3) — trades compute for
+  exchange bytes.
+
+storage:
+  inplace   dense in-place value updates (B-tree analogue)
+  delta     append (slot, value) deltas, merged every merge_every supersteps
+            (LSM B-tree analogue; right for mutation-heavy workloads)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class PhysicalPlan:
+    join: str = "full_outer"          # full_outer | left_outer
+    groupby: str = "scatter"          # scatter | sort
+    connector: str = "partitioning"   # partitioning | partitioning_merging
+    sender_combine: bool = True
+    storage: str = "inplace"          # inplace | delta
+    merge_every: int = 4              # delta storage merge cadence
+    # vid partitioning. "hash" is the paper's default (vid % P). "range"
+    # (vid // capacity) is a beyond-paper optimization enabled by dense
+    # integer vids: owners become CONTIGUOUS in dst order, so one dst-sort
+    # serves both the sender combine and the bucket layout — a whole
+    # O(E log E) sort pass per superstep disappears. Trade-off: no insert
+    # headroom (load uses capacity_factor 1.0) and skew-sensitivity, the
+    # classic hash-vs-range dataflow choice (paper Section 8).
+    partition: str = "hash"           # hash | range
+    # left_outer: initial frontier capacity / Np. Pregel semantics activate
+    # EVERY vertex at superstep 0, so the initial capacity covers all; the
+    # host driver then adaptively SHRINKS it (recompiling once) when the
+    # live set collapses — that is where the paper's left-outer win lives
+    # under static shapes.
+    frontier_capacity: float = 1.0
+
+    def validate(self, combine_op: str):
+        if self.groupby == "scatter" and combine_op == "custom":
+            raise ValueError(
+                "scatter (hash) group-by needs a named monoid combine op; "
+                "use groupby='sort' for custom combine UDFs")
+        return self
+
+
+DEFAULT_PLAN = PhysicalPlan()
+# the paper's Figure 9 hints for SSSP: left-outer join + unmerged connector
+SPARSE_PLAN = PhysicalPlan(join="left_outer", groupby="scatter",
+                           connector="partitioning")

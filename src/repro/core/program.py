@@ -1,0 +1,86 @@
+"""Vectorized Pregel programs (the paper's UDFs, Table 2).
+
+The paper's per-vertex Java ``compute`` becomes a batched JAX function over
+vid-aligned arrays; message generation along out-edges becomes an
+edge-parallel ``send``. Identical semantics for combiner-based Pregel
+programs (everything in the paper's evaluation + built-in library).
+
+UDFs:
+  compute   executed at each active vertex every superstep
+  send      produces the payload for each out-edge of a sending vertex
+  combine   associative message aggregation (named monoid or custom fn)
+  aggregate global aggregation contribution (summed via two-stage psum)
+  resolve   conflict resolution for graph mutations
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class ComputeOut:
+    """Output of the vectorized compute UDF (the paper's compute output
+    tuple, Section 3)."""
+    value: jax.Array                 # (P, Np, V) updated vertex values
+    halt: jax.Array                  # (P, Np) vote-to-halt
+    send_gate: jax.Array             # (P, Np) emit messages along out-edges?
+    aggregate: Optional[jax.Array] = None   # (P, Np, A) global contribution
+    # graph mutations (all optional):
+    insert_vid: Optional[jax.Array] = None    # (P, Np) vid to insert or -1
+    insert_value: Optional[jax.Array] = None  # (P, Np, V)
+    delete_self: Optional[jax.Array] = None   # (P, Np) bool
+    # own-edge rewrites (edges are owned by the src partition -> local):
+    new_edge_dst: Optional[jax.Array] = None  # (P, Ep) or -2 keep
+    new_edge_val: Optional[jax.Array] = None  # (P, Ep) or nan keep
+
+
+class VertexProgram:
+    """Subclass and override. All arrays carry the (P, partition-local)
+    leading axes."""
+
+    value_dims: int = 1
+    msg_dims: int = 1
+    agg_dims: int = 1
+    combine_op: str = "sum"   # "sum" | "min" | "max" | "custom"
+
+    # -- identity element of the combiner monoid
+    def combine_identity(self) -> jax.Array:
+        return {"sum": jnp.zeros((self.msg_dims,), jnp.float32),
+                "min": jnp.full((self.msg_dims,), jnp.inf, jnp.float32),
+                "max": jnp.full((self.msg_dims,), -jnp.inf, jnp.float32),
+                }.get(self.combine_op,
+                      jnp.zeros((self.msg_dims,), jnp.float32))
+
+    def combine(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        """Custom associative combine (used when combine_op == 'custom')."""
+        raise NotImplementedError
+
+    def init_value(self, vid: jax.Array, out_degree: jax.Array,
+                   gs) -> jax.Array:
+        """Initial vertex value. vid: (P,Np). -> (P,Np,V)."""
+        return jnp.zeros(vid.shape + (self.value_dims,), jnp.float32)
+
+    def compute(self, vid, value, msg, has_msg, active, gs) -> ComputeOut:
+        raise NotImplementedError
+
+    def send(self, src_vid, src_value, edge_val, dst_vid, gs) -> jax.Array:
+        """Edge-parallel message payloads. src_value: (P,Ep,V) gathered new
+        values of each edge's source. -> (P,Ep,D)."""
+        raise NotImplementedError
+
+    def aggregate_identity(self) -> jax.Array:
+        return jnp.zeros((self.agg_dims,), jnp.float32)
+
+    def resolve(self, vid, values, count) -> jax.Array:
+        """Resolve conflicting inserts of the same vid (values summed by
+        default). values: (..., V) pre-combined sum; count: multiplicity."""
+        return values
+
+    def is_converged(self, gs) -> jax.Array:
+        """Optional extra convergence predicate on the global state."""
+        return jnp.array(False)

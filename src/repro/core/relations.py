@@ -1,0 +1,158 @@
+"""The Pregel state as relations (paper Table 1), adapted to dense sharded
+arrays.
+
+Vertex(vid, halt, value, edges) / Msg(vid, payload) / GS(halt, aggregate,
+superstep) — stored struct-of-arrays with a leading partition axis P.
+Hash partitioning by vid (the paper's default): owner(vid) = vid % P,
+local slot = vid // P, so the dense slot array IS the vid index (the
+B-tree analogue: O(1) probe = array indexing).
+
+Edges are owned by their source partition as flat (edge_slot -> src slot,
+dst vid, value) arrays — the CSR adaptation for edge-parallel sends.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class VertexRel:
+    vid: jax.Array        # (P, Np) int32, -1 = empty slot
+    halt: jax.Array       # (P, Np) bool
+    value: jax.Array      # (P, Np, V) float32
+    edge_src: jax.Array   # (P, Ep) int32 local src slot, -1 = pad
+    edge_dst: jax.Array   # (P, Ep) int32 global dst vid
+    edge_val: jax.Array   # (P, Ep) float32
+
+    @property
+    def num_partitions(self) -> int:
+        return self.vid.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.vid.shape[1]
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class MsgRel:
+    dst: jax.Array        # (P, M) int32 global dst vid, -1 = invalid
+    payload: jax.Array    # (P, M, D) float32
+    valid: jax.Array      # (P, M) bool
+
+    @property
+    def capacity(self) -> int:
+        return self.dst.shape[1]
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class GlobalState:
+    halt: jax.Array         # () bool
+    aggregate: jax.Array    # (A,) float32 user aggregate
+    superstep: jax.Array    # () int32
+    overflow: jax.Array     # () int32 dropped messages (capacity overflow)
+    active_count: jax.Array  # () int32 (statistics collector)
+    msg_count: jax.Array     # () int32
+
+
+def empty_msgs(P: int, M: int, D: int) -> MsgRel:
+    return MsgRel(dst=jnp.full((P, M), -1, jnp.int32),
+                  payload=jnp.zeros((P, M, D), jnp.float32),
+                  valid=jnp.zeros((P, M), bool))
+
+
+def init_gs(agg_dims: int) -> GlobalState:
+    return GlobalState(halt=jnp.array(False),
+                       aggregate=jnp.zeros((agg_dims,), jnp.float32),
+                       superstep=jnp.array(0, jnp.int32),
+                       overflow=jnp.array(0, jnp.int32),
+                       active_count=jnp.array(0, jnp.int32),
+                       msg_count=jnp.array(0, jnp.int32))
+
+
+def load_graph(edges: np.ndarray, num_vertices: int, P: int, *,
+               value_dims: int, edge_values: np.ndarray | None = None,
+               capacity_factor: float = 1.3,
+               partition: str = "hash") -> VertexRel:
+    """Partition an edge list (E, 2) into a VertexRel (the paper's bulk
+    load: scan, partition by vid, sort, bulk-load per-partition indexes).
+
+    partition="hash" (paper default): vid lives at (vid % P, vid // P).
+    partition="range": vid lives at (vid // cap, vid % cap) — owners are
+    contiguous in vid order (see PhysicalPlan.partition); capacity_factor
+    is forced to 1.0 (no insert headroom).
+    """
+    edges = np.asarray(edges, dtype=np.int64)
+    if partition == "range":
+        capacity_factor = 1.0
+    Np = int(np.ceil(num_vertices / P) * capacity_factor) + 1
+
+    def owner_slot(v):
+        if partition == "range":
+            o = np.minimum(v // Np, P - 1)
+            return o, v - o * Np
+        return v % P, v // P
+
+    vid = np.full((P, Np), -1, np.int32)
+    halt = np.zeros((P, Np), bool)
+    value = np.zeros((P, Np, value_dims), np.float32)
+    all_v = np.arange(num_vertices, dtype=np.int64)
+    po, ps = owner_slot(all_v)
+    vid[po, ps] = all_v.astype(np.int32)
+
+    src, dst = edges[:, 0], edges[:, 1]
+    ev = (np.asarray(edge_values, np.float32) if edge_values is not None
+          else np.ones(len(src), np.float32))
+    owner, slot = owner_slot(src)
+    order = np.argsort(owner * (num_vertices + 1) + src, kind="stable")
+    src, dst, ev = src[order], dst[order], ev[order]
+    owner, slot = owner[order], slot[order]
+    counts = np.bincount(owner, minlength=P)
+    Ep = int(max(counts.max(), 1))
+    e_src = np.full((P, Ep), -1, np.int32)
+    e_dst = np.full((P, Ep), -1, np.int32)
+    e_val = np.zeros((P, Ep), np.float32)
+    start = 0
+    for p in range(P):
+        c = counts[p]
+        e_src[p, :c] = slot[start:start + c].astype(np.int32)
+        e_dst[p, :c] = dst[start:start + c].astype(np.int32)
+        e_val[p, :c] = ev[start:start + c]
+        start += c
+    return VertexRel(vid=jnp.asarray(vid), halt=jnp.asarray(halt),
+                     value=jnp.asarray(value),
+                     edge_src=jnp.asarray(e_src),
+                     edge_dst=jnp.asarray(e_dst),
+                     edge_val=jnp.asarray(e_val))
+
+
+def out_degrees(vert: VertexRel) -> jax.Array:
+    """(P, Np) out-degree per vertex slot."""
+    P, Np = vert.vid.shape
+    valid = vert.edge_src >= 0
+
+    def per_part(src, val):
+        return jnp.zeros((Np,), jnp.float32).at[
+            jnp.where(val, src, Np)].add(val.astype(jnp.float32),
+                                         mode="drop")
+
+    return jax.vmap(per_part)(vert.edge_src, valid)
+
+
+def gather_values(vert: VertexRel, num_vertices: int) -> np.ndarray:
+    """Dump the Vertex relation back out (HDFS write analogue):
+    -> (num_vertices, V) in vid order."""
+    P, Np, V = vert.value.shape
+    vid = np.asarray(vert.vid).reshape(-1)
+    val = np.asarray(vert.value).reshape(-1, V)
+    out = np.zeros((num_vertices, V), np.float32)
+    ok = vid >= 0
+    out[vid[ok]] = val[ok]
+    return out

@@ -1,0 +1,8 @@
+from repro.graph.algorithms import (BFS, SSSP, ConnectedComponents,
+                                    PageRank, PathMerge, Reachability)
+from repro.graph.generators import (DATASETS, chain_graph, rmat_graph,
+                                    random_walk_sample, uniform_graph)
+
+__all__ = ["BFS", "SSSP", "ConnectedComponents", "PageRank", "PathMerge",
+           "Reachability", "DATASETS", "chain_graph", "rmat_graph",
+           "random_walk_sample", "uniform_graph"]

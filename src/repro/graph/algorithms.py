@@ -1,0 +1,256 @@
+"""The Pregelix built-in algorithm library (paper Section 6): PageRank,
+SSSP, connected components, BFS, reachability — as vectorized
+VertexPrograms. Each ``main``-style hint block mirrors the paper's Figure 9
+(join / group-by / connector choices per algorithm).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.plan import PhysicalPlan
+from repro.core.program import ComputeOut, VertexProgram
+
+INF = jnp.float32(3.4e38)
+
+
+class PageRank(VertexProgram):
+    """value = [rank, out_degree]. Messages = rank contributions (sum).
+    Paper hint: full-outer join (message-dense), sort/scatter group-by."""
+
+    value_dims = 2
+    msg_dims = 1
+    agg_dims = 1
+    combine_op = "sum"
+    suggested_plan = PhysicalPlan(join="full_outer", groupby="scatter",
+                                  sender_combine=True)
+
+    def __init__(self, num_vertices: int, damping: float = 0.85,
+                 iterations: int = 15):
+        self.n = num_vertices
+        self.d = damping
+        self.iters = iterations
+
+    def init_value(self, vid, out_degree, gs):
+        rank = jnp.full(vid.shape, 1.0 / self.n, jnp.float32)
+        return jnp.stack([rank, out_degree], axis=-1)
+
+    def compute(self, vid, value, msg, has_msg, active, gs):
+        incoming = msg[..., 0]
+        rank = jnp.where(gs.superstep == 0, value[..., 0],
+                         (1.0 - self.d) / self.n + self.d * incoming)
+        new_val = jnp.stack([rank, value[..., 1]], axis=-1)
+        last = gs.superstep >= self.iters - 1
+        return ComputeOut(value=new_val,
+                          halt=jnp.broadcast_to(last, vid.shape),
+                          send_gate=jnp.broadcast_to(~last, vid.shape),
+                          aggregate=rank[..., None])
+
+    def send(self, src_vid, src_value, edge_val, dst_vid, gs):
+        deg = jnp.maximum(src_value[..., 1], 1.0)
+        return (src_value[..., 0] / deg)[..., None]
+
+
+class SSSP(VertexProgram):
+    """Single source shortest paths (paper Figure 9). value = [dist].
+    Messages = candidate distances (min). Paper hint: LEFT-OUTER join +
+    HashSort group-by + unmerged connector — message-sparse."""
+
+    value_dims = 1
+    msg_dims = 1
+    agg_dims = 1
+    combine_op = "min"
+    suggested_plan = PhysicalPlan(join="left_outer", groupby="scatter",
+                                  connector="partitioning",
+                                  sender_combine=True)
+
+    def __init__(self, source: int):
+        self.source = source
+
+    def init_value(self, vid, out_degree, gs):
+        dist = jnp.where(vid == self.source, 0.0, INF)
+        return dist[..., None]
+
+    def compute(self, vid, value, msg, has_msg, active, gs):
+        cur = value[..., 0]
+        incoming = jnp.where(has_msg, msg[..., 0], INF)
+        first = gs.superstep == 0
+        new = jnp.minimum(cur, incoming)
+        improved = new < cur
+        seed = first & (vid == self.source)
+        send = improved | seed
+        return ComputeOut(value=new[..., None],
+                          halt=jnp.ones_like(send),  # vote halt; msgs re-activate
+                          send_gate=send,
+                          aggregate=jnp.where(new < INF, 1.0, 0.0)[..., None])
+
+    def send(self, src_vid, src_value, edge_val, dst_vid, gs):
+        return (src_value[..., 0] + edge_val)[..., None]
+
+
+class ConnectedComponents(VertexProgram):
+    """Label propagation: min component id (paper's CC). Dense early,
+    sparse late — either join plan is reasonable (Figure 14c)."""
+
+    value_dims = 1
+    msg_dims = 1
+    agg_dims = 1
+    combine_op = "min"
+    suggested_plan = PhysicalPlan(join="full_outer", groupby="scatter",
+                                  sender_combine=True)
+
+    def init_value(self, vid, out_degree, gs):
+        return jnp.where(vid >= 0, vid, 0).astype(jnp.float32)[..., None]
+
+    def compute(self, vid, value, msg, has_msg, active, gs):
+        cur = value[..., 0]
+        incoming = jnp.where(has_msg, msg[..., 0], INF)
+        new = jnp.minimum(cur, incoming)
+        improved = new < cur
+        first = gs.superstep == 0
+        send = improved | first
+        return ComputeOut(value=new[..., None],
+                          halt=jnp.ones_like(send),
+                          send_gate=send,
+                          aggregate=jnp.zeros(vid.shape + (1,)))
+
+    def send(self, src_vid, src_value, edge_val, dst_vid, gs):
+        return src_value[..., 0:1]
+
+
+class BFS(VertexProgram):
+    """Breadth-first levels from a source. value = [level] (-1 unreached
+    encoded as INF)."""
+
+    value_dims = 1
+    msg_dims = 1
+    agg_dims = 1
+    combine_op = "min"
+    suggested_plan = PhysicalPlan(join="left_outer", groupby="scatter",
+                                  sender_combine=True)
+
+    def __init__(self, source: int):
+        self.source = source
+
+    def init_value(self, vid, out_degree, gs):
+        return jnp.where(vid == self.source, 0.0, INF)[..., None]
+
+    def compute(self, vid, value, msg, has_msg, active, gs):
+        cur = value[..., 0]
+        incoming = jnp.where(has_msg, msg[..., 0], INF)
+        new = jnp.minimum(cur, incoming)
+        improved = new < cur
+        send = improved | ((gs.superstep == 0) & (vid == self.source))
+        return ComputeOut(value=new[..., None],
+                          halt=jnp.ones_like(send),
+                          send_gate=send,
+                          aggregate=jnp.where(new < INF, 1.0, 0.0)[..., None])
+
+    def send(self, src_vid, src_value, edge_val, dst_vid, gs):
+        return (src_value[..., 0] + 1.0)[..., None]
+
+
+class Reachability(VertexProgram):
+    """Boolean reachability from a source set (paper's built-in library)."""
+
+    value_dims = 1
+    msg_dims = 1
+    agg_dims = 1
+    combine_op = "max"
+    suggested_plan = PhysicalPlan(join="left_outer", groupby="scatter",
+                                  sender_combine=True)
+
+    def __init__(self, source: int):
+        self.source = source
+
+    def init_value(self, vid, out_degree, gs):
+        return (vid == self.source).astype(jnp.float32)[..., None]
+
+    def compute(self, vid, value, msg, has_msg, active, gs):
+        reached = value[..., 0] > 0
+        incoming = has_msg & (msg[..., 0] > 0)
+        new = reached | incoming
+        newly = new & ~reached
+        send = newly | ((gs.superstep == 0) & (vid == self.source))
+        return ComputeOut(value=new.astype(jnp.float32)[..., None],
+                          halt=jnp.ones_like(send),
+                          send_gate=send,
+                          aggregate=new.astype(jnp.float32)[..., None])
+
+    def send(self, src_vid, src_value, edge_val, dst_vid, gs):
+        return jnp.ones_like(src_value[..., 0:1])
+
+
+class KCore(VertexProgram):
+    """k-core decomposition (peeling): a vertex dies when its count of
+    LIVE neighbors drops below k; death notifications are summed by the
+    combiner. value = [live_degree, alive]. Exercises a different message
+    pattern than the min/sum library algorithms: monotone decrement with
+    self-triggered cascades."""
+
+    value_dims = 2
+    msg_dims = 1
+    agg_dims = 1
+    combine_op = "sum"
+    suggested_plan = PhysicalPlan(join="full_outer", groupby="scatter",
+                                  sender_combine=True)
+
+    def __init__(self, k: int):
+        self.k = k
+
+    def init_value(self, vid, out_degree, gs):
+        return jnp.stack([out_degree,
+                          jnp.ones(vid.shape, jnp.float32)], axis=-1)
+
+    def compute(self, vid, value, msg, has_msg, active, gs):
+        deg = value[..., 0] - jnp.where(has_msg, msg[..., 0], 0.0)
+        alive = value[..., 1] > 0
+        dies = alive & (deg < self.k)
+        new_alive = alive & ~dies
+        return ComputeOut(
+            value=jnp.stack([deg, new_alive.astype(jnp.float32)], axis=-1),
+            halt=jnp.ones_like(dies),        # messages re-activate
+            send_gate=dies,                  # notify neighbors of death
+            aggregate=new_alive.astype(jnp.float32)[..., None])
+
+    def send(self, src_vid, src_value, edge_val, dst_vid, gs):
+        return jnp.ones_like(src_value[..., 0:1])
+
+
+class PathMerge(VertexProgram):
+    """Genomix-style chain compaction (paper Section 6, genome assembly):
+    vertices on a simple path (out-degree 1) merge into their successor by
+    deleting themselves and forwarding their accumulated length. Exercises
+    graph MUTATIONS (delete + resolve) and suits the LSM/delta storage.
+    value = [acc_len, out_degree]."""
+
+    value_dims = 2
+    msg_dims = 1
+    agg_dims = 1
+    combine_op = "sum"
+    mutates = True
+    suggested_plan = PhysicalPlan(join="full_outer", groupby="sort",
+                                  storage="delta")
+
+    def __init__(self, rounds: int = 8):
+        self.rounds = rounds
+
+    def init_value(self, vid, out_degree, gs):
+        return jnp.stack([jnp.ones(vid.shape, jnp.float32), out_degree],
+                         axis=-1)
+
+    def compute(self, vid, value, msg, has_msg, active, gs):
+        acc = value[..., 0] + jnp.where(has_msg, msg[..., 0], 0.0)
+        deg = value[..., 1]
+        # odd/even pairing avoids merging both ends of an edge at once
+        mergeable = (deg == 1) & (vid % 2 == gs.superstep % 2) & (vid >= 0)
+        done = gs.superstep >= self.rounds
+        return ComputeOut(
+            value=jnp.stack([acc, deg], axis=-1),
+            halt=jnp.broadcast_to(done, vid.shape),
+            send_gate=mergeable & ~done,
+            aggregate=acc[..., None],
+            delete_self=mergeable & ~done)
+
+    def send(self, src_vid, src_value, edge_val, dst_vid, gs):
+        return src_value[..., 0:1]

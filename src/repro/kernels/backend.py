@@ -1,0 +1,18 @@
+"""Kernel backend selection: Pallas compiled on TPU, interpret-mode
+elsewhere, or the jnp reference."""
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve(impl: str) -> str:
+    """impl in {auto, ref, pallas, pallas_tpu}."""
+    if impl == "auto":
+        return "pallas_tpu" if on_tpu() else "ref"
+    if impl == "pallas" and on_tpu():
+        return "pallas_tpu"
+    return impl

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: row-blocked edge gather (CSR message generation).
+
+Edges are src-sorted; the host (ops.py) pads each BR-row block's edge range
+to a BM multiple so every edge tile touches exactly one row block. The
+tile -> row-block map arrives via scalar prefetch and selects the vertex
+value block in the BlockSpec index_map. Inside the kernel the gather is a
+ONE-HOT MATMUL — (BM x BR) @ (BR x V) on the MXU — the TPU-native answer
+to random access (no scalar gathers in the inner loop).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(tile_row_ref, src_ref, val_ref, values_ref, out_ref, *,
+            block_r: int):
+    t = pl.program_id(0)
+    r0 = tile_row_ref[t] * block_r
+    src = src_ref[:]                       # (BM, 1) int32, -1 pads
+    ev = val_ref[:].astype(jnp.float32)    # (BM, 1)
+    vals = values_ref[0].astype(jnp.float32)  # (BR, V)
+    local = src[:, 0] - r0                 # (BM,)
+    ok = (src[:, 0] >= 0)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32,
+                                       (src.shape[0], block_r), 1)
+              == local[:, None]) & ok[:, None]
+    g = jax.lax.dot_general(onehot.astype(jnp.float32), vals,
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    out_ref[:] = g * ev
+
+
+def edge_gather_pallas(values: jax.Array, edge_src: jax.Array,
+                       edge_val: jax.Array, tile_row: jax.Array, *,
+                       block_m: int = 512, block_r: int = 256,
+                       interpret: bool = True):
+    """values: (N, V) (N a multiple of block_r); edge_src: (Ep,) src-sorted,
+    padded so tile i only touches rows of block tile_row[i]. -> (Ep, V)."""
+    Ep = edge_src.shape[0]
+    N, V = values.shape
+    BM = min(block_m, Ep)
+    n_tiles = pl.cdiv(Ep, BM)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((BM, 1), lambda i, tr: (i, 0)),
+                  pl.BlockSpec((BM, 1), lambda i, tr: (i, 0)),
+                  pl.BlockSpec((1, block_r, V), lambda i, tr: (tr[i], 0, 0))],
+        out_specs=pl.BlockSpec((BM, V), lambda i, tr: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, block_r=block_r),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Ep, V), jnp.float32),
+        interpret=interpret,
+    )(tile_row, edge_src[:, None], edge_val[:, None],
+      values.reshape(N // block_r, block_r, V))

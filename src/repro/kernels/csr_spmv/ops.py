@@ -1,0 +1,66 @@
+"""Jit-compatible wrapper: lays out src-sorted edges into row-block-aligned
+tiles (host-side, cached per graph) and runs the Pallas gather."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import backend
+from repro.kernels.csr_spmv.csr_spmv import edge_gather_pallas
+from repro.kernels.csr_spmv.ref import edge_gather_ref
+
+
+def plan_layout(edge_src: np.ndarray, n_rows: int, *, block_m: int = 512,
+                block_r: int = 256):
+    """Host-side layout plan (one-off per graph): pad each row-block's edge
+    range to a BM multiple. Returns (perm (Ep,), tile_row (n_tiles,),
+    inverse scatter (E,))."""
+    edge_src = np.asarray(edge_src)
+    E = len(edge_src)
+    order = np.argsort(np.where(edge_src >= 0, edge_src, n_rows),
+                       kind="stable")
+    src_sorted = edge_src[order]
+    n_blocks = (n_rows + block_r - 1) // block_r
+    blk_ids = np.where(src_sorted >= 0, src_sorted // block_r, n_blocks)
+    counts = np.bincount(blk_ids, minlength=n_blocks + 1)[:n_blocks]
+    padded = ((counts + block_m - 1) // block_m) * block_m
+    padded = np.maximum(padded, 0)
+    p_starts = np.concatenate([[0], np.cumsum(padded)[:-1]])
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    Ep = int(np.sum(padded)) or block_m
+    perm = np.full(Ep, -1, np.int64)          # padded slot -> orig edge
+    valid_e = src_sorted >= 0
+    blk = np.minimum(blk_ids, n_blocks - 1)
+    pos = np.arange(E) - starts[blk] + p_starts[blk]
+    perm[pos[valid_e]] = order[valid_e]
+    tile_row = np.repeat(np.arange(n_blocks), padded // block_m) \
+        .astype(np.int32)
+    if len(tile_row) == 0:
+        tile_row = np.zeros(Ep // block_m, np.int32)
+    return perm, tile_row
+
+
+def edge_gather(values, edge_src, edge_val, *, layout=None,
+                impl: str = "auto", block_m: int = 512,
+                block_r: int = 256):
+    """values: (N, V); edge_src: (E,); edge_val: (E,) -> (E, V)."""
+    impl_r = backend.resolve(impl)
+    if impl_r == "ref" or layout is None:
+        return edge_gather_ref(values, edge_src, edge_val)
+    perm, tile_row = layout
+    N, V = values.shape
+    n_pad = (-N) % block_r
+    vals = jnp.pad(values, ((0, n_pad), (0, 0)))
+    es = jnp.where(perm >= 0, edge_src[perm.clip(0)], -1).astype(jnp.int32)
+    ev = jnp.where(perm >= 0, edge_val[perm.clip(0)], 0.0)
+    out_p = edge_gather_pallas(vals, es, ev, jnp.asarray(tile_row),
+                               block_m=block_m, block_r=block_r,
+                               interpret=(impl_r != "pallas_tpu"))
+    # scatter back to original edge order
+    out = jnp.zeros((edge_src.shape[0], V), jnp.float32)
+    ok = perm >= 0
+    return out.at[jnp.where(ok, perm, 0)].add(
+        jnp.where(ok[:, None], out_p, 0.0))

@@ -1,0 +1,20 @@
+"""jnp oracle: edge-parallel message generation (gather + scale).
+
+payload[e] = values[edge_src[e]] * edge_val[e]  (masked for pad edges)
+
+This is the Pregelix send hot loop — for PageRank it is exactly the SpMV
+contribution push.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def edge_gather_ref(values: jax.Array, edge_src: jax.Array,
+                    edge_val: jax.Array) -> jax.Array:
+    """values: (N, V); edge_src: (E,) int32 (-1 pad); edge_val: (E,).
+    -> (E, V)."""
+    ok = edge_src >= 0
+    g = values[edge_src.clip(0)]
+    return jnp.where(ok[:, None], g * edge_val[:, None], 0.0)

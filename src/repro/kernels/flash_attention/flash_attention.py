@@ -1,0 +1,101 @@
+"""Pallas TPU flash attention (forward).
+
+Grid (BH, nQ, nK) with the K axis innermost (sequential on TPU): online-
+softmax state (m, l, acc) lives in VMEM scratch and is carried across K
+tiles; the output tile is finalized when the last K tile has been folded.
+Causal tiles above the diagonal are skipped with @pl.when (no FLOPs — this
+is the kernel-level answer to the XLA path's masked-out waste).
+
+BlockSpecs: q (1, BQ, hd), k/v (1, BK, hd), out (1, BQ, hd) — hd stays
+whole (128/256-lane aligned for the MXU); BQ/BK default 512 keeps
+q/k/v/acc tiles ~(512x128)x4B within VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            causal: bool, n_k: int, block_q: int, block_k: int,
+            sk_offset: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[:] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[:] = jnp.zeros_like(l_scr)
+        acc_scr[:] = jnp.zeros_like(acc_scr)
+
+    run = True
+    if causal:
+        # tile fully above the diagonal -> skip entirely
+        run = (ki * block_k) <= (qi * block_q + block_q - 1 + sk_offset)
+
+    @pl.when(run)
+    def _attend():
+        q = q_ref[0].astype(jnp.float32)            # (BQ, hd)
+        k = k_ref[0].astype(jnp.float32)            # (BK, hd)
+        v = v_ref[0].astype(jnp.float32)
+        scale = q.shape[-1] ** -0.5
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (BQ, BK)
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0) + sk_offset
+            kpos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[:]                            # (BQ, 1)
+        l_prev = l_scr[:]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[:] = acc_scr[:] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[:] = m_new
+        l_scr[:] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _fini():
+        o_ref[0] = (acc_scr[:] /
+                    jnp.maximum(l_scr[:], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           block_q: int = 512, block_k: int = 512,
+                           interpret: bool = True):
+    """q: (B, Sq, hd); k/v: (B, Sk, hd) — B is batch*heads flattened.
+    Sq <= Sk supported (decode-suffix layout: query positions are the LAST
+    Sq positions of the key range)."""
+    B, Sq, hd = q.shape
+    Sk = k.shape[1]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    n_q = pl.cdiv(Sq, bq)
+    n_k = pl.cdiv(Sk, bk)
+    kern = functools.partial(_kernel, causal=causal, n_k=n_k, block_q=bq,
+                             block_k=bk, sk_offset=Sk - Sq)
+    return pl.pallas_call(
+        kern,
+        grid=(B, n_q, n_k),
+        in_specs=[pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+                  pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+                  pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0))],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

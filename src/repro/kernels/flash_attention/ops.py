@@ -1,0 +1,32 @@
+"""Jit'd wrapper over (B, S, H, hd) tensors with GQA head grouping."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import backend
+from repro.kernels.flash_attention.flash_attention import \
+    flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "impl"))
+def flash_attention(q, k, v, *, causal: bool = True, impl: str = "auto"):
+    """q: (B, S, H, hd); k/v: (B, S, KV, hd) -> (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1) \
+        .reshape(B * H, S, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1) \
+        .reshape(B * H, S, hd)
+    impl_r = backend.resolve(impl)
+    if impl_r == "ref":
+        of = attention_ref(qf, kf, vf, causal=causal)
+    else:
+        of = flash_attention_pallas(qf, kf, vf, causal=causal,
+                                    interpret=(impl_r != "pallas_tpu"))
+    return of.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,19 @@
+"""jnp oracle: plain (masked) softmax attention for one (batch*head)
+slice batch. q: (B, Sq, hd), k/v: (B, Sk, hd)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(Sq)[:, None] + (Sk - Sq) >= jnp.arange(Sk)[None]
+        s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", w, v.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: expert-grouped matmul (MegaBlocks-style).
+
+The MoE dispatch is the paper's sort-based group-by: tokens arrive sorted
+by expert id. ops.py pads each expert's group to a BM multiple so every
+token tile belongs to EXACTLY ONE expert; the tile->expert map is passed
+via scalar prefetch (PrefetchScalarGridSpec) and selects the weight block
+in the BlockSpec index_map — no gather in the kernel, the MXU sees plain
+(BM x d) @ (d x BF) tiles.
+
+Grid: (n_token_tiles, n_f_tiles); f innermost. d is kept whole per tile
+(d <= 8192 -> (512 x 8192) bf16 q-tile = 8 MiB VMEM; for larger d drop BM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(tile_eid_ref, x_ref, w_ref, o_ref):
+    x = x_ref[:].astype(jnp.float32)       # (BM, d)
+    w = w_ref[0].astype(jnp.float32)       # (d, BF)
+    o_ref[:] = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def grouped_matmul_pallas(tokens: jax.Array, w: jax.Array,
+                          tile_eid: jax.Array, *, block_m: int = 512,
+                          block_f: int = 512, interpret: bool = True):
+    """tokens: (Tp, d) expert-sorted AND group-padded so tile i belongs
+    entirely to expert tile_eid[i]; w: (E, d, f). -> (Tp, f)."""
+    Tp, d = tokens.shape
+    E, _, f = w.shape
+    BM = min(block_m, Tp)
+    BF = min(block_f, f)
+    n_m = pl.cdiv(Tp, BM)
+    n_f = pl.cdiv(f, BF)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_m, n_f),
+        in_specs=[pl.BlockSpec((BM, d), lambda i, j, eid: (i, 0)),
+                  pl.BlockSpec((1, d, BF),
+                               lambda i, j, eid: (eid[i], 0, j))],
+        out_specs=pl.BlockSpec((BM, BF), lambda i, j, eid: (i, j)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Tp, f), tokens.dtype),
+        interpret=interpret,
+    )(tile_eid, tokens, w)

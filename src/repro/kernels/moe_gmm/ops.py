@@ -1,0 +1,49 @@
+"""Jit'd wrapper: group-pads expert-sorted tokens to tile multiples and
+dispatches to the Pallas grouped matmul (or the jnp oracle)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import backend
+from repro.kernels.moe_gmm.moe_gmm import grouped_matmul_pallas
+from repro.kernels.moe_gmm.ref import grouped_matmul_ref
+
+
+def _group_pad(tokens, group_sizes, block_m: int):
+    """Scatter expert-sorted tokens into per-expert BM-aligned slabs.
+    Returns (padded (Tp,d), tile_eid (Tp/BM,), gather_idx (T,))."""
+    T, d = tokens.shape
+    E = group_sizes.shape[0]
+    padded_sizes = ((group_sizes + block_m - 1) // block_m) * block_m
+    p_starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                jnp.cumsum(padded_sizes)[:-1]])
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(group_sizes)[:-1]])
+    Tp = T + E * (block_m - 1) + block_m  # static upper bound
+    Tp = ((Tp + block_m - 1) // block_m) * block_m
+    eid = jnp.searchsorted(jnp.cumsum(group_sizes),
+                           jnp.arange(T), side="right").clip(0, E - 1)
+    pos = jnp.arange(T) - starts[eid] + p_starts[eid]
+    padded = jnp.zeros((Tp, d), tokens.dtype).at[pos].set(tokens)
+    n_tiles = Tp // block_m
+    tile_starts = jnp.arange(n_tiles) * block_m
+    tile_eid = jnp.searchsorted(jnp.cumsum(padded_sizes), tile_starts,
+                                side="right").clip(0, E - 1)
+    return padded, tile_eid.astype(jnp.int32), pos
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_m"))
+def grouped_matmul(tokens, w, group_sizes, *, impl: str = "auto",
+                   block_m: int = 512):
+    """tokens: (T, d) expert-sorted; w: (E, d, f); group_sizes: (E,)."""
+    impl_r = backend.resolve(impl)
+    if impl_r == "ref":
+        return grouped_matmul_ref(tokens, w, group_sizes)
+    block_m = min(block_m, max(tokens.shape[0], 8))
+    padded, tile_eid, pos = _group_pad(tokens, group_sizes, block_m)
+    out_p = grouped_matmul_pallas(padded, w, tile_eid, block_m=block_m,
+                                  interpret=(impl_r != "pallas_tpu"))
+    return out_p[pos]

@@ -1,0 +1,24 @@
+"""jnp oracle: grouped matmul over expert-sorted tokens.
+
+tokens: (T, d) sorted by expert id; w: (E, d, f); group_sizes: (E,).
+out[t] = tokens[t] @ w[expert_of(t)].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def expert_of_tokens(group_sizes: jax.Array, T: int) -> jax.Array:
+    ends = jnp.cumsum(group_sizes)
+    return jnp.searchsorted(ends, jnp.arange(T), side="right")
+
+
+def grouped_matmul_ref(tokens: jax.Array, w: jax.Array,
+                       group_sizes: jax.Array) -> jax.Array:
+    T, d = tokens.shape
+    E = w.shape[0]
+    eid = expert_of_tokens(group_sizes, T).clip(0, E - 1)
+    wt = w[eid]                                    # (T, d, f)
+    return jnp.einsum("td,tdf->tf", tokens.astype(jnp.float32),
+                      wt.astype(jnp.float32)).astype(tokens.dtype)

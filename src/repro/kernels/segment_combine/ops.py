@@ -1,0 +1,23 @@
+"""Jit'd wrapper: sorts-to-tail invalid rows and dispatches to the Pallas
+kernel on TPU (interpret-mode on CPU) or the jnp oracle."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import backend
+from repro.kernels.segment_combine.ref import segment_combine_ref
+from repro.kernels.segment_combine.segment_combine import \
+    segment_combine_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("op", "impl"))
+def segment_combine(seg_ids, payload, valid, op: str = "sum",
+                    impl: str = "auto"):
+    impl = backend.resolve(impl)
+    if impl == "ref":
+        return segment_combine_ref(seg_ids, payload, valid, op)
+    return segment_combine_pallas(seg_ids, payload, valid, op,
+                                  interpret=(impl != "pallas_tpu"))

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the segmented combine (sorted-run group-by fold).
+
+Given payloads sorted by segment id, computes the inclusive segmented fold
+and marks the last row of each segment (the group's aggregate). This is the
+receiver-side group-by inner loop of the Pregelix dataflow.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+OPS = {
+    "sum": (lambda a, b: a + b, 0.0),
+    "min": (jnp.minimum, jnp.inf),
+    "max": (jnp.maximum, -jnp.inf),
+}
+
+
+def segment_combine_ref(seg_ids: jax.Array, payload: jax.Array,
+                        valid: jax.Array, op: str = "sum"):
+    """seg_ids: (M,) int32 sorted; payload: (M, D); valid: (M,).
+    -> (folded (M, D), is_last (M,)) where folded[i] is the running
+    aggregate of payload over seg_ids == seg_ids[i] up to i."""
+    fn, ident = OPS[op]
+    M, D = payload.shape
+    x = jnp.where(valid[:, None], payload, ident).astype(jnp.float32)
+    starts = jnp.concatenate([jnp.ones((1,), bool),
+                              seg_ids[1:] != seg_ids[:-1]])
+
+    def comb(a, b):
+        fa, va = a
+        fb, vb = b
+        return fa | fb, jnp.where(fb[:, None], vb, fn(va, vb))
+
+    _, folded = jax.lax.associative_scan(comb, (starts, x))
+    is_last = jnp.concatenate([seg_ids[1:] != seg_ids[:-1],
+                               jnp.ones((1,), bool)]) & valid
+    return folded, is_last

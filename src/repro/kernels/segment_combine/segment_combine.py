@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: segmented combine over sorted runs.
+
+Tiling: 1-D grid over row tiles of BM message rows (the payload minor dim D
+stays whole in VMEM — message payloads are narrow). The segmented inclusive
+fold INSIDE a tile is a Hillis-Steele log-step scan (elementwise ops +
+static shifts only — Mosaic-friendly, no gathers). A VMEM scratch carries
+(last segment id, running aggregate) across tiles; TPU grid iteration is
+sequential over the last grid axis, which makes the carry legal.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+IDENT = {"sum": 0.0, "min": jnp.inf, "max": -jnp.inf}
+
+
+def _fn(op):
+    return {"sum": lambda a, b: a + b, "min": jnp.minimum,
+            "max": jnp.maximum}[op]
+
+
+def _segmented_scan_tile(seg, x, op):
+    """In-tile segmented inclusive scan, log-step network. seg: (BM, 1)
+    int32, x: (BM, D) f32."""
+    fn = _fn(op)
+    BM = x.shape[0]
+    boundary = jnp.concatenate(
+        [jnp.ones((1, 1), jnp.bool_), seg[1:] != seg[:-1]], axis=0)
+    f = boundary
+    v = x
+    steps = int(math.ceil(math.log2(max(BM, 2))))
+    for k in range(steps):
+        sh = 1 << k
+        pv = jnp.concatenate([jnp.full((sh, v.shape[1]), IDENT[op],
+                                       v.dtype), v[:-sh]], axis=0)
+        pf = jnp.concatenate([jnp.ones((sh, 1), jnp.bool_), f[:-sh]],
+                             axis=0)
+        v = jnp.where(f, v, fn(pv, v))
+        f = f | pf
+    return v, boundary
+
+
+def _kernel(seg_ref, pay_ref, out_ref, last_ref, carry_seg, carry_val, *,
+            op: str, n_tiles: int):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        carry_seg[0] = jnp.int32(-2)
+        carry_val[:] = jnp.full_like(carry_val, IDENT[op])
+
+    seg = seg_ref[:]                      # (BM, 1) int32
+    x = pay_ref[:].astype(jnp.float32)    # (BM, D)
+    v, boundary = _segmented_scan_tile(seg, x, op)
+    # splice the carry into the first segment of this tile
+    prev_seg = carry_seg[0]
+    prev_val = carry_val[:]               # (1, D)
+    first_seg_len_mask = jnp.cumsum(boundary.astype(jnp.int32), axis=0) == 1
+    cont = (seg == prev_seg) & first_seg_len_mask
+    v = jnp.where(cont, _fn(op)(prev_val, v), v)
+    # last row of each segment within the tile
+    nxt = jnp.concatenate([seg[1:] != seg[:-1],
+                           jnp.ones((1, 1), jnp.bool_)], axis=0)
+    out_ref[:] = v
+    last_ref[:] = nxt.astype(jnp.int32)
+    carry_seg[0] = seg[-1, 0]
+    carry_val[:] = v[-1:, :]
+
+    @pl.when(t == n_tiles - 1)
+    def _fini():
+        pass
+
+
+def segment_combine_pallas(seg_ids: jax.Array, payload: jax.Array,
+                           valid: jax.Array, op: str = "sum", *,
+                           block_m: int = 512, interpret: bool = True):
+    """seg_ids: (M,) sorted int32; payload: (M, D); -> (folded (M, D),
+    is_last (M,)). Rows with valid=False must be sorted to the tail with
+    seg_id == int32.max (ops.py guarantees this)."""
+    M, D = payload.shape
+    BM = min(block_m, M)
+    n_tiles = pl.cdiv(M, BM)
+    seg2 = jnp.where(valid, seg_ids,
+                     jnp.iinfo(jnp.int32).max)[:, None]  # (M,1)
+    pay = jnp.where(valid[:, None], payload,
+                    IDENT[op]).astype(jnp.float32)
+    folded, _ = pl.pallas_call(
+        functools.partial(_kernel, op=op, n_tiles=n_tiles),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((BM, 1), lambda t: (t, 0)),
+                  pl.BlockSpec((BM, D), lambda t: (t, 0))],
+        out_specs=[pl.BlockSpec((BM, D), lambda t: (t, 0)),
+                   pl.BlockSpec((BM, 1), lambda t: (t, 0))],
+        out_shape=[jax.ShapeDtypeStruct((M, D), jnp.float32),
+                   jax.ShapeDtypeStruct((M, 1), jnp.int32)],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32),
+                        pltpu.VMEM((1, D), jnp.float32)],
+        interpret=interpret,
+    )(seg2, pay)
+    # segment-last markers are GLOBAL (a segment may span tiles — the
+    # carry gives the true last row the full fold); computed elementwise
+    # here, not in the kernel
+    s = seg2[:, 0]
+    is_last = jnp.concatenate([s[1:] != s[:-1],
+                               jnp.ones((1,), bool)]) & valid
+    return folded, is_last

@@ -1,0 +1,295 @@
+"""Trip-count-aware HLO cost analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scan-over-layers model is undercounted by its trip count (verified on this
+container: an 8-step scanned matmul reports 1/8 the FLOPs of its unrolled
+twin). This analyzer walks the post-SPMD optimized HLO text and:
+
+* multiplies every while body by its trip count (parsed from the loop
+  condition's comparison constant);
+* counts dot/convolution FLOPs from shapes + contracting dims (the
+  MXU-relevant FLOPs that the 197 TFLOP/s bf16 peak refers to);
+* sums per-device bytes accessed (operands + results of top-level ops in
+  each executed computation — post-fusion, a reasonable HBM-traffic proxy);
+* sums collective bytes with ring-algorithm per-device link-byte formulas:
+    all-gather       out * (g-1)/g
+    reduce-scatter   in  * (g-1)/g
+    all-reduce       2 * bytes * (g-1)/g
+    all-to-all       bytes * (g-1)/g
+    collective-permute  bytes
+
+Validated in tests/test_hlo_cost.py against cost_analysis() on while-free
+programs and against analytic 6ND on a small unrolled transformer.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_LAYOUT_RE = re.compile(r"(?<=\])\{[\d,]*\}")
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_OPCODE_RE = re.compile(r"[\s=]([a-z][a-z0-9\-]*)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+_SKIP_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "opt-barrier", "domain", "add-dependency"}
+
+
+def _arr_bytes(dt: str, dims: str) -> int:
+    if dt not in DTYPE_BYTES:
+        return 0
+    n = DTYPE_BYTES[dt]
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _type_bytes(type_str: str) -> int:
+    return sum(_arr_bytes(dt, dims) for dt, dims in
+               _SHAPE_RE.findall(type_str))
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_detail: dict = field(default_factory=lambda: defaultdict(float))
+
+    def __iadd__(self, o: "Cost") -> "Cost":
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.coll_bytes += o.coll_bytes
+        for k, v in o.coll_detail.items():
+            self.coll_detail[k] += v
+        return self
+
+    def scaled(self, m: float) -> "Cost":
+        c = Cost(self.flops * m, self.bytes * m, self.coll_bytes * m)
+        c.coll_detail = defaultdict(
+            float, {k: v * m for k, v in self.coll_detail.items()})
+        return c
+
+    def as_dict(self) -> dict:
+        return {"flops": self.flops, "bytes": self.bytes,
+                "collective_bytes": self.coll_bytes,
+                "collectives": dict(self.coll_detail)}
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    result_type: str
+    operands: list
+    line: str
+
+
+def _parse(hlo: str):
+    """-> (comps: name -> [Op], entry_name)."""
+    comps: dict = {}
+    cur = None
+    entry = None
+    for raw in hlo.splitlines():
+        s = _LAYOUT_RE.sub("", raw.strip())
+        m = re.match(
+            r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$", s)
+        if m and "=" not in s.split("(")[0]:
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        if cur is None or "=" not in s:
+            continue
+        lhs, rhs = s.split("=", 1)
+        name_m = re.search(r"%?([\w.\-]+)\s*$",
+                           lhs.replace("ROOT", "").strip())
+        if not name_m:
+            continue
+        opm = _OPCODE_RE.search("=" + rhs)
+        opcode = opm.group(1) if opm else ""
+        result_type = rhs[:opm.start(1)] if opm else rhs
+        after = rhs[opm.end(1):] if opm else ""
+        # operands: %names inside the first paren group (before attrs)
+        paren = after.split("),")[0] if ")," in after else after
+        operands = _OPERAND_RE.findall(paren)
+        comps[cur].append(Op(name_m.group(1), opcode, result_type,
+                             operands, s))
+    return comps, entry
+
+
+def _attr_comp(line: str, attr: str):
+    m = re.search(attr + r"=%?([\w.\-]+)", line)
+    return m.group(1) if m else None
+
+
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n"\s*:\s*"(\d+)"')
+
+
+def _trip_count(cond_ops: list) -> int:
+    consts = {o.name: int(re.search(r"constant\((-?\d+)\)", o.line).group(1))
+              for o in cond_ops
+              if o.opcode == "constant"
+              and re.search(r"constant\((-?\d+)\)", o.line)}
+    for o in cond_ops:
+        if o.opcode == "compare":
+            for operand in o.operands:
+                if operand in consts:
+                    return max(consts[operand], 1)
+            m = re.search(r"constant\((-?\d+)\)", o.line)
+            if m:
+                return max(int(m.group(1)), 1)
+    # compare may be wrapped in a fusion; fall back to the largest scalar
+    # constant in the condition computation
+    if consts:
+        return max(max(consts.values()), 1)
+    return 1
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def _collective_bytes(kind: str, line: str, out_b: int, in_b: int) -> float:
+    g = max(_group_size(line), 2)
+    frac = (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * out_b * frac
+    if kind == "all-gather":
+        return out_b * frac
+    if kind == "reduce-scatter":
+        return in_b * frac
+    if kind in ("all-to-all", "ragged-all-to-all"):
+        return out_b * frac
+    return float(out_b)  # collective-permute
+
+
+def _dot_flops(op: Op, types: dict) -> float:
+    res = _SHAPE_RE.findall(op.result_type)
+    n = 1
+    for dt, dims in res[:1]:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    lhs_dims = []
+    if op.operands:
+        lt = types.get(op.operands[0], "")
+        m = _SHAPE_RE.search(lt)
+        if m:
+            lhs_dims = [int(d) for d in m.group(2).split(",") if d]
+    contract = 1
+    mc = _CONTRACT_RE.search(op.line)
+    if mc and mc.group(1):
+        for i in mc.group(1).split(","):
+            if i and int(i) < len(lhs_dims):
+                contract *= lhs_dims[int(i)]
+    return 2.0 * n * contract
+
+
+def _conv_flops(op: Op, types: dict) -> float:
+    res_m = _SHAPE_RE.search(op.result_type)
+    if not res_m or len(op.operands) < 2:
+        return 0.0
+    n = 1
+    for d in res_m.group(2).split(","):
+        if d:
+            n *= int(d)
+    km = _SHAPE_RE.search(types.get(op.operands[1], ""))
+    if not km:
+        return 0.0
+    kdims = [int(d) for d in km.group(2).split(",") if d]
+    k = 1
+    for d in kdims:
+        k *= d
+    out_feat = max(kdims) if kdims else 1
+    return 2.0 * n * max(k // out_feat, 1)
+
+
+def analyze(hlo_text: str) -> Cost:
+    comps, entry = _parse(hlo_text)
+    memo: dict = {}
+
+    def comp_cost(name: str) -> Cost:
+        if name in memo:
+            return memo[name]
+        memo[name] = Cost()  # cycle guard
+        ops = comps.get(name, [])
+        types = {o.name: o.result_type for o in ops}
+        total = Cost()
+        for o in ops:
+            total += op_cost(o, types)
+        memo[name] = total
+        return total
+
+    def op_cost(o: Op, types: dict) -> Cost:
+        c = Cost()
+        out_b = _type_bytes(o.result_type)
+        in_b = sum(_type_bytes(types.get(x, "")) for x in o.operands)
+        kind = o.opcode.replace("-start", "")
+        if o.opcode in _SKIP_OPS or o.opcode.endswith("-done"):
+            return c
+        if o.opcode == "dot":
+            c.flops += _dot_flops(o, types)
+            c.bytes += out_b + in_b
+        elif o.opcode == "convolution":
+            c.flops += _conv_flops(o, types)
+            c.bytes += out_b + in_b
+        elif kind in _COLLECTIVES:
+            cb = _collective_bytes(kind, o.line, out_b, in_b)
+            c.coll_bytes += cb
+            c.coll_detail[kind] += cb
+            c.bytes += out_b + in_b
+        elif o.opcode == "while":
+            body = _attr_comp(o.line, "body")
+            cond = _attr_comp(o.line, "condition")
+            mt = _TRIP_RE.search(o.line)
+            if mt:
+                trips = max(int(mt.group(1)), 1)
+            else:
+                trips = _trip_count(comps.get(cond, [])) if cond else 1
+            if body:
+                c += comp_cost(body).scaled(trips)
+        elif o.opcode in ("fusion", "call", "custom-call", "conditional",
+                          "async-start", "map", "reduce", "sort",
+                          "reduce-window", "select-and-scatter", "scatter"):
+            c.bytes += out_b + in_b
+            for attr in ("calls", "to_apply", "branch_computations",
+                         "called_computations"):
+                sub = _attr_comp(o.line, attr)
+                if sub and sub in comps:
+                    inner = comp_cost(sub)
+                    c.flops += inner.flops
+                    c.coll_bytes += inner.coll_bytes
+                    for k, v in inner.coll_detail.items():
+                        c.coll_detail[k] += v
+        else:
+            c.bytes += out_b + in_b
+        return c
+
+    if entry is None:
+        entry = next((n for n in comps if n.startswith("main")),
+                     list(comps)[-1] if comps else None)
+    return comp_cost(entry) if entry else Cost()

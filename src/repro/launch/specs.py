@@ -1,0 +1,187 @@
+"""ShapeDtypeStruct stand-ins for every model input of every (arch x shape)
+cell — weak-type-correct, shardable, zero device allocation.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.launch.mesh import batch_axis_size, dp_axes
+from repro.models import abstract_params, init_caches, param_pspecs
+from repro.models.model import model_specs
+from repro.models.param import abstract as abstract_tree, pspecs as pspec_tree
+from repro.optim import adamw_init
+
+# archs whose serve KV caches are int8-quantized to fit v5e HBM (see
+# EXPERIMENTS.md §Dry-run)
+QUANTIZED_KV_ARCHS = {"internvl2-76b"}
+# archs whose Adam moments are bf16 to fit HBM (llama4-400B on 256 chips)
+BF16_MOMENT_ARCHS = {"llama4-maverick-400b-a17b"}
+# gradient-accumulation factors at train_4k: chosen so per-microbatch
+# layer-boundary activation saves stay under ~4 GiB/device (global_batch=256
+# over 16 data shards is 16 sequences x 4096 tokens per chip otherwise)
+TRAIN_MICROBATCHES = {
+    "hubert-xlarge": 2, "qwen2-moe-a2.7b": 4, "llama4-maverick-400b-a17b": 16,
+    "h2o-danube-3-4b": 4, "stablelm-12b": 8, "gemma3-12b": 8, "yi-34b": 16,
+        "zamba2-1.2b": 2, "internvl2-76b": 16, "falcon-mamba-7b": 8,
+}
+
+
+def train_profile(cfg: ModelConfig) -> str:
+    from repro.models.model import resolve_profile
+    return resolve_profile(cfg, "auto")
+
+
+def microbatches_for(cfg: ModelConfig) -> int:
+    if train_profile(cfg) == "zero":
+        return 1  # already 1 sequence/chip
+    return TRAIN_MICROBATCHES.get(cfg.name, 1)
+
+
+def _shard(tree, pspecs, mesh):
+    def f(sds, spec):
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(f, tree, pspecs)
+
+
+def _dim_axes(size: int, axes: tuple, mesh) -> Any:
+    """Shard `size` over as many of `axes` as divide it (prefix)."""
+    use = []
+    n = 1
+    for a in axes:
+        if size % (n * mesh.shape[a]) == 0:
+            use.append(a)
+            n *= mesh.shape[a]
+    if not use:
+        return None
+    return tuple(use) if len(use) > 1 else use[0]
+
+
+def sharded_params(cfg: ModelConfig, mesh, profile: str = "auto"):
+    specs = model_specs(cfg, profile)
+    return _shard(abstract_tree(specs, jnp.dtype(cfg.dtype)),
+                  pspec_tree(specs), mesh)
+
+
+def sharded_opt_state(cfg: ModelConfig, params_sds, mesh):
+    mdt = jnp.bfloat16 if cfg.name in BF16_MOMENT_ARCHS else jnp.float32
+    moments = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, mdt, sharding=p.sharding),
+        params_sds)
+    step = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(mesh, P()))
+    return {"step": step, "m": moments, "v": moments}
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell, mesh,
+                batch_axes=None) -> dict:
+    dp = batch_axes if batch_axes is not None else dp_axes(mesh)
+    B, S = cell.global_batch, cell.seq_len
+    bspec = _dim_axes(B, dp, mesh)
+    tok = jax.ShapeDtypeStruct(
+        (B, S), jnp.int32, sharding=NamedSharding(mesh, P(bspec, None)))
+    batch = {"tokens": tok, "labels": tok}
+    if cfg.frontend == "audio":
+        frames = jax.ShapeDtypeStruct(
+            (B, S, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=NamedSharding(mesh, P(bspec, None, None)))
+        batch = {"frames": frames, "labels": tok}
+    elif cfg.frontend == "vision":
+        batch["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_len, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=NamedSharding(mesh, P(bspec, None, None)))
+    return batch
+
+
+def _cache_pspec(leaf_path: str, shape, mesh, bspec) -> P:
+    """Sharding rule for cache leaves: batch over the data axes; attention
+    caches are SEQUENCE-sharded over "model" (flash-decoding-style context
+    parallelism — works for any kv-head count, and GSPMD turns the softmax
+    over the sharded length into tiny O(B*H) all-reduces); SSM states shard
+    their inner dim over "model"."""
+    tp = mesh.shape["model"]
+    model = lambda s: "model" if (s > 1 and s % tp == 0) else None
+    if "conv" in leaf_path:          # (B, k-1, d_in)
+        return P(bspec, None, model(shape[2]))
+    if "ssm" in leaf_path:
+        if len(shape) == 4:          # mamba2 (B, H, P, N)
+            return P(bspec, model(shape[1]), None, None)
+        return P(bspec, model(shape[1]), None)   # mamba1 (B, d_in, N)
+    if "'ks'" in leaf_path or "'vs'" in leaf_path:  # quant scales (B,S,KV)
+        return P(bspec, model(shape[1]), None)
+    # attention k/v/k8/v8: (B, S, KV, hd) -> shard S
+    return P(bspec, model(shape[1]), None, None)
+
+
+def sharded_caches(cfg: ModelConfig, cell: ShapeCell, mesh):
+    dp = dp_axes(mesh)
+    bspec = _dim_axes(cell.global_batch, dp, mesh)
+    quant = cfg.name in QUANTIZED_KV_ARCHS
+    caches = jax.eval_shape(
+        lambda: init_caches(cfg, cell.global_batch, cell.seq_len,
+                            quantize=quant))
+
+    def f(path, sds):
+        # leading layer-stack axis from the stage scan: shape (repeats, ...)
+        inner = sds.shape[1:]
+        spec = _cache_pspec(path, inner, mesh, bspec)
+        return jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype,
+            sharding=NamedSharding(mesh, P(None, *spec)))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: f(jax.tree_util.keystr(p), x), caches)
+
+
+def cell_inputs(cfg: ModelConfig, cell: ShapeCell, mesh) -> tuple:
+    """-> (kind, args tuple of ShapeDtypeStructs) for the cell's step fn.
+
+    Training uses the per-arch profile ("zero" for small archs = pure
+    ZeRO-3 DP over all chips with the batch sharded over both mesh axes;
+    "tp" + microbatching for the big ones). Serving always uses "tp"."""
+    if cell.kind == "train":
+        profile = train_profile(cfg)
+        params = sharded_params(cfg, mesh, profile)
+        opt = sharded_opt_state(cfg, params, mesh)
+        baxes = (dp_axes(mesh) + ("model",) if profile == "zero"
+                 else dp_axes(mesh))
+        return "train", (params, opt,
+                         batch_specs(cfg, cell, mesh, batch_axes=baxes))
+    params = sharded_params(cfg, mesh, "tp")
+    if cell.kind == "prefill":
+        return "prefill", (params, batch_specs(cfg, cell, mesh))
+    # decode
+    dp = dp_axes(mesh)
+    bspec = _dim_axes(cell.global_batch, dp, mesh)
+    tok = jax.ShapeDtypeStruct((cell.global_batch, 1), jnp.int32,
+                               sharding=NamedSharding(mesh, P(bspec, None)))
+    caches = sharded_caches(cfg, cell, mesh)
+    clen = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(mesh, P()))
+    return "decode", (params, tok, caches, clen)
+
+
+def step_fn_for(cfg: ModelConfig, kind: str, mesh, *,
+                causal_mode: str = "masked_full"):
+    """Build the step function matching cell_inputs' sharding decisions."""
+    from jax.sharding import PartitionSpec
+    from repro.models import (make_decode_step, make_prefill_step,
+                              make_train_step)
+    dp = dp_axes(mesh)
+    if kind == "train":
+        profile = train_profile(cfg)
+        baxes = dp + ("model",) if profile == "zero" else dp
+        dp_spec = PartitionSpec(baxes if len(baxes) > 1 else baxes[0])
+        return make_train_step(cfg, causal_mode=causal_mode,
+                               dp_spec=dp_spec,
+                               microbatches=microbatches_for(cfg))
+    dp_spec = PartitionSpec(dp if len(dp) > 1 else dp[0])
+    if kind == "prefill":
+        return make_prefill_step(cfg, causal_mode=causal_mode,
+                                 dp_spec=dp_spec)
+    return make_decode_step(cfg)

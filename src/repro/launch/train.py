@@ -1,0 +1,107 @@
+"""Production-shaped training driver: config-selected arch, synthetic data
+pipeline, AdamW + cosine, checkpoint/resume, failure handling, per-step
+stats. At ``--preset smoke`` it trains a reduced config on CPU; on a real
+mesh the same driver shards per launch/specs.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import DataConfig, TokenStream
+from repro.models import init_params, make_train_step
+from repro.optim import adamw_init
+
+
+def save_train_ckpt(path: Path, step: int, params, opt_state, data_state):
+    path.mkdir(parents=True, exist_ok=True)
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        {"params": params, "opt": opt_state})
+    arrs = {f"a{i}": np.asarray(v) for i, (_, v) in enumerate(flat)}
+    np.savez_compressed(path / f"step_{step:07d}.npz", **arrs)
+    (path / "meta.json").write_text(json.dumps(
+        {"step": step, "data": data_state}))
+    (path / "LATEST").write_text(f"step_{step:07d}.npz")
+
+
+def load_train_ckpt(path: Path, params, opt_state):
+    latest = (path / "LATEST").read_text().strip()
+    z = np.load(path / latest)
+    flat, treedef = jax.tree_util.tree_flatten(
+        {"params": params, "opt": opt_state})
+    restored = [jnp.asarray(z[f"a{i}"]) for i in range(len(flat))]
+    tree = jax.tree_util.tree_unflatten(treedef, restored)
+    meta = json.loads((path / "meta.json").read_text())
+    return tree["params"], tree["opt"], meta
+
+
+def train(arch: str, *, steps: int, preset: str = "smoke",
+          global_batch: int = 8, seq_len: int = 128,
+          ckpt_dir: str | None = None, ckpt_every: int = 50,
+          resume: bool = False, log_every: int = 10,
+          causal_mode: str = "masked_full"):
+    cfg = get_config(arch)
+    if preset == "smoke":
+        cfg = cfg.reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    stream = TokenStream(DataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=seq_len,
+                                    global_batch=global_batch))
+    start = 0
+    if resume and ckpt_dir and (Path(ckpt_dir) / "LATEST").exists():
+        params, opt, meta = load_train_ckpt(Path(ckpt_dir), params, opt)
+        stream.restore(meta["data"])
+        start = meta["step"]
+        print(f"[train] resumed from step {start}")
+    step_fn = jax.jit(make_train_step(cfg, total_steps=steps,
+                                      warmup=max(steps // 20, 5),
+                                      causal_mode=causal_mode))
+    hist = []
+    t0 = time.time()
+    for i in range(start, steps):
+        batch = {k: jnp.asarray(v) for k, v in stream.next_batch().items()}
+        params, opt, metrics = step_fn(params, opt, batch)
+        if (i + 1) % log_every == 0 or i == start:
+            loss = float(metrics["loss"])
+            hist.append((i + 1, loss))
+            tps = global_batch * seq_len * (i + 1 - start) / \
+                max(time.time() - t0, 1e-9)
+            print(f"[train] step {i+1}/{steps} loss={loss:.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"tok/s={tps:,.0f}", flush=True)
+        if ckpt_dir and (i + 1) % ckpt_every == 0:
+            save_train_ckpt(Path(ckpt_dir), i + 1, params, opt,
+                            stream.state())
+    return params, hist
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-3-4b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--causal-mode", default="masked_full")
+    args = ap.parse_args()
+    _, hist = train(args.arch, steps=args.steps, preset=args.preset,
+                    global_batch=args.global_batch, seq_len=args.seq_len,
+                    ckpt_dir=args.ckpt_dir, resume=args.resume,
+                    causal_mode=args.causal_mode)
+    first, last = hist[0][1], hist[-1][1]
+    print(f"[train] loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+from repro.models.model import (abstract_params, forward_decode,
+                                forward_prefill, forward_train, init_caches,
+                                init_params, model_specs, param_pspecs,
+                                stage_plan, use_fsdp)
+from repro.models.steps import (chunked_xent, loss_fn, make_decode_step,
+                                make_prefill_step, make_train_step)
+
+__all__ = [
+    "abstract_params", "forward_decode", "forward_prefill", "forward_train",
+    "init_caches", "init_params", "model_specs", "param_pspecs",
+    "stage_plan", "use_fsdp", "chunked_xent", "loss_fn", "make_decode_step",
+    "make_prefill_step", "make_train_step",
+]

@@ -1,0 +1,97 @@
+"""Common layers: norms, RoPE, SwiGLU MLP, embeddings (all functional)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.param import Spec
+
+# ---------------------------------------------------------------------------
+# Norms (params kept in f32 for stability)
+# ---------------------------------------------------------------------------
+
+
+def norm_specs(d: int, kind: str) -> dict:
+    out = {"scale": Spec((d,), P(None), "ones", dtype=jnp.float32)}
+    if kind == "layernorm":
+        out["bias"] = Spec((d,), P(None), "zeros", dtype=jnp.float32)
+    return out
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:2 * half]
+    rest = x[..., 2 * half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype), rest],
+                           axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP (TP: d_ff sharded on "model")
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(d: int, d_ff: int) -> dict:
+    return {
+        "w_gate": Spec((d, d_ff), P(None, "model"), fan_in=d),
+        "w_up": Spec((d, d_ff), P(None, "model"), fan_in=d),
+        "w_down": Spec((d_ff, d), P("model", None), fan_in=d_ff),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding (vocab sharded on "model")
+# ---------------------------------------------------------------------------
+
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    out = {"embedding": Spec((cfg.vocab_size, cfg.d_model), P("model", None),
+                             fan_in=cfg.d_model)}
+    if not cfg.tie_embeddings:
+        out["unembed"] = Spec((cfg.d_model, cfg.vocab_size),
+                              P(None, "model"), fan_in=cfg.d_model)
+    return out
+
+
+def embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def unembed(p: dict, x: jax.Array) -> jax.Array:
+    if "unembed" in p:
+        return jnp.einsum("...d,dv->...v", x, p["unembed"])
+    return jnp.einsum("...d,vd->...v", x, p["embedding"])

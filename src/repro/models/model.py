@@ -1,0 +1,493 @@
+"""Model assembly: stage-planned scan-over-layers.
+
+Depth is organized into *stages*; each stage is a ``lax.scan`` over `repeats`
+copies of a *period* of heterogeneous sublayers (so HLO size is O(period),
+not O(depth)):
+
+* uniform archs              -> one stage, period = 1 sublayer
+* gemma3 (5 local : 1 global)-> period of 6 attention sublayers, 8 repeats
+* llama4 (MoE every 2nd)     -> period of (dense, moe), 24 repeats
+* zamba2 (shared attn / 6)   -> period of 6 mamba sublayers + the weight-
+                                SHARED attention block applied after each
+                                period (one param copy, closure-captured)
+
+Three execution paths share the parameter tree: ``forward_train`` (full
+sequence), ``forward_prefill`` (full sequence, emits KV/SSM caches), and
+``forward_decode`` (single token against caches; ring buffers for local
+attention; optional int8-quantized KV).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (apply_attention, apply_attention_decode,
+                                    attn_specs)
+from repro.models.layers import (apply_mlp, apply_norm, embed, embed_specs,
+                                 mlp_specs, norm_specs, unembed)
+from repro.models.moe import apply_moe, moe_specs
+from repro.models.param import (Spec, abstract, materialize, pspecs,
+                                sanitize, stack)
+
+# ---------------------------------------------------------------------------
+# Stage plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SubLayer:
+    kind: str                 # "attn_global" | "attn_local" | "ssm"
+    moe: bool = False
+    shared_after: bool = False
+
+
+def stage_plan(cfg: ModelConfig):
+    """-> list of (period: tuple[SubLayer], repeats: int)."""
+    L = cfg.num_layers
+    kinds = [cfg.layer_kind(i) for i in range(L)]
+    moes = [cfg.is_moe_layer(i) for i in range(L)]
+    period = len(cfg.attn.pattern)
+    if cfg.moe is not None:
+        period = max(period, cfg.moe.every_k_layers)
+    if cfg.shared_attn_every:
+        period = max(period, cfg.shared_attn_every)
+    stages = []
+    n_full = L // period
+    if n_full:
+        subs = tuple(
+            SubLayer(kinds[i], moes[i],
+                     shared_after=(cfg.shared_attn_every > 0
+                                   and (i + 1) % cfg.shared_attn_every == 0))
+            for i in range(period))
+        stages.append((subs, n_full))
+    rem = L - n_full * period
+    if rem:
+        tail = tuple(SubLayer(kinds[n_full * period + i],
+                              moes[n_full * period + i])
+                     for i in range(rem))
+        stages.append((tail, 1))
+    return stages
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+FSDP_THRESHOLD_BYTES = 2 << 30  # params/TP16 above this -> FSDP over "data"
+
+
+def use_fsdp(cfg: ModelConfig) -> bool:
+    return cfg.param_count() * 2 / 16 > FSDP_THRESHOLD_BYTES
+
+
+def resolve_profile(cfg: ModelConfig, profile: str = "auto") -> str:
+    """Sharding profile:
+    * "zero": pure ZeRO-3 data parallelism over the flattened (data, model)
+      axes — params/grads/moments 256-way sharded on their largest dim, no
+      tensor parallelism. Right for small/mid archs at global_batch=256
+      (1 sequence per chip; no TP collectives on the critical path).
+    * "tp": tensor parallelism on "model" (+ FSDP over "data" for archs
+      whose params/16 exceed ~2 GiB). Right for the big archs and for
+      serving (ZeRO's per-layer weight all-gather is wrong for decode).
+    """
+    if profile != "auto":
+        return profile
+    # NOTE: "zero" is kept as an experimental profile. Measured on the
+    # dry-run, GSPMD hoists the whole-tree all-gather out of the layer scan
+    # (152 GiB/dev for h2o-danube) instead of gathering per-layer inside the
+    # loop, so the production default is TP(+FSDP) with gradient
+    # accumulation. Recorded in EXPERIMENTS.md §Perf (refuted hypothesis).
+    return "tp"
+
+
+def _zero_transform(tree):
+    """Replace every Spec's sharding with ZeRO-3: largest dim sharded over
+    ("data","model") when divisible by 256, else ("data",) / ("model",),
+    else replicated."""
+    import numpy as np
+
+    def f(s: Spec):
+        spec = [None] * len(s.shape)
+        if int(np.prod(s.shape)) >= 4096:
+            for axes, n in ((("data", "model"), 256), (("data",), 16)):
+                placed = False
+                for j in sorted(range(len(s.shape)),
+                                key=lambda k: -s.shape[k]):
+                    if s.shape[j] % n == 0 and s.shape[j] > 1:
+                        spec[j] = axes if len(axes) > 1 else axes[0]
+                        placed = True
+                        break
+                if placed:
+                    break
+        return Spec(s.shape, P(*spec), s.init, s.fan_in, s.dtype)
+
+    return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, Spec))
+
+
+def _add_fsdp(tree):
+    """ZeRO-3/FSDP: insert "data" into the largest unsharded dim of big
+    matrices (weights are all-gathered per scan step; grads reduce-scatter)."""
+    def f(s: Spec):
+        import numpy as np
+        if int(np.prod(s.shape)) * 2 < (1 << 20) or "data" in jax.tree.leaves(tuple(s.pspec)):
+            return s
+        dims = sorted(range(len(s.shape)), key=lambda i: -s.shape[i])
+        spec = list(s.pspec) + [None] * (len(s.shape) - len(s.pspec))
+        for i in dims:
+            if spec[i] is None and s.shape[i] % 16 == 0:
+                spec[i] = "data"
+                return Spec(s.shape, P(*spec), s.init, s.fan_in, s.dtype)
+        return s
+    return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, Spec))
+
+
+def _sublayer_specs(cfg: ModelConfig, sub: SubLayer) -> dict:
+    d = cfg.d_model
+    if sub.kind == "ssm":
+        s = {"norm1": norm_specs(d, cfg.norm)}
+        s["ssm"] = (ssm_mod.mamba1_specs(cfg) if cfg.ssm.kind == "mamba1"
+                    else ssm_mod.mamba2_specs(cfg))
+        return s
+    s = {"norm1": norm_specs(d, cfg.norm), "attn": attn_specs(cfg)}
+    if sub.moe:
+        s["norm2"] = norm_specs(d, cfg.norm)
+        s["moe"] = moe_specs(cfg)
+    elif cfg.d_ff:
+        s["norm2"] = norm_specs(d, cfg.norm)
+        s["mlp"] = mlp_specs(d, cfg.d_ff)
+    return s
+
+
+def _shared_block_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {"norm1": norm_specs(d, cfg.norm), "attn": attn_specs(cfg),
+            "norm2": norm_specs(d, cfg.norm), "mlp": mlp_specs(d, cfg.d_ff)}
+
+
+def model_specs(cfg: ModelConfig, profile: str = "auto") -> dict:
+    profile = resolve_profile(cfg, profile)
+    fsdp = profile == "tp" and use_fsdp(cfg)
+    zero = profile == "zero"
+    tr = _zero_transform if zero else (_add_fsdp if fsdp else (lambda t: t))
+    specs: dict = {"embed": embed_specs(cfg),
+                   "final_norm": norm_specs(cfg.d_model, cfg.norm)}
+    if cfg.frontend == "audio":
+        # frontend is a stub: inputs are precomputed frame embeddings
+        specs["embed"] = ({"unembed": Spec((cfg.d_model, cfg.vocab_size),
+                                           P(None, "model"),
+                                           fan_in=cfg.d_model)})
+    if cfg.frontend == "vision":
+        specs["vision_proj"] = {"w": Spec((cfg.d_model, cfg.d_model),
+                                          P(None, None),
+                                          fan_in=cfg.d_model)}
+    stages = []
+    for subs, repeats in stage_plan(cfg):
+        period = {f"sub{i}": _sublayer_specs(cfg, s)
+                  for i, s in enumerate(subs)}
+        stages.append(stack(sanitize(tr(period)), repeats))
+    specs["stages"] = stages
+    if cfg.shared_attn_every:
+        specs["shared_block"] = tr(_shared_block_specs(cfg))
+    specs["embed"] = tr(specs["embed"])
+    return sanitize(specs)
+
+
+def init_params(cfg: ModelConfig, rng, profile: str = "auto") -> Any:
+    return materialize(model_specs(cfg, profile), rng, jnp.dtype(cfg.dtype))
+
+
+def abstract_params(cfg: ModelConfig, profile: str = "auto") -> Any:
+    return abstract(model_specs(cfg, profile), jnp.dtype(cfg.dtype))
+
+
+def param_pspecs(cfg: ModelConfig, profile: str = "auto") -> Any:
+    return pspecs(model_specs(cfg, profile))
+
+
+# ---------------------------------------------------------------------------
+# Forward: train
+# ---------------------------------------------------------------------------
+
+
+def _apply_sub(p, x, sub: SubLayer, cfg: ModelConfig, positions, *,
+               causal_mode, dp_spec, qkv_blocks=(512, 512)):
+    aux = jnp.zeros((), jnp.float32)
+    if sub.kind == "ssm":
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        f = (ssm_mod.apply_mamba1 if cfg.ssm.kind == "mamba1"
+             else ssm_mod.apply_mamba2)
+        return x + f(p["ssm"], h, cfg), aux
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    a, _ = apply_attention(p["attn"], h, cfg, local=(sub.kind == "attn_local"),
+                           positions=positions, causal_mode=causal_mode,
+                           q_block=qkv_blocks[0], kv_block=qkv_blocks[1],
+                           dp_spec=dp_spec)
+    x = x + a
+    if sub.moe:
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        mo, aux = apply_moe(p["moe"], h, cfg, dp_spec=dp_spec)
+        x = x + mo
+    elif cfg.d_ff:
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        x = x + apply_mlp(p["mlp"], h)
+    return x, aux
+
+
+def _apply_shared(shared_p, x, cfg: ModelConfig, positions, *, causal_mode,
+                  dp_spec=P("data")):
+    h = apply_norm(shared_p["norm1"], x, cfg.norm)
+    a, _ = apply_attention(shared_p["attn"], h, cfg, local=False,
+                           positions=positions, causal_mode=causal_mode,
+                           dp_spec=dp_spec)
+    x = x + a
+    h = apply_norm(shared_p["norm2"], x, cfg.norm)
+    return x + apply_mlp(shared_p["mlp"], h)
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    if cfg.frontend == "audio":
+        return batch["frames"].astype(jnp.dtype(cfg.dtype))
+    x = embed(params["embed"], batch["tokens"])
+    if cfg.frontend == "vision":
+        pe = jnp.einsum("bfd,de->bfe",
+                        batch["patch_embeds"].astype(x.dtype),
+                        params["vision_proj"]["w"])
+        F = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, F:]], axis=1)
+    return x
+
+
+def forward_train(params, batch, cfg: ModelConfig, *,
+                  causal_mode: str = "masked_full", remat: bool = True,
+                  dp_spec=P("data")):
+    """-> (hidden (B,S,d), aux_loss)."""
+    x = _embed_inputs(params, batch, cfg)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    aux_total = jnp.zeros((), jnp.float32)
+    for (subs, repeats), stage_p in zip(stage_plan(cfg), params["stages"]):
+        def body(carry, layer_p, subs=subs):
+            x, aux = carry
+            for i, sub in enumerate(subs):
+                x, a = _apply_sub(layer_p[f"sub{i}"], x, sub, cfg, positions,
+                                  causal_mode=causal_mode, dp_spec=dp_spec)
+                aux = aux + a
+                if sub.shared_after:
+                    x = _apply_shared(params["shared_block"], x, cfg,
+                                      positions, causal_mode=causal_mode,
+                                      dp_spec=dp_spec)
+            return (x, aux), None
+
+        f = jax.checkpoint(body) if remat else body
+        (x, aux_total), _ = jax.lax.scan(f, (x, aux_total), stage_p)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, aux_total
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+
+def _cache_len_for(cfg: ModelConfig, sub: SubLayer, max_len: int) -> int:
+    if sub.kind == "attn_local":
+        return min(cfg.attn.window, max_len)  # ring buffer
+    return max_len
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, *,
+                quantize: bool = False):
+    """Abstract-friendly cache init (pure shape math)."""
+    dt = jnp.dtype(cfg.dtype)
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    stages = []
+    for subs, repeats in stage_plan(cfg):
+        period = {}
+        for i, sub in enumerate(subs):
+            if sub.kind == "ssm":
+                st = (ssm_mod.mamba1_init_state(cfg, batch, dt)
+                      if cfg.ssm.kind == "mamba1"
+                      else ssm_mod.mamba2_init_state(cfg, batch, dt))
+            else:
+                sl = _cache_len_for(cfg, sub, max_len)
+                if quantize:
+                    st = {"k8": jnp.zeros((batch, sl, kv, hd), jnp.int8),
+                          "v8": jnp.zeros((batch, sl, kv, hd), jnp.int8),
+                          "ks": jnp.zeros((batch, sl, kv), jnp.float32),
+                          "vs": jnp.zeros((batch, sl, kv), jnp.float32)}
+                else:
+                    st = {"k": jnp.zeros((batch, sl, kv, hd), dt),
+                          "v": jnp.zeros((batch, sl, kv, hd), dt)}
+            period[f"sub{i}"] = st
+            if sub.shared_after:
+                period[f"shared{i}"] = {
+                    "k": jnp.zeros((batch, max_len, kv, hd), dt),
+                    "v": jnp.zeros((batch, max_len, kv, hd), dt)}
+        stages.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (repeats,) + a.shape), period))
+    return stages
+
+
+def _quantize_kv(k):
+    s = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1) / 127.0
+    s = jnp.maximum(s, 1e-8)
+    return jnp.round(k.astype(jnp.float32) / s[..., None]).astype(jnp.int8), s
+
+
+def _dequantize_kv(k8, s, dt):
+    return (k8.astype(jnp.float32) * s[..., None]).astype(dt)
+
+
+def _attn_decode_cached(p, x, cache, cache_len, cfg, *, local):
+    if "k8" in cache:
+        dt = jnp.dtype(cfg.dtype)
+        k = _dequantize_kv(cache["k8"], cache["ks"], dt)
+        v = _dequantize_kv(cache["v8"], cache["vs"], dt)
+        out, k, v = apply_attention_decode(p, x, k, v, cache_len, cfg,
+                                           local=local)
+        k8, ks = _quantize_kv(k)
+        v8, vs = _quantize_kv(v)
+        return out, {"k8": k8, "v8": v8, "ks": ks, "vs": vs}
+    out, k, v = apply_attention_decode(p, x, cache["k"], cache["v"],
+                                       cache_len, cfg, local=local)
+    return out, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Forward: prefill
+# ---------------------------------------------------------------------------
+
+
+def forward_prefill(params, batch, cfg: ModelConfig, *,
+                    causal_mode: str = "masked_full", dp_spec=P("data")):
+    """Full-sequence forward emitting caches. -> (last_hidden (B,1,d),
+    caches). Emitted KV caches are sequence-sharded on "model" (context-
+    parallel cache layout, matching the decode-side input shardings)."""
+    from repro.models.moe import _maybe_constrain
+
+    def _kv(t):
+        sl = t.shape[1]
+        return _maybe_constrain(
+            t, P(dp_spec[0], "model" if sl % 16 == 0 else None, None, None))
+
+    x = _embed_inputs(params, batch, cfg)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    caches = []
+    for (subs, repeats), stage_p in zip(stage_plan(cfg), params["stages"]):
+        def body(x, layer_p, subs=subs):
+            out_caches = {}
+            for i, sub in enumerate(subs):
+                p = layer_p[f"sub{i}"]
+                if sub.kind == "ssm":
+                    x, st = _prefill_ssm(p["ssm"], apply_norm(
+                        p["norm1"], x, cfg.norm), x, cfg)
+                    out_caches[f"sub{i}"] = st
+                else:
+                    h = apply_norm(p["norm1"], x, cfg.norm)
+                    local = sub.kind == "attn_local"
+                    a, (k, v) = apply_attention(
+                        p["attn"], h, cfg, local=local, positions=positions,
+                        causal_mode=causal_mode)
+                    x = x + a
+                    sl = _cache_len_for(cfg, sub, S)
+                    out_caches[f"sub{i}"] = {"k": _kv(k[:, -sl:]),
+                                             "v": _kv(v[:, -sl:])}
+                    if sub.moe:
+                        h = apply_norm(p["norm2"], x, cfg.norm)
+                        mo, _ = apply_moe(p["moe"], h, cfg)
+                        x = x + mo
+                    elif cfg.d_ff:
+                        h = apply_norm(p["norm2"], x, cfg.norm)
+                        x = x + apply_mlp(p["mlp"], h)
+                if sub.shared_after:
+                    sp = params["shared_block"]
+                    h = apply_norm(sp["norm1"], x, cfg.norm)
+                    a, (k, v) = apply_attention(sp["attn"], h, cfg,
+                                                local=False,
+                                                positions=positions,
+                                                causal_mode=causal_mode)
+                    x = x + a
+                    h = apply_norm(sp["norm2"], x, cfg.norm)
+                    x = x + apply_mlp(sp["mlp"], h)
+                    out_caches[f"shared{i}"] = {"k": _kv(k), "v": _kv(v)}
+            return x, out_caches
+
+        x, stage_caches = jax.lax.scan(body, x, stage_p)
+        caches.append(stage_caches)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x[:, -1:], caches
+
+
+def _prefill_ssm(p, h, x, cfg):
+    """Run an SSM sublayer over the full sequence and return its decode
+    state (conv tail + final ssm state)."""
+    s = cfg.ssm
+    if s.kind == "mamba1":
+        y, st = ssm_mod.apply_mamba1_with_state(p, h, cfg)
+    else:
+        y, st = ssm_mod.apply_mamba2_with_state(p, h, cfg)
+    return x + y, st
+
+
+# ---------------------------------------------------------------------------
+# Forward: decode (single token)
+# ---------------------------------------------------------------------------
+
+
+def forward_decode(params, tokens, caches, cache_len, cfg: ModelConfig):
+    """tokens: (B,1) int32. -> (logits (B,1,V), new_caches)."""
+    x = embed(params["embed"], tokens)
+    new_caches = []
+    for si, ((subs, repeats), stage_p) in enumerate(
+            zip(stage_plan(cfg), params["stages"])):
+        def body(x, inp, subs=subs):
+            layer_p, layer_c = inp
+            new_c = {}
+            for i, sub in enumerate(subs):
+                p = layer_p[f"sub{i}"]
+                c = layer_c[f"sub{i}"]
+                if sub.kind == "ssm":
+                    h = apply_norm(p["norm1"], x, cfg.norm)
+                    f = (ssm_mod.apply_mamba1_decode if cfg.ssm.kind ==
+                         "mamba1" else ssm_mod.apply_mamba2_decode)
+                    y, st = f(p["ssm"], h, c, cfg)
+                    x = x + y
+                    new_c[f"sub{i}"] = st
+                else:
+                    h = apply_norm(p["norm1"], x, cfg.norm)
+                    local = sub.kind == "attn_local"
+                    a, st = _attn_decode_cached(p["attn"], h, c, cache_len,
+                                                cfg, local=local)
+                    x = x + a
+                    new_c[f"sub{i}"] = st
+                    if sub.moe:
+                        h = apply_norm(p["norm2"], x, cfg.norm)
+                        mo, _ = apply_moe(p["moe"], h, cfg)
+                        x = x + mo
+                    elif cfg.d_ff:
+                        h = apply_norm(p["norm2"], x, cfg.norm)
+                        x = x + apply_mlp(p["mlp"], h)
+                if sub.shared_after:
+                    sp = params["shared_block"]
+                    h = apply_norm(sp["norm1"], x, cfg.norm)
+                    a, st = _attn_decode_cached(
+                        sp["attn"], h, layer_c[f"shared{i}"], cache_len, cfg,
+                        local=False)
+                    x = x + a
+                    h = apply_norm(sp["norm2"], x, cfg.norm)
+                    x = x + apply_mlp(sp["mlp"], h)
+                    new_c[f"shared{i}"] = st
+            return x, new_c
+
+        x, new_stage_c = jax.lax.scan(body, x, (stage_p, caches[si]))
+        new_caches.append(new_stage_c)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed(params["embed"], x)
+    return logits, new_caches

@@ -1,0 +1,127 @@
+"""Parameter-spec system.
+
+Every layer declares its parameters as a pytree of ``Spec`` leaves
+(shape + PartitionSpec + initializer). The same tree is used three ways:
+
+* ``materialize``  -> real arrays (smoke tests, examples)
+* ``abstract``     -> ShapeDtypeStruct stand-ins (multi-pod dry-run)
+* ``pspecs``       -> PartitionSpec tree (in_shardings for pjit)
+* ``stack``        -> prepend a layer axis for scan-over-layers
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: tuple
+    pspec: P = P()
+    init: str = "normal"       # normal|zeros|ones|ssm_a_log|ssm_dt_bias|arange_neg
+    fan_in: Optional[int] = None
+    dtype: Optional[Any] = None  # override model dtype (e.g. f32 for norms)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def _init_leaf(spec: Spec, key, dtype) -> jax.Array:
+    dt = spec.dtype or dtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "ssm_a_log":
+        # mamba: A in [-16, -1) via log; shape (..., N) or (H,)
+        n = spec.shape[-1]
+        a = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32),
+                             spec.shape)
+        return jnp.log(a).astype(dt)
+    if spec.init == "ssm_dt_bias":
+        u = jax.random.uniform(key, spec.shape, jnp.float32,
+                               math.log(1e-3), math.log(1e-1))
+        dtv = jnp.exp(u)
+        # inverse softplus
+        return (dtv + jnp.log(-jnp.expm1(-dtv))).astype(dt)
+    fan = spec.fan_in or (spec.shape[0] if spec.shape else 1)
+    return (jax.random.normal(key, spec.shape, jnp.float32)
+            / math.sqrt(max(fan, 1))).astype(dt)
+
+
+def materialize(tree, rng, dtype) -> Any:
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    out = [_init_leaf(l, k, dtype) for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract(tree, dtype) -> Any:
+    def f(s: Spec):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype or dtype)
+    return jax.tree.map(f, tree, is_leaf=is_spec)
+
+
+def pspecs(tree) -> Any:
+    return jax.tree.map(lambda s: s.pspec, tree, is_leaf=is_spec)
+
+
+# production mesh axis sizes (fixed: 16x16 single-pod, 2x16x16 multi-pod).
+# jax rejects NamedShardings that don't divide the dimension, so every Spec
+# is sanitized against these before use.
+AXIS_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _axes_size(entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for a in entry:
+            n *= AXIS_SIZES[a]
+        return n
+    return AXIS_SIZES[entry]
+
+
+def sanitize(tree) -> Any:
+    """Fix Specs whose sharded dims aren't divisible by the mesh axis: move
+    the axis to the largest divisible unsharded dim, else drop it."""
+    def fix(s: Spec) -> Spec:
+        import numpy as np
+        spec = list(s.pspec) + [None] * (len(s.shape) - len(s.pspec))
+        changed = False
+        big = int(np.prod(s.shape)) * 2 >= (64 << 20)
+        for i, entry in enumerate(spec):
+            if entry is None:
+                continue
+            if s.shape[i] % _axes_size(entry) == 0:
+                continue
+            spec[i] = None
+            changed = True
+            if not big:
+                continue  # small tensor: replicate (avoids psum chatter)
+            # large tensor: relocate to the largest unsharded divisible dim
+            for j in sorted(range(len(s.shape)), key=lambda k: -s.shape[k]):
+                if spec[j] is None and s.shape[j] % _axes_size(entry) == 0 \
+                        and s.shape[j] > 1:
+                    spec[j] = entry
+                    break
+        if not changed:
+            return s
+        return Spec(s.shape, P(*spec), s.init, s.fan_in, s.dtype)
+
+    return jax.tree.map(fix, tree, is_leaf=is_spec)
+
+
+def stack(tree, n: int) -> Any:
+    """Prepend a scan (layer) axis of size n to every Spec."""
+    def f(s: Spec):
+        return Spec((n,) + tuple(s.shape), P(None, *s.pspec), s.init,
+                    s.fan_in, s.dtype)
+    return jax.tree.map(f, tree, is_leaf=is_spec)

@@ -1,0 +1,371 @@
+"""State-space layers: Mamba1 (sequential selective scan, faithful) and
+Mamba2 (SSD chunked matmul form — MXU-friendly).
+
+Sharding: the inner dimension / heads are sharded on "model"; the recurrent
+state then carries no cross-device traffic inside the scan (the only
+collectives are the psums where the sharded inner dim is contracted).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.param import Spec
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv1d (k small; implemented as k shifted adds)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B,S,C), w: (C,k), b: (C)."""
+    k = w.shape[1]
+    out = x * w[:, -1]
+    for i in range(1, k):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, :x.shape[1]]
+        out = out + shifted * w[:, -1 - i]
+    return out + b
+
+
+def conv1d_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array,
+                b: jax.Array):
+    """Single decode step. x_t: (B,C); conv_state: (B,k-1,C) past inputs."""
+    full = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B,k,C)
+    y = jnp.einsum("bkc,ck->bc", full, w) + b
+    return y, full[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba1
+# ---------------------------------------------------------------------------
+
+
+def mamba1_specs(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    r = s.dt_rank or d // 16
+    return {
+        "in_proj": Spec((d, 2 * d_in), P(None, "model"), fan_in=d),
+        "conv_w": Spec((d_in, s.d_conv), P("model", None), init="normal",
+                       fan_in=s.d_conv),
+        "conv_b": Spec((d_in,), P("model"), "zeros"),
+        "x_proj": Spec((d_in, r + 2 * s.d_state), P("model", None),
+                       fan_in=d_in),
+        "dt_proj": Spec((r, d_in), P(None, "model"), fan_in=r),
+        "dt_bias": Spec((d_in,), P("model"), "ssm_dt_bias",
+                        dtype=jnp.float32),
+        "A_log": Spec((d_in, s.d_state), P("model", None), "ssm_a_log",
+                      dtype=jnp.float32),
+        "D": Spec((d_in,), P("model"), "ones", dtype=jnp.float32),
+        "out_proj": Spec((d_in, d), P("model", None), fan_in=d_in),
+    }
+
+
+def _mamba1_inner(p, xc, z, dt, Bc, Cc):
+    y, _ = _mamba1_scan(p, xc, z, dt, Bc, Cc)
+    return y
+
+
+def _mamba1_scan(p, xc, z, dt, Bc, Cc, chunk: int = 128):
+    """Sequential selective scan, two-level (chunks x steps) so backward
+    saves one recurrent state per CHUNK, not per step (a 4096-step train
+    sequence would otherwise pin 4096 copies of (B,d_in,N))."""
+    A = -jnp.exp(p["A_log"])                     # (d_in, N) f32
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp               # (B,d_in),(B,d_in),(B,N)x2
+        dA = jnp.exp(dt_t[..., None] * A)        # (B,d_in,N)
+        dBx = (dt_t * x_t)[..., None] * b_t[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    B, S, d_in = xc.shape
+    N = Bc.shape[-1]
+    chunk = min(chunk, S)
+    nc = S // chunk
+    h0 = jnp.zeros((B, d_in, N), jnp.float32)
+
+    def to_chunks(a):
+        return a.astype(jnp.float32).reshape(B, nc, chunk, *a.shape[2:]) \
+            .transpose(1, 2, 0, *range(3, a.ndim + 1))
+
+    xs = tuple(to_chunks(a) for a in (xc, dt, Bc, Cc))  # (nc,chunk,B,...)
+
+    @jax.checkpoint
+    def chunk_body(h, inp):
+        h, ys = jax.lax.scan(step, h, inp)
+        return h, ys
+
+    hT, ys = jax.lax.scan(chunk_body, h0, xs)    # ys: (nc,chunk,B,d_in)
+    y = ys.transpose(2, 0, 1, 3).reshape(B, S, d_in)
+    y = y + xc.astype(jnp.float32) * p["D"]
+    return (y * jax.nn.silu(z.astype(jnp.float32))).astype(xc.dtype), hT
+
+
+def apply_mamba1(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    s = cfg.ssm
+    r = s.dt_rank or cfg.d_model // 16
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x_, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(causal_conv1d(x_, p["conv_w"], p["conv_b"]))
+    proj = jnp.einsum("bse,ef->bsf", xc, p["x_proj"])
+    dt_r = proj[..., :r]
+    Bc = proj[..., r:r + s.d_state]
+    Cc = proj[..., r + s.d_state:]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_r, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"])
+    y = _mamba1_inner(p, xc, z, dt, Bc, Cc)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+
+def apply_mamba1_with_state(p: dict, x: jax.Array, cfg: ModelConfig):
+    """Like apply_mamba1 but also returns the decode state (conv tail +
+    final recurrent state) for prefill->decode handoff."""
+    s = cfg.ssm
+    r = s.dt_rank or cfg.d_model // 16
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x_, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(causal_conv1d(x_, p["conv_w"], p["conv_b"]))
+    proj = jnp.einsum("bse,ef->bsf", xc, p["x_proj"])
+    dt_r = proj[..., :r]
+    Bc = proj[..., r:r + s.d_state]
+    Cc = proj[..., r + s.d_state:]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_r, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"])
+    y, h = _mamba1_inner_state(p, xc, z, dt, Bc, Cc)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    k = s.d_conv - 1
+    conv_tail = jnp.pad(x_, ((0, 0), (k, 0), (0, 0)))[:, -k:] \
+        if x.shape[1] < k else x_[:, -k:]
+    return out, {"conv": conv_tail, "ssm": h}
+
+
+def _mamba1_inner_state(p, xc, z, dt, Bc, Cc):
+    return _mamba1_scan(p, xc, z, dt, Bc, Cc)
+
+
+def mamba1_init_state(cfg: ModelConfig, batch: int, dtype):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    return {"conv": jnp.zeros((batch, s.d_conv - 1, d_in), dtype),
+            "ssm": jnp.zeros((batch, d_in, s.d_state), jnp.float32)}
+
+
+def apply_mamba1_decode(p: dict, x_t: jax.Array, state: dict,
+                        cfg: ModelConfig):
+    """x_t: (B,1,d). Returns (y_t, new_state)."""
+    s = cfg.ssm
+    r = s.dt_rank or cfg.d_model // 16
+    xz = jnp.einsum("bsd,de->bse", x_t, p["in_proj"])[:, 0]
+    x_, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = conv1d_step(x_, state["conv"], p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    proj = jnp.einsum("be,ef->bf", xc, p["x_proj"])
+    dt_r, Bc, Cc = (proj[..., :r], proj[..., r:r + s.d_state],
+                    proj[..., r + s.d_state:])
+    dt = jax.nn.softplus(
+        jnp.einsum("br,re->be", dt_r, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A)
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * Bc.astype(jnp.float32)[:, None, :]
+    h = dA * state["ssm"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cc.astype(jnp.float32))
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x_t.dtype)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])[:, None]
+    return out, {"conv": conv_state, "ssm": h}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_specs(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    return {
+        "wz": Spec((d, d_in), P(None, "model"), fan_in=d),
+        "wx": Spec((d, d_in), P(None, "model"), fan_in=d),
+        "wB": Spec((d, s.d_state), P(None, None), fan_in=d),
+        "wC": Spec((d, s.d_state), P(None, None), fan_in=d),
+        "wdt": Spec((d, H), P(None, "model"), fan_in=d),
+        "conv_w": Spec((d_in, s.d_conv), P("model", None), fan_in=s.d_conv),
+        "conv_b": Spec((d_in,), P("model"), "zeros"),
+        "convB_w": Spec((s.d_state, s.d_conv), P(None, None),
+                        fan_in=s.d_conv),
+        "convB_b": Spec((s.d_state,), P(None), "zeros"),
+        "convC_w": Spec((s.d_state, s.d_conv), P(None, None),
+                        fan_in=s.d_conv),
+        "convC_b": Spec((s.d_state,), P(None), "zeros"),
+        "dt_bias": Spec((H,), P("model"), "ssm_dt_bias", dtype=jnp.float32),
+        "A_log": Spec((H,), P("model"), "ssm_a_log", dtype=jnp.float32),
+        "D": Spec((H,), P("model"), "ones", dtype=jnp.float32),
+        "norm_scale": Spec((d_in,), P("model"), "ones", dtype=jnp.float32),
+        "out_proj": Spec((d_in, d), P("model", None), fan_in=d_in),
+    }
+
+
+def _segsum(x):
+    """x: (..., L). Returns (..., L, L) cumulative sums
+    out[t,s] = sum_{r=s+1..t} x[r] for t >= s, -inf otherwise."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, A, Bc, Cc, chunk: int, init_state=None):
+    """SSD (mamba2) chunked scan.
+    xh: (B,S,H,Ph) head inputs; dt: (B,S,H) (post-softplus, f32);
+    A: (H,) negative decay (f32); Bc/Cc: (B,S,N).
+    Returns (y: (B,S,H,Ph), final_state: (B,H,Ph,N))."""
+    Bsz, S, H, Ph = xh.shape
+    N = Bc.shape[-1]
+    nc = S // chunk
+    L = chunk
+    xc = xh.reshape(Bsz, nc, L, H, Ph).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, L, H)
+    Bcc = Bc.reshape(Bsz, nc, L, N).astype(jnp.float32)
+    Ccc = Cc.reshape(Bsz, nc, L, N).astype(jnp.float32)
+    dA = dtc * A                                   # (B,nc,L,H)
+    dAh = dA.transpose(0, 1, 3, 2)                  # (B,nc,H,L)
+    cum = jnp.cumsum(dAh, axis=-1)                  # (B,nc,H,L)
+    # --- intra-chunk (diagonal blocks) ---
+    Lmat = jnp.exp(_segsum(dAh))                    # (B,nc,H,L,L)
+    scores = jnp.einsum("bcln,bcsn->bcls", Ccc, Bcc)
+    G = scores[:, :, None] * Lmat                   # (B,nc,H,L,L)
+    xdt = xc * dtc[..., None]                       # (B,nc,L,H,Ph)
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", G, xdt)
+    # --- per-chunk end states ---
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)     # (B,nc,H,L)
+    st = jnp.einsum("bchl,bcln,bclhp->bchpn", decay_to_end, Bcc, xdt)
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(cum[..., -1])             # (B,nc,H)
+
+    def step(carry, inp):
+        s_c, dec = inp
+        new = dec[..., None, None] * carry + s_c
+        return new, carry                           # emit state BEFORE chunk
+
+    s0 = (jnp.zeros((Bsz, H, Ph, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final, prev_states = jax.lax.scan(
+        step, s0, (st.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)        # (B,nc,H,Ph,N)
+    # --- off-diagonal contribution from previous chunks ---
+    decay_from_start = jnp.exp(cum)                 # (B,nc,H,L)
+    y_off = jnp.einsum("bcln,bchpn,bchl->bclhp", Ccc, prev_states,
+                       decay_from_start)
+    y = (y_diag + y_off).reshape(Bsz, S, H, Ph)
+    return y, final
+
+
+def apply_mamba2(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    xi = jnp.einsum("bsd,de->bse", x, p["wx"])
+    Bi = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    Ci = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    dti = jnp.einsum("bsd,dh->bsh", x, p["wdt"])
+    xc = jax.nn.silu(causal_conv1d(xi, p["conv_w"], p["conv_b"]))
+    Bc = jax.nn.silu(causal_conv1d(Bi, p["convB_w"], p["convB_b"]))
+    Cc = jax.nn.silu(causal_conv1d(Ci, p["convC_w"], p["convC_b"]))
+    dt = jax.nn.softplus(dti.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xc.reshape(*xc.shape[:2], H, s.head_dim)
+    y, _ = ssd_chunked(xh, dt, A, Bc, Cc, min(s.chunk, x.shape[1]))
+    y = y + xh.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(*x.shape[:2], d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    # gated RMSNorm
+    ms = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(ms + 1e-6) * p["norm_scale"]).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+
+def apply_mamba2_with_state(p: dict, x: jax.Array, cfg: ModelConfig):
+    """apply_mamba2 variant returning the decode state."""
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    xi = jnp.einsum("bsd,de->bse", x, p["wx"])
+    Bi = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    Ci = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    dti = jnp.einsum("bsd,dh->bsh", x, p["wdt"])
+    xc = jax.nn.silu(causal_conv1d(xi, p["conv_w"], p["conv_b"]))
+    Bc = jax.nn.silu(causal_conv1d(Bi, p["convB_w"], p["convB_b"]))
+    Cc = jax.nn.silu(causal_conv1d(Ci, p["convC_w"], p["convC_b"]))
+    dt = jax.nn.softplus(dti.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xc.reshape(*xc.shape[:2], H, s.head_dim)
+    y, final = ssd_chunked(xh, dt, A, Bc, Cc, min(s.chunk, x.shape[1]))
+    y = y + xh.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(*x.shape[:2], d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(ms + 1e-6) * p["norm_scale"]).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    k = s.d_conv - 1
+
+    def tail(a):
+        return jnp.pad(a, ((0, 0), (k, 0), (0, 0)))[:, -k:] \
+            if a.shape[1] < k else a[:, -k:]
+
+    return out, {"conv_x": tail(xi), "conv_B": tail(Bi), "conv_C": tail(Ci),
+                 "ssm": final}
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, dtype):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    return {
+        "conv_x": jnp.zeros((batch, s.d_conv - 1, d_in), dtype),
+        "conv_B": jnp.zeros((batch, s.d_conv - 1, s.d_state), dtype),
+        "conv_C": jnp.zeros((batch, s.d_conv - 1, s.d_state), dtype),
+        "ssm": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def apply_mamba2_decode(p: dict, x_t: jax.Array, state: dict,
+                        cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    x0 = x_t[:, 0]
+    z = jnp.einsum("bd,de->be", x0, p["wz"])
+    xi = jnp.einsum("bd,de->be", x0, p["wx"])
+    Bi = jnp.einsum("bd,dn->bn", x0, p["wB"])
+    Ci = jnp.einsum("bd,dn->bn", x0, p["wC"])
+    dti = jnp.einsum("bd,dh->bh", x0, p["wdt"])
+    xc, cx = conv1d_step(xi, state["conv_x"], p["conv_w"], p["conv_b"])
+    Bc, cB = conv1d_step(Bi, state["conv_B"], p["convB_w"], p["convB_b"])
+    Cc, cC = conv1d_step(Ci, state["conv_C"], p["convC_w"], p["convC_b"])
+    xc, Bc, Cc = jax.nn.silu(xc), jax.nn.silu(Bc), jax.nn.silu(Cc)
+    dt = jax.nn.softplus(dti.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                             # (B,H)
+    xh = xc.reshape(-1, H, s.head_dim).astype(jnp.float32)
+    dBx = (dt[..., None] * xh)[..., None] * Bc.astype(jnp.float32)[:, None, None, :]
+    h = dA[..., None, None] * state["ssm"] + dBx     # (B,H,Ph,N)
+    y = jnp.einsum("bhpn,bn->bhp", h, Cc.astype(jnp.float32))
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(-1, d_in) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(ms + 1e-6) * p["norm_scale"]).astype(x_t.dtype)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])[:, None]
+    return out, {"conv_x": cx, "conv_B": cB, "conv_C": cC, "ssm": h}

@@ -1,0 +1,143 @@
+"""Training / serving step functions (the units the dry-run lowers).
+
+* ``train_step``   — fwd (remat scan) + chunked-vocab CE + bwd + AdamW.
+* ``prefill_step`` — full-sequence forward emitting KV/SSM caches + first
+                     sampled token.
+* ``decode_step``  — one token against the caches (greedy).
+
+The vocab-chunked cross entropy bounds the logits working set to
+(B, chunk, V) instead of (B, S, V) — required for the 262k-vocab archs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import unembed
+from repro.models.model import (forward_decode, forward_prefill,
+                                forward_train, init_caches)
+from repro.optim import adamw_update, clip_by_global_norm, cosine_schedule
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def chunked_xent(embed_params, hidden, labels, *, chunk: int = 512):
+    """hidden: (B,S,d); labels: (B,S) int32 (-1 = masked).
+    Returns (sum_nll, n_tokens)."""
+    B, S, d = hidden.shape
+    chunk = min(chunk, S)
+    nc = S // chunk
+    h = hidden.reshape(B, nc, chunk, d).swapaxes(0, 1)
+    y = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    def body(carry, inp):
+        hs, ys = inp
+        logits = unembed(embed_params, hs).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(ys, 0)[..., None], axis=-1)[..., 0]
+        mask = (ys >= 0).astype(jnp.float32)
+        nll = (lse - gold) * mask
+        tot, cnt = carry
+        return (tot + nll.sum(), cnt + mask.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (h, y))
+    return tot, cnt
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, causal_mode="masked_full",
+            dp_spec=P("data")):
+    hidden, aux = forward_train(params, batch, cfg, causal_mode=causal_mode,
+                                dp_spec=dp_spec)
+    tot, cnt = chunked_xent(params["embed"], hidden, batch["labels"])
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss + AUX_LOSS_WEIGHT * aux, (loss, aux)
+
+
+def make_train_step(cfg: ModelConfig, *, peak_lr=3e-4, warmup=100,
+                    total_steps=10000, causal_mode="masked_full",
+                    dp_spec=P("data"), microbatches: int = 1):
+    """microbatches > 1 = gradient accumulation: the global batch is split
+    into M sequential microbatches (bounds activation memory for the big
+    archs at global_batch=256)."""
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (_, (ce, aux)), grads = grad_fn(params, batch, cfg,
+                                            causal_mode=causal_mode,
+                                            dp_spec=dp_spec)
+        else:
+            from repro.models.moe import _maybe_constrain
+            mb = jax.tree.map(
+                lambda x: _maybe_constrain(
+                    x.reshape((microbatches, x.shape[0] // microbatches)
+                              + x.shape[1:]),
+                    P(None, dp_spec[0], *([None] * (x.ndim - 2)))),
+                batch)
+
+            def accum(carry, microbatch):
+                g_acc, ce_acc, aux_acc = carry
+                (_, (ce, aux)), g = grad_fn(params, microbatch, cfg,
+                                            causal_mode=causal_mode,
+                                            dp_spec=dp_spec)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, ce_acc + ce, aux_acc + aux), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, ce, aux), _ = jax.lax.scan(
+                accum, (g0, jnp.zeros(()), jnp.zeros(())), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            ce, aux = ce / microbatches, aux / microbatches
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        lr = cosine_schedule(opt_state["step"], peak_lr=peak_lr,
+                             warmup=warmup, total=total_steps)
+        params, opt_state = adamw_update(grads, opt_state, params, lr=lr)
+        metrics = {"loss": ce, "aux": aux, "grad_norm": gnorm, "lr": lr}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, causal_mode="masked_full",
+                      dp_spec=P("data")):
+    if cfg.is_encoder:
+        # encoder-only archs have no decode: "prefill" is the full forward
+        # (per-position classification), no caches emitted
+        def encode_step(params, batch):
+            hidden, _ = forward_train(params, batch, cfg, remat=False,
+                                      dp_spec=dp_spec)
+            tot, cnt = chunked_xent(params["embed"], hidden,
+                                    batch["labels"])
+            return tot / jnp.maximum(cnt, 1.0)
+
+        return encode_step
+
+    def prefill_step(params, batch):
+        last_h, caches = forward_prefill(params, batch, cfg,
+                                         causal_mode=causal_mode,
+                                         dp_spec=dp_spec)
+        logits = unembed(params["embed"], last_h)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, tokens, caches, cache_len):
+        logits, caches = forward_decode(params, tokens, caches, cache_len,
+                                        cfg)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return decode_step

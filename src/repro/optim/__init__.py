@@ -1,0 +1,8 @@
+from repro.optim.adamw import (adamw_init, adamw_update, clip_by_global_norm,
+                               cosine_schedule)
+from repro.optim.compress import (compress_gradients, decompress_gradients,
+                                  init_error_feedback)
+
+__all__ = ["adamw_init", "adamw_update", "clip_by_global_norm",
+           "cosine_schedule", "compress_gradients", "decompress_gradients",
+           "init_error_feedback"]

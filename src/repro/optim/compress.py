@@ -1,0 +1,39 @@
+"""int8 error-feedback gradient compression (1-bit-Adam-family trick).
+
+Used by the host-loop trainer to cut DP all-reduce bytes ~4x: gradients are
+quantized to int8 with per-tensor scales before the data-parallel reduction;
+the quantization residual is fed back into the next step (error feedback
+keeps the compression unbiased in the long run).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_gradients(grads, error_fbk):
+    def comp(g, e):
+        gf = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)) / 127.0, 1e-12)
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        new_e = gf - q.astype(jnp.float32) * scale
+        return (q, scale), new_e
+
+    flat, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error_fbk)
+    out = [comp(g, e) for g, e in zip(flat, flat_e)]
+    qs = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_err = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return qs, new_err
+
+
+def decompress_gradients(qs):
+    def dec(t):
+        q, scale = t
+        return q.astype(jnp.float32) * scale
+    return jax.tree.map(dec, qs,
+                        is_leaf=lambda x: isinstance(x, tuple))

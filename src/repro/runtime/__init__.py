@@ -1,0 +1,8 @@
+from repro.runtime.checkpoint import (latest_checkpoint, load_checkpoint,
+                                      repartition, save_checkpoint)
+from repro.runtime.failure import (FailureManager, StragglerMonitor,
+                                   WorkerFailure)
+
+__all__ = ["latest_checkpoint", "load_checkpoint", "repartition",
+           "save_checkpoint", "FailureManager", "StragglerMonitor",
+           "WorkerFailure"]

@@ -1,0 +1,74 @@
+"""Failure manager (paper Section 5.7): analyzes failures, blacklists
+machines, recovers recoverable errors from the latest checkpoint onto the
+surviving partitions; application errors are forwarded to the user.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+class WorkerFailure(RuntimeError):
+    """Infrastructure failure (machine power-off / disk IO) — recoverable."""
+
+    def __init__(self, worker: int, msg: str = ""):
+        super().__init__(f"worker {worker} failed: {msg}")
+        self.worker = worker
+
+
+@dataclass
+class FailureManager:
+    n_workers: int
+    blacklist: set = field(default_factory=set)
+    events: list = field(default_factory=list)
+    max_retries: int = 3
+
+    def healthy_workers(self) -> int:
+        return self.n_workers - len(self.blacklist)
+
+    def record(self, exc: Exception) -> bool:
+        """-> True if recoverable (infrastructure), False for application
+        errors (forwarded to the user, as in the paper)."""
+        recoverable = isinstance(exc, (WorkerFailure, OSError, IOError))
+        self.events.append({"time": time.time(), "error": repr(exc),
+                            "recoverable": recoverable})
+        if isinstance(exc, WorkerFailure):
+            self.blacklist.add(exc.worker)
+        return recoverable
+
+    def run_with_recovery(self, run_fn, restore_fn):
+        """run_fn(n_workers) -> result; restore_fn(n_workers) re-shards the
+        latest checkpoint onto the surviving workers and returns fresh
+        state for run_fn."""
+        attempt = 0
+        while True:
+            try:
+                return run_fn(self.healthy_workers())
+            except Exception as exc:  # noqa: BLE001
+                if not self.record(exc) or attempt >= self.max_retries:
+                    raise
+                attempt += 1
+                if self.healthy_workers() < 1:
+                    raise RuntimeError("no healthy workers left") from exc
+                restore_fn(self.healthy_workers())
+
+
+@dataclass
+class StragglerMonitor:
+    """Per-superstep straggler detection from the statistics collector's
+    wall times: flags partitions (BSP steps) slower than k x median."""
+    threshold: float = 2.0
+    history: list = field(default_factory=list)
+
+    def observe(self, superstep: int, wall_s: float):
+        self.history.append(wall_s)
+        if len(self.history) < 5:
+            return None
+        import statistics
+        med = statistics.median(self.history[:-1])
+        if wall_s > self.threshold * med:
+            return {"superstep": superstep, "wall_s": wall_s,
+                    "median_s": med, "action": "flag-straggler"}
+        return None

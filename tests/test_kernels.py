@@ -1,0 +1,92 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.csr_spmv import ops as spmv_ops
+from repro.kernels.csr_spmv.ref import edge_gather_ref
+from repro.kernels.flash_attention.flash_attention import \
+    flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.moe_gmm import ops as gmm_ops
+from repro.kernels.moe_gmm.ref import grouped_matmul_ref
+from repro.kernels.segment_combine.ref import segment_combine_ref
+from repro.kernels.segment_combine.segment_combine import \
+    segment_combine_pallas
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("M,D,op", [
+    (128, 1, "sum"), (256, 4, "sum"), (512, 8, "min"), (1024, 2, "max"),
+    (96, 3, "sum"), (513, 2, "min"),
+])
+def test_segment_combine(M, D, op):
+    seg = np.sort(RNG.integers(0, max(M // 3, 1), M)).astype(np.int32)
+    pay = RNG.normal(size=(M, D)).astype(np.float32)
+    val = RNG.random(M) > 0.1
+    order = np.argsort(~val, kind="stable")
+    seg, pay, val = seg[order], pay[order], val[order]
+    f1, l1 = segment_combine_ref(
+        jnp.asarray(np.where(val, seg, np.iinfo(np.int32).max)),
+        jnp.asarray(pay), jnp.asarray(val), op)
+    f2, l2 = segment_combine_pallas(jnp.asarray(seg), jnp.asarray(pay),
+                                    jnp.asarray(val), op, block_m=128,
+                                    interpret=True)
+    assert (np.asarray(l1) == np.asarray(l2)).all()
+    np.testing.assert_allclose(np.asarray(f1)[np.asarray(l1)],
+                               np.asarray(f2)[np.asarray(l2)], atol=1e-5)
+
+
+@pytest.mark.parametrize("B,Sq,Sk,hd,causal,dtype", [
+    (2, 128, 128, 64, True, np.float32),
+    (1, 256, 256, 128, True, np.float32),
+    (2, 128, 128, 64, False, np.float32),
+    (1, 128, 384, 64, True, np.float32),   # decode-suffix layout
+    (1, 128, 128, 64, True, jnp.bfloat16),
+])
+def test_flash_attention(B, Sq, Sk, hd, causal, dtype):
+    q = RNG.normal(size=(B, Sq, hd)).astype(np.float32)
+    k = RNG.normal(size=(B, Sk, hd)).astype(np.float32)
+    v = RNG.normal(size=(B, Sk, hd)).astype(np.float32)
+    qj = jnp.asarray(q).astype(dtype)
+    kj = jnp.asarray(k).astype(dtype)
+    vj = jnp.asarray(v).astype(dtype)
+    o1 = attention_ref(qj, kj, vj, causal=causal)
+    o2 = flash_attention_pallas(qj, kj, vj, causal=causal, block_q=128,
+                                block_k=128, interpret=True)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("T,d,f,E,bm", [
+    (300, 64, 128, 4, 64), (1024, 128, 256, 8, 128), (50, 32, 64, 8, 16),
+    (17, 16, 32, 3, 8),
+])
+def test_moe_gmm(T, d, f, E, bm):
+    sizes = RNG.multinomial(T, np.ones(E) / E).astype(np.int32)
+    x = RNG.normal(size=(T, d)).astype(np.float32)
+    w = (RNG.normal(size=(E, d, f)) / np.sqrt(d)).astype(np.float32)
+    o1 = grouped_matmul_ref(jnp.asarray(x), jnp.asarray(w),
+                            jnp.asarray(sizes))
+    o2 = gmm_ops.grouped_matmul(jnp.asarray(x), jnp.asarray(w),
+                                jnp.asarray(sizes), impl="pallas",
+                                block_m=bm)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-4)
+
+
+@pytest.mark.parametrize("N,E,V", [(500, 3000, 2), (1000, 8000, 4),
+                                   (128, 100, 1), (64, 64, 8)])
+def test_csr_spmv(N, E, V):
+    src = RNG.integers(0, N, E).astype(np.int32)
+    src[RNG.random(E) < 0.05] = -1
+    ev = RNG.normal(size=E).astype(np.float32)
+    vals = RNG.normal(size=(N, V)).astype(np.float32)
+    layout = spmv_ops.plan_layout(src, N, block_m=128, block_r=64)
+    o1 = edge_gather_ref(jnp.asarray(vals), jnp.asarray(src),
+                         jnp.asarray(ev))
+    o2 = spmv_ops.edge_gather(jnp.asarray(vals), jnp.asarray(src),
+                              jnp.asarray(ev), layout=layout,
+                              impl="pallas", block_m=128, block_r=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)

@@ -1,0 +1,94 @@
+"""Per-architecture smoke tests: REDUCED same-family configs, one forward
++ one train step on CPU, asserting output shapes and no NaNs (the full
+configs are exercised only via the dry-run)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.models import (forward_train, init_params, make_decode_step,
+                          make_prefill_step, make_train_step)
+from repro.optim import adamw_init
+
+
+def _batch(cfg, B=2, S=32, rng=None):
+    rng = rng or jax.random.PRNGKey(0)
+    tok = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tok, "labels": tok}
+    if cfg.frontend == "audio":
+        batch = {"frames": jnp.ones((B, S, cfg.d_model), jnp.float32),
+                 "labels": tok}
+    elif cfg.frontend == "vision":
+        batch["patch_embeds"] = jnp.ones((B, cfg.frontend_len, cfg.d_model),
+                                         jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_train(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    h, aux = forward_train(params, batch, cfg, remat=False)
+    assert h.shape == (2, 32, cfg.d_model)
+    assert not bool(jnp.isnan(h).any())
+    ts = make_train_step(cfg)
+    params2, opt2, metrics = jax.jit(ts)(params, adamw_init(params), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually changed (exact comparison: warmup LR updates are tiny)
+    l0 = jax.tree.leaves(params)[0]
+    l1 = jax.tree.leaves(params2)[0]
+    assert not (np.asarray(l0, np.float32)
+                == np.asarray(l1, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", [a for a in ALL_ARCHS
+                                  if not get_config(a).is_encoder])
+def test_smoke_prefill_decode(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    batch = _batch(cfg)
+    ps = make_prefill_step(cfg)
+    tok, caches = jax.jit(ps)(params, batch)
+    assert tok.shape == (2, 1)
+    ds = make_decode_step(cfg)
+    tok2, caches2 = jax.jit(ds)(params, tok, caches, jnp.int32(32))
+    assert tok2.shape == (2, 1)
+    assert int(tok2.min()) >= 0 and int(tok2.max()) < cfg.vocab_size
+
+
+def test_decode_matches_teacher_forcing():
+    """Greedy decode from a prefix must match argmax of the full forward
+    (prefill/decode cache correctness, gemma3's local:global mix)."""
+    cfg = get_config("gemma3-12b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    B, S = 1, 32
+    tok = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0,
+                             cfg.vocab_size)
+    batch = {"tokens": tok, "labels": tok}
+    # full forward logits at the last position
+    from repro.models.layers import unembed
+    h, _ = forward_train(params, batch, cfg, remat=False)
+    full_next = jnp.argmax(unembed(params["embed"], h[:, -1:]), axis=-1)
+    ps = make_prefill_step(cfg)
+    pre_next, _ = jax.jit(ps)(params, batch)
+    assert int(full_next[0, 0]) == int(pre_next[0, 0])
+
+
+def test_param_counts_near_published():
+    """Analytic parameter counts are in the right ballpark for the
+    headline sizes."""
+    expect = {"yi-34b": 34e9, "falcon-mamba-7b": 7e9,
+              "stablelm-12b": 12e9, "gemma3-12b": 12e9,
+              "llama4-maverick-400b-a17b": 400e9}
+    for name, n in expect.items():
+        got = get_config(name).param_count()
+        assert 0.6 * n < got < 1.45 * n, (name, got)
+
+
+def test_moe_active_params():
+    cfg = get_config("llama4-maverick-400b-a17b")
+    a = cfg.active_param_count()
+    assert a < 0.1 * cfg.param_count()
+    assert 10e9 < a < 30e9  # ~17B active

@@ -1,0 +1,97 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.connector import bucket_by_owner
+from repro.core.groupby import (compact, scatter_combine_dense,
+                                sort_combine_dense)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(st.integers(2, 64), st.integers(1, 200), st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_bucket_routing_is_a_partition(P, K, seed):
+    """Every valid message lands in exactly one bucket, owner = dst % P,
+    and payloads survive the trip (permutation invariance)."""
+    rng = np.random.default_rng(seed)
+    dst = rng.integers(0, 1000, K).astype(np.int32)
+    valid = rng.random(K) > 0.2
+    pay = rng.normal(size=(K, 2)).astype(np.float32)
+    cap = K + 8
+    b_dst, b_pay, b_val, ovf = bucket_by_owner(
+        jnp.asarray(dst), jnp.asarray(pay), jnp.asarray(valid), P, cap,
+        sort_by_dst=False)
+    assert int(ovf) == 0
+    got = []
+    bd, bp, bv = np.asarray(b_dst), np.asarray(b_pay), np.asarray(b_val)
+    for q in range(P):
+        ok = bv[q]
+        assert (bd[q][ok] % P == q).all()
+        got += [(int(d), tuple(np.round(p, 5)))
+                for d, p in zip(bd[q][ok], bp[q][ok])]
+    want = [(int(d), tuple(np.round(p, 5)))
+            for d, p, v in zip(dst, pay, valid) if v]
+    assert sorted(got) == sorted(want)
+
+
+@given(st.integers(1, 400), st.integers(1, 64), st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_compact_preserves_true_indices(n, cap, seed):
+    rng = np.random.default_rng(seed)
+    mask = rng.random(n) > 0.5
+    idx, cnt, ovf = compact(jnp.asarray(mask), cap)
+    idx = np.asarray(idx)
+    true_idx = np.where(mask)[0]
+    keep = min(len(true_idx), cap)
+    assert int(cnt) == keep
+    assert int(ovf) == max(len(true_idx) - cap, 0)
+    assert (idx[:keep] == true_idx[:keep]).all()
+    assert (idx[keep:] == -1).all()
+
+
+@given(st.integers(1, 100), st.integers(4, 64),
+       st.sampled_from(["sum", "min", "max"]),
+       st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_groupby_strategies_agree(M, Np, op, seed):
+    """scatter (hash) and sort group-bys compute identical dense combines
+    — the paper's plan-equivalence invariant."""
+    rng = np.random.default_rng(seed)
+    slot = rng.integers(0, Np, M).astype(np.int32)
+    pay = rng.normal(size=(M, 3)).astype(np.float32)
+    valid = rng.random(M) > 0.3
+    d1, h1 = scatter_combine_dense(jnp.asarray(slot), jnp.asarray(pay),
+                                   jnp.asarray(valid), Np, op)
+    from repro.core.groupby import MONOIDS
+    fn, ident = MONOIDS[op]
+    d2, h2 = sort_combine_dense(jnp.asarray(slot), jnp.asarray(pay),
+                                jnp.asarray(valid), Np, fn,
+                                jnp.full((3,), ident, jnp.float32))
+    assert (np.asarray(h1) == np.asarray(h2)).all()
+    has = np.asarray(h1)
+    np.testing.assert_allclose(np.asarray(d1)[has], np.asarray(d2)[has],
+                               atol=1e-5)
+
+
+@given(st.integers(10, 200), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_segment_combine_kernel_matches_numpy(M, seed):
+    """Kernel vs a direct numpy oracle (independent of the jnp ref)."""
+    from repro.kernels.segment_combine.segment_combine import \
+        segment_combine_pallas
+    rng = np.random.default_rng(seed)
+    seg = np.sort(rng.integers(0, max(M // 4, 1), M)).astype(np.int32)
+    pay = rng.normal(size=(M, 2)).astype(np.float32)
+    valid = np.ones(M, bool)
+    f, last = segment_combine_pallas(jnp.asarray(seg), jnp.asarray(pay),
+                                     jnp.asarray(valid), "sum",
+                                     block_m=64, interpret=True)
+    f, last = np.asarray(f), np.asarray(last)
+    for s in np.unique(seg):
+        rows = seg == s
+        want = pay[rows].sum(axis=0)
+        got = f[last & rows]
+        assert got.shape == (1, 2)
+        np.testing.assert_allclose(got[0], want, atol=1e-4)
