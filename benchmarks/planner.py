@@ -1,0 +1,109 @@
+"""Auto-plan vs the static plan space (paper Figures 14/15 regime).
+
+For each algorithm the full static join x connector x sender-combine space
+is run to find the best and worst static plans, then ``plan="auto"`` runs
+against them. Expected: auto lands within 20% of the best static plan's
+steady-state per-superstep time on all three algorithms — message-dense
+PageRank stays on the full-outer join, SSSP on the high-diameter lattice
+switches to left-outer mid-run, CC starts dense and collapses.
+
+Reported per algorithm:
+  steady        mean non-recompile superstep seconds (time_supersteps)
+  auto_steady   the same for the auto run, after its last plan switch
+                (the regime the planner converged to)
+"""
+from __future__ import annotations
+
+from repro.core import PhysicalPlan, load_graph, run_host
+from repro.graph import SSSP, ConnectedComponents, PageRank, rmat_graph, \
+    uniform_graph
+from repro.graph.generators import grid_graph
+from repro.planner import plan_space
+
+from benchmarks.common import record, time_supersteps
+
+
+def _steady_after_last_switch(res):
+    """Steady-state per-superstep seconds once the planner settled.
+    Returns (seconds, note); the note flags degraded fallbacks so the
+    acceptance metric is never silently computed on the wrong regime."""
+    last = 0
+    for s in res.stats:
+        if s.get("event") == "plan-switch":
+            last = s["superstep"]
+    post = [s for s in res.stats if "wall_s" in s and s["superstep"] > last]
+    walls = [s["wall_s"] for s in post if not s.get("recompiled", False)]
+    if walls:
+        return sum(walls) / len(walls), ""
+    if post:   # only recompile-tainted supersteps after the switch
+        return (sum(s["wall_s"] for s in post) / len(post),
+                "fallback: post-switch walls include recompiles")
+    return time_supersteps(res), "fallback: no post-switch supersteps"
+
+
+def main(scale: int = 1):
+    n = 8_000 * scale
+    web = rmat_graph(n, 10 * n, seed=1)
+    btc = uniform_graph(n, 4 * n, seed=2, undirected=True)
+    side = int((6_000 * scale) ** 0.5)
+    road = grid_graph(side)
+    cases = [
+        ("pagerank", lambda: PageRank(n, iterations=10), web, n, 2, 12),
+        ("sssp", lambda: SSSP(source=0), road, side * side, 1,
+         2 * side + 10),
+        ("cc", lambda: ConnectedComponents(), btc, n, 1, 30),
+    ]
+    summary = {}
+    for name, mk_prog, edges, nv, vd, max_ss in cases:
+        static = {}   # key -> (steady seconds, plan)
+        # groupby fixed to scatter: for named monoid combines the sort
+        # group-by computes the same thing at strictly higher cost, so
+        # the best/worst envelope is unaffected
+        for plan in plan_space(mk_prog(), groupbys=("scatter",)):
+            vert = load_graph(edges, nv, P=4, value_dims=vd)
+            res = run_host(vert, mk_prog(), plan, max_supersteps=max_ss)
+            t = time_supersteps(res)
+            key = (f"{plan.join}/{plan.connector}/"
+                   f"sc={int(plan.sender_combine)}")
+            static[key] = (t, plan)
+            record(f"planner/{name}/static/{key}", t * 1e6,
+                   f"supersteps={res.supersteps}")
+        vert = load_graph(edges, nv, P=4, value_dims=vd)
+        res = run_host(vert, mk_prog(), "auto", max_supersteps=max_ss)
+        t_auto = time_supersteps(res)
+        t_auto_steady, steady_note = _steady_after_last_switch(res)
+        switches = [s for s in res.stats
+                    if s.get("event") == "plan-switch"]
+        best_key = min(static, key=lambda k: static[k][0])
+        worst_key = max(static, key=lambda k: static[k][0])
+        worst = static[worst_key][0]
+        # re-measure the best static plan ADJACENT to the auto run: wall
+        # times drift over a long process (compile-cache and allocator
+        # pressure), so the fair baseline is the fresher measurement
+        vert = load_graph(edges, nv, P=4, value_dims=vd)
+        rerun = run_host(vert, mk_prog(), static[best_key][1],
+                         max_supersteps=max_ss)
+        best = time_supersteps(rerun)
+        record(f"planner/{name}/auto", t_auto * 1e6,
+               f"switches={len(switches)} final={res.plan.join}")
+        record(f"planner/{name}/auto_steady", t_auto_steady * 1e6,
+               f"vs best {best_key}" +
+               (f"; {steady_note}" if steady_note else ""))
+        record(f"planner/{name}/auto_over_best",
+               t_auto_steady / max(best, 1e-12) * 100,
+               "x100; <=120 is within 20% of the best static plan")
+        record(f"planner/{name}/worst_over_best",
+               worst / max(best, 1e-12) * 100,
+               f"x100; worst={worst_key}")
+        summary[name] = {"best": best, "worst": worst, "auto": t_auto,
+                         "auto_steady": t_auto_steady,
+                         "switches": len(switches),
+                         "final_plan": res.plan}
+    ok = all(s["auto_steady"] <= 1.2 * s["best"] for s in summary.values())
+    record("planner/auto_within_20pct_of_best_everywhere", float(ok),
+           "1.0 = acceptance holds")
+    return summary
+
+
+if __name__ == "__main__":
+    main()

@@ -16,16 +16,18 @@ from __future__ import annotations
 import dataclasses
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.plan import PhysicalPlan
+from repro.core.plan import FRONTIER_FLOOR, PhysicalPlan
 from repro.core.program import VertexProgram
 from repro.core.relations import (GlobalState, MsgRel, VertexRel,
                                   empty_msgs, init_gs, out_degrees)
 from repro.core.superstep import EngineConfig, make_superstep
+
+PlanArg = Union[PhysicalPlan, str]   # a PhysicalPlan or the string "auto"
 
 
 @dataclass
@@ -35,19 +37,37 @@ class RunResult:
     supersteps: int
     stats: list = field(default_factory=list)
     wall_s: float = 0.0
+    plan: Optional[PhysicalPlan] = None   # plan in effect at the end
+
+
+def _resolve_plan(vert, program, plan: PlanArg, *, adaptive: bool,
+                  ec: Optional[EngineConfig] = None,
+                  auto_config=None, auto_space=None):
+    """plan="auto" -> (cost-model-chosen plan, AdaptiveController|None)."""
+    if isinstance(plan, PhysicalPlan):
+        return plan, None
+    if plan != "auto":
+        raise ValueError(f"plan must be a PhysicalPlan or 'auto', "
+                         f"got {plan!r}")
+    from repro.planner import (DEFAULT_MACHINE, EMULATED_MACHINE,
+                               AdaptiveConfig, resolve_auto_plan)
+    emulated = ec is None or ec.axis_name is None
+    return resolve_auto_plan(
+        vert, program, adaptive=adaptive,
+        config=auto_config or AdaptiveConfig(),
+        machine=EMULATED_MACHINE if emulated else DEFAULT_MACHINE,
+        space_kw=auto_space)
 
 
 def default_engine_config(vert: VertexRel, program: VertexProgram,
                           plan: PhysicalPlan, *, slack: float = 1.5,
                           axis_name=None) -> EngineConfig:
+    from repro.core.plan import bucket_capacity
     P, Np = vert.vid.shape
     Ep = vert.edge_src.shape[1]
-    if plan.sender_combine:
-        # after sender-side combining, <= Np distinct receivers per bucket
-        cap = min(int((Ep / P + 8) * slack), Np + 8)
-    else:
-        cap = int((Ep / P + 8) * slack)
-    return EngineConfig(n_parts=P, bucket_cap=max(cap, 8),
+    return EngineConfig(n_parts=P,
+                        bucket_cap=bucket_capacity(plan, Ep, Np, P,
+                                                   slack=slack),
                         frontier_cap=int(Np * plan.frontier_capacity) + 8,
                         axis_name=axis_name)
 
@@ -61,10 +81,12 @@ def init_vertex_values(vert: VertexRel, program: VertexProgram,
 
 
 def run_jit(vert: VertexRel, program: VertexProgram,
-            plan: PhysicalPlan = PhysicalPlan(), *,
+            plan: PlanArg = PhysicalPlan(), *,
             max_supersteps: int = 50,
             ec: Optional[EngineConfig] = None) -> RunResult:
     t0 = time.time()
+    # "auto" resolves once up front (whole-loop jit: no mid-run switching)
+    plan, _ = _resolve_plan(vert, program, plan, adaptive=False, ec=ec)
     ec = ec or default_engine_config(vert, program, plan)
     step = make_superstep(program, plan, ec)
     gs = init_gs(program.agg_dims)
@@ -88,28 +110,42 @@ def run_jit(vert: VertexRel, program: VertexProgram,
             f"message capacity overflow ({int(g.overflow)} dropped); "
             "use run_host (auto-grows) or raise bucket_cap")
     return RunResult(vertex=v, gs=g, supersteps=int(g.superstep),
-                     wall_s=time.time() - t0)
+                     wall_s=time.time() - t0, plan=plan)
 
 
 def run_host(vert: VertexRel, program: VertexProgram,
-             plan: PhysicalPlan = PhysicalPlan(), *,
+             plan: PlanArg = PhysicalPlan(), *,
              max_supersteps: int = 50,
              ec: Optional[EngineConfig] = None,
              checkpoint_every: int = 0,
              checkpoint_dir: Optional[str] = None,
              on_superstep: Optional[Callable] = None,
-             failure_injector: Optional[Callable] = None) -> RunResult:
+             failure_injector: Optional[Callable] = None,
+             auto_config=None,
+             auto_space: Optional[dict] = None) -> RunResult:
     """Host-loop driver with statistics, checkpointing, capacity growth and
-    (for tests) failure injection."""
+    (for tests) failure injection. plan="auto" turns on the cost-based
+    planner: the initial plan is chosen for superstep 0's all-active
+    frontier and re-chosen at superstep boundaries as observed frontier
+    density crosses the model's thresholds (planner.adaptive)."""
+    from repro.planner.stats import StatsCollector
     from repro.runtime.checkpoint import save_checkpoint
 
     t0 = time.time()
+    plan, controller = _resolve_plan(vert, program, plan, adaptive=True,
+                                     ec=ec, auto_config=auto_config,
+                                     auto_space=auto_space)
     ec = ec or default_engine_config(vert, program, plan)
     step = jax.jit(make_superstep(program, plan, ec))
     gs = init_gs(program.agg_dims)
     vert = init_vertex_values(vert, program, gs)
     msg = empty_msgs(vert.num_partitions, ec.n_parts * ec.bucket_cap,
                      program.msg_dims)
+    n_live = (controller.g.n_vertices if controller is not None
+              else int(jnp.sum(vert.vid >= 0)))
+    coll = StatsCollector(n_partitions=vert.num_partitions,
+                          vertex_capacity=vert.capacity,
+                          msg_dims=program.msg_dims, n_vertices=n_live)
     stats = []
     i = 0
     recompiled = True  # first step includes the jit compile
@@ -128,42 +164,73 @@ def run_host(vert: VertexRel, program: VertexProgram,
             step = jax.jit(make_superstep(program, plan, ec))
             vert, msg, gs = prev
             msg = _regrow_msgs(msg, ec)
-            stats.append({"superstep": i, "event": "regrow",
-                          "bucket_cap": ec.bucket_cap})
+            stats.append(coll.event(i, "regrow",
+                                    bucket_cap=ec.bucket_cap).as_dict())
             recompiled = True
             continue
         vert, msg, gs = vert2, msg2, gs2
         i += 1
+        rec = coll.record(i, active=int(gs.active_count),
+                          messages=int(gs.msg_count),
+                          wall_s=time.time() - ts,
+                          recompiled=this_recompiled)
+        stats.append(rec.as_dict())
+        switched = False
+        if controller is not None and not bool(gs.halt):
+            # mid-run replanning: switch the physical plan when observed
+            # frontier density pushes another plan below the current one
+            new_plan = controller.observe(rec, bucket_cap=ec.bucket_cap)
+            if new_plan is not None:
+                from repro.planner import migrate_msgs
+                msg = migrate_msgs(msg, plan, new_plan, ec.n_parts)
+                plan = new_plan
+                if plan.join == "left_outer":
+                    act = int(gs.active_count) // \
+                        max(vert.num_partitions, 1) + 1
+                    ec = dataclasses.replace(
+                        ec, frontier_cap=min(max(FRONTIER_FLOOR, act * 4),
+                                             vert.capacity + 8))
+                # dropping the sender combine needs room for uncombined
+                # sends: grow the buckets now instead of paying an
+                # overflow-redo on the next superstep
+                need = default_engine_config(vert, program, plan)
+                if need.bucket_cap > ec.bucket_cap:
+                    ec = dataclasses.replace(ec,
+                                             bucket_cap=need.bucket_cap)
+                    msg = _regrow_msgs(msg, ec)
+                step = jax.jit(make_superstep(program, plan, ec))
+                stats.append(coll.event(
+                    i, "plan-switch", join=plan.join,
+                    groupby=plan.groupby, connector=plan.connector,
+                    sender_combine=plan.sender_combine,
+                    frontier_cap=ec.frontier_cap).as_dict())
+                recompiled = True
+                switched = True
         # adaptive frontier refit (left-outer plan): when the live set
         # collapses, shrink the frontier capacity so each superstep only
         # pays O(|frontier|) — one recompile, amortized across supersteps
-        if plan.join == "left_outer":
+        if plan.join == "left_outer" and not switched:
             act = int(gs.active_count) // max(vert.num_partitions, 1) + 1
-            if act * 4 < ec.frontier_cap and ec.frontier_cap > 64:
+            if act * 4 < ec.frontier_cap and ec.frontier_cap > \
+                    FRONTIER_FLOOR:
                 ec = dataclasses.replace(
-                    ec, frontier_cap=max(64, act * 2))
+                    ec, frontier_cap=max(FRONTIER_FLOOR, act * 2))
                 step = jax.jit(make_superstep(program, plan, ec))
-                stats.append({"superstep": i, "event": "frontier-refit",
-                              "frontier_cap": ec.frontier_cap})
+                stats.append(coll.event(
+                    i, "frontier-refit",
+                    frontier_cap=ec.frontier_cap).as_dict())
                 recompiled = True
-        stats.append({
-            "superstep": i,
-            "active": int(gs.active_count),
-            "messages": int(gs.msg_count),
-            "wall_s": time.time() - ts,
-            "recompiled": this_recompiled,  # wall includes a jit compile
-        })
         if failure_injector is not None:
             failure_injector(i, vert, msg, gs)
         if checkpoint_every and i % checkpoint_every == 0 \
                 and checkpoint_dir:
             save_checkpoint(checkpoint_dir, i, vert, msg, gs)
         if on_superstep is not None:
-            on_superstep(i, vert, msg, gs, stats[-1])
+            on_superstep(i, vert, msg, gs, rec.as_dict())
         if bool(gs.halt):
             break
     return RunResult(vertex=vert, gs=gs, supersteps=i, stats=stats,
-                     wall_s=time.time() - t0)
+                     wall_s=time.time() - t0, plan=plan)
 
 
 def _regrow_msgs(msg: MsgRel, ec: EngineConfig) -> MsgRel:

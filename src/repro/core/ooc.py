@@ -22,25 +22,40 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.driver import RunResult, default_engine_config
+from repro.core.driver import (PlanArg, RunResult, _resolve_plan,
+                               default_engine_config)
 from repro.core.plan import PhysicalPlan
 from repro.core.program import VertexProgram
 from repro.core.relations import GlobalState, MsgRel, VertexRel, init_gs
 from repro.core.superstep import EngineConfig, make_superstep
 
+# the merging connector's receiver needs run-structured message capacity;
+# the OOC inbox re-packs messages into arbitrary-width blocks, so the
+# auto-planner only searches the plain partitioning connector here
+_OOC_PLAN_SPACE = {"connectors": ("partitioning",)}
+
 
 def run_out_of_core(vert: VertexRel, program: VertexProgram,
-                    plan: PhysicalPlan = PhysicalPlan(), *,
+                    plan: PlanArg = PhysicalPlan(), *,
                     budget_partitions: int,
                     max_supersteps: int = 50,
-                    ec: Optional[EngineConfig] = None) -> RunResult:
+                    ec: Optional[EngineConfig] = None,
+                    auto_config=None) -> RunResult:
     """budget_partitions = how many partitions fit in device memory at once
-    (the HBM budget). P % budget_partitions must be 0."""
+    (the HBM budget). P % budget_partitions must be 0. plan="auto" picks
+    the plan from the cost model and re-picks it at superstep boundaries
+    (messages live host-side between supersteps, so a switch is just a
+    re-jit — no in-flight layout migration)."""
+    from repro.planner.stats import StatsCollector
+
     t0 = time.time()
     P, Np = vert.vid.shape
     assert P % budget_partitions == 0
     n_sp = P // budget_partitions
     sp = budget_partitions
+    plan, controller = _resolve_plan(vert, program, plan, adaptive=True,
+                                     ec=ec, auto_config=auto_config,
+                                     auto_space=_OOC_PLAN_SPACE)
     ec = ec or default_engine_config(vert, program, plan)
     ec = dataclasses.replace(ec, ooc_collect=True)
     step = jax.jit(make_superstep(program, plan, ec))
@@ -61,6 +76,10 @@ def run_out_of_core(vert: VertexRel, program: VertexProgram,
     C = ec.bucket_cap
     # per-destination-partition host message queues
     inbox = [[] for _ in range(P)]
+    n_live = (controller.g.n_vertices if controller is not None
+              else int((host["vid"] >= 0).sum()))
+    coll = StatsCollector(n_partitions=P, vertex_capacity=Np, msg_dims=D,
+                          n_vertices=n_live)
     stats = []
     i = 0
     delta_bytes = full_bytes = 0
@@ -134,13 +153,32 @@ def run_out_of_core(vert: VertexRel, program: VertexProgram,
                          overflow=gs.overflow,
                          active_count=jnp.asarray(active, jnp.int32),
                          msg_count=jnp.asarray(msg_count, jnp.int32))
-        stats.append({"superstep": i, "active": active,
-                      "messages": msg_count,
-                      "wall_s": time.time() - ts,
-                      "delta_bytes": delta_bytes,
-                      "full_bytes": full_bytes})
+        rec = coll.record(i, active=active, messages=msg_count,
+                          wall_s=time.time() - ts,
+                          delta_bytes=delta_bytes, full_bytes=full_bytes)
+        stats.append(rec.as_dict())
+        if controller is not None and not bool(gs.halt):
+            new_plan = controller.observe(rec, bucket_cap=ec.bucket_cap)
+            if new_plan is not None:
+                # keep the full frontier capacity: OOC has no overflow
+                # regrow path, so a refit that the frontier later outgrows
+                # would abort the run (ROADMAP open item). Bucket capacity
+                # CAN only grow here — dropping the sender combine needs
+                # room for uncombined sends, and inter-superstep messages
+                # live host-side so a re-jit is all it takes.
+                plan = new_plan
+                need = default_engine_config(vert, program, plan)
+                if need.bucket_cap > ec.bucket_cap:
+                    ec = dataclasses.replace(ec,
+                                             bucket_cap=need.bucket_cap)
+                step = jax.jit(make_superstep(program, plan, ec))
+                stats.append(coll.event(
+                    i, "plan-switch", join=plan.join,
+                    groupby=plan.groupby, connector=plan.connector,
+                    sender_combine=plan.sender_combine,
+                    frontier_cap=ec.frontier_cap).as_dict())
         if bool(gs.halt):
             break
     final = VertexRel(**{k: jnp.asarray(host[k]) for k in host})
     return RunResult(vertex=final, gs=gs, supersteps=i, stats=stats,
-                     wall_s=time.time() - t0)
+                     wall_s=time.time() - t0, plan=plan)

@@ -71,3 +71,20 @@ DEFAULT_PLAN = PhysicalPlan()
 # the paper's Figure 9 hints for SSSP: left-outer join + unmerged connector
 SPARSE_PLAN = PhysicalPlan(join="left_outer", groupby="scatter",
                            connector="partitioning")
+
+# left-outer frontier capacities never refit below this floor
+FRONTIER_FLOOR = 64
+
+
+def bucket_capacity(plan: PhysicalPlan, edge_capacity: int,
+                    vertex_capacity: int, n_parts: int, *,
+                    slack: float = 1.5) -> int:
+    """Per-(src,dst)-partition message bucket capacity for `plan`. The
+    single capacity policy shared by the drivers (default_engine_config)
+    and the planner's cost model — their agreement is what makes modeled
+    plan costs realizable at switch time."""
+    cap = int((edge_capacity / n_parts + 8) * slack)
+    if plan.sender_combine:
+        # after sender-side combining, <= Np distinct receivers per bucket
+        cap = min(cap, vertex_capacity + 8)
+    return max(cap, 8)

@@ -47,7 +47,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        xla_cost = compiled.cost_analysis() or {}
+        xla_cost = hlo_cost.normalize_cost_analysis(compiled.cost_analysis())
         cost = hlo_cost.analyze(compiled.as_text())
 
     tokens = cell.global_batch * (cell.seq_len if kind == "train" else

@@ -33,6 +33,17 @@ DTYPE_BYTES = {
     "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
 }
 
+def normalize_cost_analysis(ca) -> dict:
+    """``Compiled.cost_analysis()`` returns a dict on older JAX and a
+    one-element list of dicts on newer JAX (one per executable). Normalize
+    to a plain dict (empty when unavailable)."""
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return dict(ca)
+
+
 _LAYOUT_RE = re.compile(r"(?<=\])\{[\d,]*\}")
 _SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
 _OPCODE_RE = re.compile(r"[\s=]([a-z][a-z0-9\-]*)\(")

@@ -36,10 +36,17 @@ GRAPH_SCALES = {
 }
 
 
-def abstract_graph_state(n_vertices: int, n_edges: int, P_total: int,
-                         program, plan: PhysicalPlan, mesh):
+def dryrun_capacities(n_vertices: int, n_edges: int, P_total: int):
+    """Per-partition vertex/edge slot capacities the dry-run lowers with
+    (the load_graph slack factors applied to uniform partitioning)."""
     Np = int(math.ceil(n_vertices / P_total * 1.3)) + 1
     Ep = int(math.ceil(n_edges / P_total * 1.2)) + 1
+    return Np, Ep
+
+
+def abstract_graph_state(n_vertices: int, n_edges: int, P_total: int,
+                         program, plan: PhysicalPlan, mesh):
+    Np, Ep = dryrun_capacities(n_vertices, n_edges, P_total)
     if plan.sender_combine:
         cap = min(int((Ep / P_total + 8) * 1.5), Np + 8)
     else:
@@ -70,12 +77,25 @@ def abstract_graph_state(n_vertices: int, n_edges: int, P_total: int,
 
 
 def pregel_dryrun(algo: str, scale: str, mesh_kind: str,
-                  plan: PhysicalPlan) -> dict:
+                  plan) -> dict:
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     P_total = mesh.devices.size
     axes = tuple(mesh.axis_names)
     n_v, n_e = GRAPH_SCALES[scale]
     program = ALGOS[algo](n_v)
+    if plan == "auto":
+        # static choice at superstep-0 statistics (all vertices active);
+        # the host drivers re-choose mid-run, the dry-run cannot
+        from repro.planner import GraphStats, Observation, choose
+        Np, Ep = dryrun_capacities(n_v, n_e, P_total)
+        g = GraphStats(n_vertices=n_v, n_edges=n_e, n_partitions=P_total,
+                       vertex_capacity=Np, edge_capacity=Ep,
+                       value_dims=program.value_dims,
+                       msg_dims=program.msg_dims)
+        plan, _ = choose(program, g, Observation(frontier_density=1.0))
+        print(f"  auto-plan -> join={plan.join} groupby={plan.groupby} "
+              f"connector={plan.connector} "
+              f"sender_combine={plan.sender_combine}", flush=True)
     vert, msg, gs, ec = abstract_graph_state(n_v, n_e, P_total, program,
                                              plan, mesh)
     step = make_superstep(program, plan, ec)
@@ -86,9 +106,16 @@ def pregel_dryrun(algo: str, scale: str, mesh_kind: str,
     in_specs = (spec_of(vert, axes), spec_of(msg, axes),
                 jax.tree.map(lambda x: P(), gs))
     out_specs = in_specs
-    from jax import shard_map
-    fn = shard_map(step, mesh=mesh, in_specs=in_specs,
-                   out_specs=out_specs, check_vma=False)
+    try:
+        from jax import shard_map
+    except ImportError:   # JAX < 0.6 keeps shard_map in experimental
+        from jax.experimental.shard_map import shard_map
+    try:
+        fn = shard_map(step, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    except TypeError:     # older shard_map spells check_vma check_rep
+        fn = shard_map(step, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
 
     t0 = time.time()
     with mesh:
@@ -137,6 +164,9 @@ def main():
     ap.add_argument("--connector", default="partitioning")
     ap.add_argument("--sender-combine", type=int, default=1)
     ap.add_argument("--partition", default="hash", choices=["hash","range"])
+    ap.add_argument("--auto-plan", action="store_true",
+                    help="let the cost-based planner pick (and, in the "
+                         "real-run mode, mid-run re-pick) the plan")
     ap.add_argument("--tag", default="baseline")
     ap.add_argument("--out", default="results/dryrun")
     # non-dryrun demo mode
@@ -144,10 +174,11 @@ def main():
     ap.add_argument("--parts", type=int, default=4)
     args = ap.parse_args()
 
-    plan = PhysicalPlan(join=args.join, groupby=args.groupby,
-                        connector=args.connector,
-                        sender_combine=bool(args.sender_combine),
-                        partition=args.partition)
+    plan = "auto" if args.auto_plan else PhysicalPlan(
+        join=args.join, groupby=args.groupby,
+        connector=args.connector,
+        sender_combine=bool(args.sender_combine),
+        partition=args.partition)
     if args.dryrun:
         out_dir = Path(args.out)
         out_dir.mkdir(parents=True, exist_ok=True)
@@ -185,7 +216,19 @@ def main():
     vals = gather_values(res.vertex, n)
     print(f"{args.algo} on {args.dataset}: {res.supersteps} supersteps, "
           f"{res.wall_s:.2f}s wall")
-    print("per-superstep:", [round(s['wall_s'], 3) for s in res.stats])
+    if args.auto_plan:
+        switches = [s for s in res.stats
+                    if s.get("event") == "plan-switch"]
+        print(f"final plan: join={res.plan.join} "
+              f"groupby={res.plan.groupby} "
+              f"connector={res.plan.connector} "
+              f"sender_combine={res.plan.sender_combine}; "
+              f"{len(switches)} plan switch(es)")
+        for s in switches:
+            print(f"  superstep {s['superstep']}: -> join={s['join']} "
+                  f"sender_combine={s['sender_combine']}")
+    print("per-superstep:", [round(s['wall_s'], 3) for s in res.stats
+                             if 'wall_s' in s])
     print("value head:", vals[:5, 0])
 
 

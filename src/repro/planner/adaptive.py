@@ -1,0 +1,140 @@
+"""Mid-run replanning (the "runtime picks the right execution" story).
+
+At each superstep boundary the host driver feeds the latest
+``SuperstepStats`` record to an ``AdaptiveController``. When the observed
+frontier density pushes a different plan below the current one in the cost
+model — by a hysteresis margin, for ``patience`` consecutive supersteps,
+and outside a post-switch ``cooldown`` — the controller proposes the
+switch. The driver then migrates the in-flight ``MsgRel`` to the layout
+the new plan's receiver expects (``migrate_msgs``, the connector analogue
+of ``driver._regrow_msgs``'s capacity migration) and recompiles the
+superstep. Hysteresis keeps recompiles amortized: a switch only pays off
+over many supersteps, so we never thrash on noisy density estimates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from repro.core.plan import PhysicalPlan
+from repro.core.relations import MsgRel
+from repro.planner.cost import (DEFAULT_MACHINE, GraphStats, MachineModel,
+                                Observation, estimate)
+from repro.planner.optimizer import choose
+from repro.planner.stats import SuperstepStats
+
+
+@dataclass(frozen=True)
+class AdaptiveConfig:
+    margin: float = 0.2      # candidate must model >=20% faster to switch
+    patience: int = 2        # consecutive supersteps preferring it
+    cooldown: int = 3        # min supersteps between switches
+    min_superstep: int = 1   # never switch before this superstep
+
+
+class AdaptiveController:
+    """Tracks the current plan and decides switches from observed stats."""
+
+    def __init__(self, program, g: GraphStats, plan: PhysicalPlan,
+                 config: AdaptiveConfig = AdaptiveConfig(), *,
+                 machine: MachineModel = DEFAULT_MACHINE,
+                 space_kw: Optional[dict] = None):
+        self.program = program
+        self.g = g
+        self.plan = plan
+        self.config = config
+        self.machine = machine
+        self.space_kw = space_kw or {}
+        self.switches: list = []     # (superstep, old_plan, new_plan)
+        self._want: Optional[PhysicalPlan] = None
+        self._streak = 0
+        self._last_switch = -10 ** 9
+
+    def observe(self, rec: SuperstepStats, *,
+                bucket_cap: int = 0) -> Optional[PhysicalPlan]:
+        """Returns the new plan when a switch is warranted, else None.
+        On a switch the controller's own `plan` is already updated.
+        `bucket_cap` = the engine's live bucket capacity, flooring every
+        candidate's modeled message capacity (buckets only grow)."""
+        cfg = self.config
+        obs = Observation(frontier_density=rec.frontier_density,
+                          messages=rec.messages, superstep=rec.superstep,
+                          bucket_cap=bucket_cap)
+        best, best_cost = choose(self.program, self.g, obs,
+                                 base=self.plan, machine=self.machine,
+                                 **self.space_kw)
+        cur_s = estimate(self.plan, self.g, obs,
+                         self.machine).seconds(self.machine)
+        if best == self.plan or \
+                cur_s <= best_cost.seconds(self.machine) * (1 + cfg.margin):
+            self._want, self._streak = None, 0
+            return None
+        if best != self._want:
+            self._want, self._streak = best, 1
+        else:
+            self._streak += 1
+        if (self._streak >= cfg.patience
+                and rec.superstep >= cfg.min_superstep
+                and rec.superstep - self._last_switch >= cfg.cooldown):
+            old = self.plan
+            self.plan = best
+            self._last_switch = rec.superstep
+            self._want, self._streak = None, 0
+            self.switches.append((rec.superstep, old, best))
+            return best
+        return None
+
+
+def migrate_msgs(msg: MsgRel, old_plan: PhysicalPlan,
+                 new_plan: PhysicalPlan, n_parts: int) -> MsgRel:
+    """Migrate in-flight messages between connector layouts.
+
+    The merging connector's receiver treats the message relation as
+    n_parts presorted runs; messages produced under the plain partitioning
+    connector (without a sender combine, which also leaves dst ascending)
+    are unsorted within each run. Sorting each run once here is the
+    one-off cost of the switch — every later superstep produces the new
+    layout natively. No-op when the new receiver has no order assumption
+    or the capacity is not run-structured (then the switch is vetoed by
+    the caller anyway)."""
+    import jax.numpy as jnp
+
+    needs_runs = new_plan.connector == "partitioning_merging"
+    already = (old_plan.connector == "partitioning_merging"
+               or old_plan.sender_combine)
+    if not needs_runs or already or msg.capacity % n_parts:
+        return msg
+    P, cap = msg.dst.shape
+    C = cap // n_parts
+    key = jnp.where(msg.valid, msg.dst,
+                    jnp.iinfo(jnp.int32).max).reshape(P, n_parts, C)
+    order = jnp.argsort(key, axis=-1, stable=True)
+    take = lambda a: jnp.take_along_axis(
+        a.reshape((P, n_parts, C) + a.shape[2:]),
+        order[..., None] if a.ndim == 3 else order, axis=2
+    ).reshape((P, cap) + a.shape[2:])
+    return MsgRel(dst=take(msg.dst), payload=take(msg.payload),
+                  valid=take(msg.valid))
+
+
+def resolve_auto_plan(vert, program, *,
+                      base: Optional[PhysicalPlan] = None,
+                      adaptive: bool = True,
+                      config: AdaptiveConfig = AdaptiveConfig(),
+                      machine: MachineModel = DEFAULT_MACHINE,
+                      space_kw: Optional[dict] = None,
+                      ) -> Tuple[PhysicalPlan, Optional[AdaptiveController]]:
+    """Entry point for drivers' ``plan="auto"``: pick the initial plan for
+    superstep 0 (Pregel activates EVERY vertex, so density starts at 1.0)
+    and, when `adaptive`, the controller that re-chooses mid-run."""
+    if base is not None and base.frontier_capacity != 1.0:
+        # superstep 0 must cover all vertices under left-outer
+        base = dataclasses.replace(base, frontier_capacity=1.0)
+    g = GraphStats.from_vertex(vert, program)
+    plan, _ = choose(program, g, Observation(frontier_density=1.0),
+                     base=base, machine=machine, **(space_kw or {}))
+    if not adaptive:
+        return plan, None
+    return plan, AdaptiveController(program, g, plan, config,
+                                    machine=machine, space_kw=space_kw)

@@ -1,0 +1,242 @@
+"""Analytical per-superstep cost model over the physical plan space.
+
+The engine executes STATIC shapes, so cost scales with the capacities a
+plan implies, not with live tuple counts: a full-outer join always touches
+every vertex slot; a left-outer join touches the (adaptively refitted)
+frontier capacity, which tracks observed frontier density. The model
+mirrors the capacity policies in ``core/driver.py`` (``default_engine_config``
+bucket caps, the frontier-refit rule) and the operator structure of
+``core/superstep.py``, then converts flops / HBM bytes / exchange bytes to
+seconds with the dry-run machine model (``launch/dryrun.py`` roofline
+constants). ``hlo_calibrate`` cross-checks the capacity terms against the
+trip-count-aware HLO analyzer (``launch/hlo_cost.py``) on a lowered
+superstep.
+
+Only RANKING between plans matters for the optimizer; absolute seconds are
+the single-chip roofline bound, a lower bound on real wall time.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from repro.core.plan import FRONTIER_FLOOR, PhysicalPlan, bucket_capacity
+
+WORD = 4          # bytes per int32/float32 element
+K_COMPUTE = 8.0   # flops per element of a fused elementwise UDF stage
+K_SCATTER = 4.0   # random gather/scatter amplification: each access moves
+                  # a cache line / memory transaction, not one element
+# sorts are memory-bound: effective read+write passes over the keyed
+# payload per sort = SORT_PASS_FRAC * log2(n) (cache-resident merge
+# passes cost well under a full memory round-trip each)
+SORT_PASS_FRAC = 0.25
+FRONTIER_SLACK = 2.0   # refit keeps 2x headroom over the live frontier
+MIN_FRONTIER = FRONTIER_FLOOR   # the driver's refit floor
+
+
+@dataclass(frozen=True)
+class MachineModel:
+    """Roofline constants (defaults: TPU v5e, as in launch/dryrun.py)."""
+    peak_flops: float = 197e12   # bf16 flops/s per chip
+    hbm_bw: float = 819e9        # bytes/s per chip
+    link_bw: float = 50e9        # bytes/s per ICI link
+
+
+DEFAULT_MACHINE = MachineModel()
+# emulated transport (single host): the "exchange" is a transpose through
+# memory, not an ICI hop — the host drivers plan with this model
+EMULATED_MACHINE = MachineModel(link_bw=DEFAULT_MACHINE.hbm_bw)
+
+
+@dataclass(frozen=True)
+class GraphStats:
+    """Static per-job facts the cost model needs (paper Table 1 shapes)."""
+    n_vertices: int
+    n_edges: int
+    n_partitions: int
+    vertex_capacity: int   # Np: slots per partition
+    edge_capacity: int     # Ep: edge slots per partition
+    value_dims: int = 1
+    msg_dims: int = 1
+
+    @classmethod
+    def from_vertex(cls, vert, program) -> "GraphStats":
+        import numpy as np
+        P, Np = vert.vid.shape
+        n_v = int(np.asarray(vert.vid >= 0).sum())
+        n_e = int(np.asarray(vert.edge_src >= 0).sum())
+        return cls(n_vertices=n_v, n_edges=n_e, n_partitions=P,
+                   vertex_capacity=Np,
+                   edge_capacity=vert.edge_src.shape[1],
+                   value_dims=program.value_dims,
+                   msg_dims=program.msg_dims)
+
+
+@dataclass(frozen=True)
+class Observation:
+    """Runtime statistics the model conditions on (from planner.stats)."""
+    frontier_density: float = 1.0   # active fraction of LIVE vertices
+    messages: int = 0               # live messages last superstep (total)
+    superstep: int = 0
+    # live per-(src,dst) bucket capacity (0 = unknown/initial): running
+    # drivers only GROW buckets, so a candidate plan cannot realize a
+    # smaller message capacity than the engine already carries
+    bucket_cap: int = 0
+
+
+@dataclass
+class PlanCost:
+    flops: float = 0.0
+    bytes: float = 0.0            # HBM traffic per partition
+    exchange_bytes: float = 0.0   # cross-partition link bytes
+    terms: dict = field(default_factory=dict)   # per-operator seconds
+
+    def add(self, term: str, machine: MachineModel, *, flops: float = 0.0,
+            bytes: float = 0.0, exchange_bytes: float = 0.0):
+        self.flops += flops
+        self.bytes += bytes
+        self.exchange_bytes += exchange_bytes
+        self.terms[term] = self.terms.get(term, 0.0) + (
+            flops / machine.peak_flops + bytes / machine.hbm_bw +
+            exchange_bytes / machine.link_bw)
+
+    def seconds(self, machine: MachineModel = DEFAULT_MACHINE) -> float:
+        return (self.flops / machine.peak_flops +
+                self.bytes / machine.hbm_bw +
+                self.exchange_bytes / machine.link_bw)
+
+
+def bucket_cap(plan: PhysicalPlan, g: GraphStats, slack: float = 1.5) -> int:
+    """The drivers' per-bucket capacity policy (core.plan.bucket_capacity)
+    at this graph's shapes."""
+    return bucket_capacity(plan, g.edge_capacity, g.vertex_capacity,
+                           g.n_partitions, slack=slack)
+
+
+def refit_frontier_cap(g: GraphStats, density: float) -> int:
+    """Frontier capacity the driver's adaptive refit converges to.
+    `density` is the active fraction of LIVE vertices."""
+    live_pp = density * g.n_vertices / max(g.n_partitions, 1)
+    return int(min(g.vertex_capacity,
+                   max(MIN_FRONTIER, FRONTIER_SLACK * live_pp)))
+
+
+def _sort_bytes(n: float, width: float) -> float:
+    """Memory traffic of one argsort+permute over n keyed rows of `width`
+    bytes (log-pass model; see SORT_PASS_FRAC)."""
+    n = max(n, 2.0)
+    return SORT_PASS_FRAC * math.log2(n) * n * width
+
+
+def estimate(plan: PhysicalPlan, g: GraphStats, obs: Observation,
+             machine: MachineModel = DEFAULT_MACHINE) -> PlanCost:
+    """Per-superstep, per-partition cost of running `plan` at the observed
+    statistics. Follows superstep.py's operator order D1..D3."""
+    P, Np, Ep = g.n_partitions, g.vertex_capacity, g.edge_capacity
+    D, V = g.msg_dims, g.value_dims
+    f = min(max(obs.frontier_density, 1.0 / max(Np, 1)), 1.0)
+    c = PlanCost()
+    cap = max(bucket_cap(plan, g), obs.bucket_cap)
+    M = P * cap                       # received message capacity
+    msg_w = (1 + D) * WORD + 1        # dst + payload + valid per slot
+
+    # D1: receiver group-by over the full message capacity
+    if plan.connector == "partitioning_merging":
+        # presorted runs: one segmented scan, then a scatter of the <=1
+        # surviving partial per (run, dst) — run_combine_dense
+        c.add("recv_groupby", machine, flops=K_COMPUTE * M * D,
+              bytes=(1 + K_SCATTER) * M * msg_w)
+    elif plan.groupby == "sort":
+        c.add("recv_groupby", machine, flops=K_COMPUTE * M * D,
+              bytes=_sort_bytes(M, msg_w) + M * msg_w)
+    else:  # scatter (hash)
+        c.add("recv_groupby", machine, flops=K_COMPUTE * M * D,
+              bytes=K_SCATTER * M * msg_w)
+
+    # D1/D2: join + compute + write-back
+    if plan.join == "full_outer":
+        c.add("join_compute", machine, flops=K_COMPUTE * Np * (V + D),
+              bytes=Np * (2 * V + D + 1) * WORD)
+        e_work = Ep
+    else:
+        F = refit_frontier_cap(g, f)
+        # mask scan + cumsum over all slots, edge-gate prepass over all
+        # edges, then gather/compute/scatter-back only F rows
+        c.add("join_compute", machine,
+              flops=K_COMPUTE * F * (V + D),
+              bytes=(Np + Ep) * WORD +
+              K_SCATTER * F * (2 * V + D + 1) * WORD)
+        # gen_messages compacts the edge stream to EF = min(8F, Ep); when
+        # the live frontier's edges (~f*Ep) outgrow that, the driver's
+        # overflow-regrow doubles the capacity until they fit, so the
+        # effective edge work is bounded below by the live edge count
+        e_work = min(max(8 * F, MIN_FRONTIER, f * Ep), Ep)
+
+    # D3: edge-parallel payload generation
+    c.add("send", machine, flops=K_COMPUTE * e_work * D,
+          bytes=K_SCATTER * e_work * (V + D + 2) * WORD)
+
+    # D3/D7: sender combine = sort + segmented fold over the edge stream
+    if plan.sender_combine:
+        c.add("sender_combine", machine, flops=K_COMPUTE * e_work * D,
+              bytes=_sort_bytes(e_work, msg_w) + e_work * msg_w)
+
+    # connector bucket build (bucket_by_owner): the merging connector
+    # with hash partitioning sorts twice (by dst, then stably by owner);
+    # range partitioning needs one dst sort — or none when the sender
+    # combine already left the stream dst-ascending (owners contiguous);
+    # the plain hash connector sorts once by owner
+    if plan.partition == "range":
+        n_sorts = 0 if plan.sender_combine else 1
+    elif plan.connector == "partitioning_merging":
+        n_sorts = 2
+    else:
+        n_sorts = 1
+    c.add("connector", machine, flops=K_COMPUTE * e_work,
+          bytes=n_sorts * _sort_bytes(e_work, msg_w) +
+          K_SCATTER * e_work * msg_w)
+
+    # exchange: fixed-capacity buckets cross the links whole
+    c.add("exchange", machine,
+          exchange_bytes=M * msg_w * (P - 1) / max(P, 1))
+    return c
+
+
+def hlo_calibrate(program, plan: PhysicalPlan, g: GraphStats,
+                  obs: Observation = Observation()) -> "object":
+    """Lower one emulated superstep at the capacities `estimate` assumes
+    and measure it with the trip-count-aware HLO analyzer — the ground
+    truth the analytic constants are calibrated against. Returns a
+    ``launch.hlo_cost.Cost``. Compile-time heavy; used by benchmarks and
+    calibration tests, not by the per-superstep optimizer loop."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.relations import GlobalState, MsgRel, VertexRel
+    from repro.core.superstep import EngineConfig, make_superstep
+    from repro.launch import hlo_cost
+
+    cap = bucket_cap(plan, g)
+    ec = EngineConfig(n_parts=g.n_partitions, bucket_cap=cap,
+                      frontier_cap=refit_frontier_cap(
+                          g, obs.frontier_density))
+    step = make_superstep(program, plan, ec)
+    P, Np, Ep = g.n_partitions, g.vertex_capacity, g.edge_capacity
+    sds = jax.ShapeDtypeStruct
+    vert = VertexRel(vid=sds((P, Np), jnp.int32),
+                     halt=sds((P, Np), jnp.bool_),
+                     value=sds((P, Np, g.value_dims), jnp.float32),
+                     edge_src=sds((P, Ep), jnp.int32),
+                     edge_dst=sds((P, Ep), jnp.int32),
+                     edge_val=sds((P, Ep), jnp.float32))
+    msg = MsgRel(dst=sds((P, P * cap), jnp.int32),
+                 payload=sds((P, P * cap, g.msg_dims), jnp.float32),
+                 valid=sds((P, P * cap), jnp.bool_))
+    gs = GlobalState(halt=sds((), jnp.bool_),
+                     aggregate=sds((program.agg_dims,), jnp.float32),
+                     superstep=sds((), jnp.int32),
+                     overflow=sds((), jnp.int32),
+                     active_count=sds((), jnp.int32),
+                     msg_count=sds((), jnp.int32))
+    compiled = jax.jit(step).lower(vert, msg, gs).compile()
+    return hlo_cost.analyze(compiled.as_text())

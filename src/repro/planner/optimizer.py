@@ -1,0 +1,67 @@
+"""Plan-space enumeration + min-cost selection (the paper hand-tunes its
+Section 5.3 plan choices per algorithm in Figure 9; this module derives
+them from statistics instead).
+
+The space is join x group-by x connector x sender_combine from
+``core/plan.py``, pruned by ``PhysicalPlan.validate`` (e.g. the scatter /
+hash group-by cannot run a custom combine UDF). Storage, partitioning and
+merge cadence are inherited from the base plan: they are load-time /
+driver-level choices, not per-superstep ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional, Tuple
+
+from repro.core.plan import DEFAULT_PLAN, PhysicalPlan
+from repro.planner.cost import (DEFAULT_MACHINE, GraphStats, MachineModel,
+                                Observation, PlanCost, estimate)
+
+JOINS = ("full_outer", "left_outer")
+GROUPBYS = ("scatter", "sort")
+CONNECTORS = ("partitioning", "partitioning_merging")
+
+
+def plan_space(program, base: Optional[PhysicalPlan] = None, *,
+               joins: Tuple[str, ...] = JOINS,
+               groupbys: Tuple[str, ...] = GROUPBYS,
+               connectors: Tuple[str, ...] = CONNECTORS,
+               sender_combines: Tuple[bool, ...] = (True, False),
+               ) -> Iterator[PhysicalPlan]:
+    """Valid plans for `program`, varying the per-superstep dimensions of
+    `base`. Invalid combinations are pruned via PhysicalPlan.validate."""
+    base = base if base is not None else DEFAULT_PLAN
+    for join in joins:
+        for groupby in groupbys:
+            for connector in connectors:
+                for sc in sender_combines:
+                    plan = dataclasses.replace(
+                        base, join=join, groupby=groupby,
+                        connector=connector, sender_combine=sc)
+                    try:
+                        plan.validate(program.combine_op)
+                    except ValueError:
+                        continue
+                    yield plan
+
+
+def rank(program, g: GraphStats, obs: Observation, *,
+         base: Optional[PhysicalPlan] = None,
+         machine: MachineModel = DEFAULT_MACHINE,
+         **space_kw) -> List[Tuple[PhysicalPlan, PlanCost]]:
+    """All valid plans, cheapest first, with their modeled costs."""
+    scored = [(p, estimate(p, g, obs, machine))
+              for p in plan_space(program, base, **space_kw)]
+    if not scored:
+        raise ValueError(
+            f"no valid physical plan for combine_op="
+            f"{program.combine_op!r} in the restricted space {space_kw!r}")
+    return sorted(scored, key=lambda pc: pc[1].seconds(machine))
+
+
+def choose(program, g: GraphStats, obs: Observation, *,
+           base: Optional[PhysicalPlan] = None,
+           machine: MachineModel = DEFAULT_MACHINE,
+           **space_kw) -> Tuple[PhysicalPlan, PlanCost]:
+    """Min-cost plan for the given graph/program statistics."""
+    return rank(program, g, obs, base=base, machine=machine, **space_kw)[0]
