@@ -1,23 +1,35 @@
 """Paper Figure 10 (the headline claim): graceful in-memory -> out-of-core
-degradation. We fix the graph and shrink the device-memory budget
+degradation, plus the OOC auto-planner race.
+
+Part 1 fixes the graph and shrinks the device-memory budget
 (budget_partitions): in-memory (budget=P) vs increasingly streamed
 executions. Process-centric systems fall off a cliff past ratio 1.0; an
 out-of-core dataflow degrades with a gentle slope. Also measures the
-delta-storage (LSM analogue) writeback savings."""
+delta-storage (LSM analogue) writeback savings.
+
+Part 2 races ``plan="auto"`` against representative static plans OUT-OF-
+CORE — the full join x group-by x connector x sender-combine x storage
+space is searchable there now — and reports auto's steady-state slowdown
+vs the best static plan plus any mid-run connector/storage picks.
+
+``--smoke`` runs a tiny config (CI keeps the OOC path and the README
+examples honest without burning minutes).
+"""
 from __future__ import annotations
 
+import argparse
 import dataclasses
 
 from repro.core import PhysicalPlan, load_graph, run_host
 from repro.core.ooc import run_out_of_core
-from repro.graph import PageRank, rmat_graph
+from repro.graph import SSSP, PageRank, rmat_graph
+from repro.graph.generators import grid_graph
 
 from benchmarks.common import record, time_supersteps
 
 
-def main(scale: int = 1):
-    n = 16_000 * scale
-    P = 8
+def budget_sweep(scale: float, P: int = 8):
+    n = max(int(16_000 * scale), 16 * P)
     edges = rmat_graph(n, 10 * n, seed=4)
     prog = PageRank(n, iterations=6)
     plan = prog.suggested_plan
@@ -36,7 +48,6 @@ def main(scale: int = 1):
         record(f"ooc/budget_ratio_{ratio:g}x", t * 1e6,
                f"slowdown_vs_mem={t / t_mem:.2f}")
     # delta vs full writeback (LSM analogue) on a sparse-update workload
-    from repro.graph import SSSP
     sp = SSSP(source=0)
     for storage in ("inplace", "delta"):
         vert3 = load_graph(edges, n, P=P, value_dims=1)
@@ -52,5 +63,72 @@ def main(scale: int = 1):
     return out
 
 
+def auto_race(scale: float, P: int = 8):
+    """plan='auto' vs representative static plans, out-of-core."""
+    n_pr = max(int(16_000 * scale), 16 * P)
+    side = max(int(40 * scale ** 0.5), 12)
+    workloads = [
+        # message-dense, every value changes -> inplace/full_outer regime
+        ("pagerank", PageRank(n_pr, iterations=6), 2, 8,
+         rmat_graph(n_pr, 10 * n_pr, seed=4), n_pr),
+        # high-diameter lattice: frontier + change density collapse ->
+        # the left_outer + delta regime the planner must discover
+        ("sssp_lattice", SSSP(source=0), 1, 100,
+         grid_graph(side), side * side),
+    ]
+    out = {}
+    for name, prog, vd, ms, edges, n in workloads:
+        base = prog.suggested_plan
+        statics = {
+            "suggested": base,
+            "merging": dataclasses.replace(
+                base, connector="partitioning_merging"),
+            "delta": dataclasses.replace(base, storage="delta"),
+            "full_outer_inplace": dataclasses.replace(
+                base, join="full_outer", storage="inplace"),
+        }
+        times = {}
+        for cname, plan in statics.items():
+            vert = load_graph(edges, n, P=P, value_dims=vd)
+            res = run_out_of_core(vert, prog, plan,
+                                  budget_partitions=P // 2,
+                                  max_supersteps=ms)
+            times[cname] = time_supersteps(res)
+        vert = load_graph(edges, n, P=P, value_dims=vd)
+        auto = run_out_of_core(vert, prog, "auto",
+                               budget_partitions=P // 2, max_supersteps=ms)
+        t_auto = time_supersteps(auto)
+        best_name = min(times, key=times.get)
+        best = times[best_name]
+        switches = [s for s in auto.stats
+                    if s.get("event") == "plan-switch"]
+        picked_merging = (auto.plan.connector == "partitioning_merging" or
+                          any(s.get("connector") == "partitioning_merging"
+                              for s in switches))
+        picked_delta = (auto.plan.storage == "delta" or
+                        any(s.get("storage") == "delta" for s in switches))
+        record(f"ooc/auto_{name}", t_auto * 1e6,
+               f"vs_best_static({best_name})={t_auto / best:.2f},"
+               f"switches={len(switches)},merging={picked_merging},"
+               f"delta={picked_delta}")
+        out[name] = {"auto": t_auto, "best_static": best,
+                     "ratio": t_auto / best, "switches": len(switches),
+                     "picked_merging": picked_merging,
+                     "picked_delta": picked_delta,
+                     "final_plan": dataclasses.asdict(auto.plan)}
+    return out
+
+
+def main(scale: float = 1.0):
+    out = budget_sweep(scale)
+    out["auto"] = auto_race(scale)
+    return out
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for CI (graph ~800 vertices)")
+    args = ap.parse_args()
+    main(0.05 if args.smoke else args.scale)

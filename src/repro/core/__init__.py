@@ -3,7 +3,8 @@ iterative dataflow of relational operators (join + group-by + connectors)
 with physical plan flexibility."""
 from repro.core.driver import (RunResult, default_engine_config, run_host,
                                run_jit)
-from repro.core.plan import DEFAULT_PLAN, SPARSE_PLAN, PhysicalPlan
+from repro.core.plan import (DEFAULT_PLAN, SPARSE_PLAN, STORAGES,
+                             PhysicalPlan)
 from repro.core.program import ComputeOut, VertexProgram
 from repro.core.relations import (GlobalState, MsgRel, VertexRel,
                                   empty_msgs, gather_values, init_gs,
@@ -12,7 +13,7 @@ from repro.core.superstep import EngineConfig, make_superstep
 
 __all__ = [
     "RunResult", "default_engine_config", "run_host", "run_jit",
-    "DEFAULT_PLAN", "SPARSE_PLAN", "PhysicalPlan", "ComputeOut",
+    "DEFAULT_PLAN", "SPARSE_PLAN", "STORAGES", "PhysicalPlan", "ComputeOut",
     "VertexProgram", "GlobalState", "MsgRel", "VertexRel", "empty_msgs",
     "gather_values", "init_gs", "load_graph", "out_degrees",
     "EngineConfig", "make_superstep",

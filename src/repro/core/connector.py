@@ -28,7 +28,14 @@ def bucket_by_owner(dst, payload, valid, P: int, bucket_cap: int, *,
     partition="range" with presorted=True (input already dst-sorted, e.g.
     from the sender combine) skips the sort entirely — owners are
     contiguous in dst order.
-    Returns (b_dst (P,C), b_payload (P,C,D), b_valid (P,C), overflow ())."""
+    Returns (b_dst (P,C), b_payload (P,C,D), b_valid (P,C), overflow ()).
+
+    Layout contract (every code path below): valid entries occupy a
+    PREFIX of each bucket — positions are per-owner ranks 0..count-1, so
+    b_valid[p] is True on [0, count_p) and False after. The out-of-core
+    inbox (core/ooc.py) relies on this to trim and end-pad collected
+    buckets without disturbing run structure, and the in-memory regrow
+    path (driver._regrow_msgs) relies on it to widen runs in place."""
     K = dst.shape[0]
     D = payload.shape[-1]
     if partition == "range":

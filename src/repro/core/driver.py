@@ -203,6 +203,7 @@ def run_host(vert: VertexRel, program: VertexProgram,
                     i, "plan-switch", join=plan.join,
                     groupby=plan.groupby, connector=plan.connector,
                     sender_combine=plan.sender_combine,
+                    storage=plan.storage,
                     frontier_cap=ec.frontier_cap).as_dict())
                 recompiled = True
                 switched = True

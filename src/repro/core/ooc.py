@@ -8,9 +8,37 @@ budget) through the jitted partial superstep, collecting outgoing message
 buckets host-side (the "sender-side materializing pipelined" policy) and
 delivering them at the next superstep.
 
-storage="delta" (LSM analogue): only CHANGED vertex values are shipped
-back to the host each superstep instead of the full value array — the
-deferred-merge write path, right for sparse-update workloads.
+The host inbox is RUN-STRUCTURED: the per-super-partition bucket tensors
+coming off the device — ``(sp, P, C)`` with valid entries occupying a
+PREFIX of every ``(src, dst)`` bucket (``connector.bucket_by_owner``'s
+layout contract) — are stacked with one ``np.concatenate`` into
+``(P_src, P_dst, C)``, transposed to ``(P_dst, P_src, C)`` (the host-side
+analogue of the emulated exchange), and trimmed to the widest occupied
+run. No per-message Python iteration anywhere. Because each destination
+partition's message block is therefore exactly ``n_parts`` sender runs of
+equal width — dst-sorted whenever the sender sorts (merging connector, or
+the sender combine's dst-ascending output) — the merging receiver's
+run-capacity assumption holds host-side and ``plan="auto"`` searches the
+FULL join x group-by x connector x sender-combine x storage space here,
+switching any of them with a re-jit at a superstep boundary. Messages
+live host-side between supersteps, so the only in-flight migration that
+can ever be needed is a one-off dst-sort of each run when a switch
+adopts the merging receiver from an unsorted producer
+(``_sort_inbox_runs``, mirroring ``planner.adaptive.migrate_msgs``).
+
+storage="delta" (LSM analogue): only CHANGED vertex values are written
+back to the host store each superstep instead of the full value array —
+the deferred-merge write path, right for sparse-update workloads. Both
+policies' write-back bytes are measured every superstep and feed the cost
+model's storage dimension (``planner/cost.py`` ``storage_writeback``).
+
+Overflow (bucket, frontier, edge or mutation capacity) never aborts: the
+driver doubles the capacities and REDOES the current super-partition —
+host state is only committed after a clean step, so the regrow mirrors
+``driver.run_host``'s redo-from-retained-state (which likewise doubles
+bucket/mutation/frontier together: ``GlobalState.overflow`` aggregates
+all overflow sources, so the regrow cannot attribute one) and makes
+adaptive frontier refits safe out-of-core.
 """
 from __future__ import annotations
 
@@ -24,15 +52,60 @@ import numpy as np
 
 from repro.core.driver import (PlanArg, RunResult, _resolve_plan,
                                default_engine_config)
-from repro.core.plan import PhysicalPlan
+from repro.core.plan import FRONTIER_FLOOR, STORAGES, PhysicalPlan
 from repro.core.program import VertexProgram
 from repro.core.relations import GlobalState, MsgRel, VertexRel, init_gs
 from repro.core.superstep import EngineConfig, make_superstep
 
-# the merging connector's receiver needs run-structured message capacity;
-# the OOC inbox re-packs messages into arbitrary-width blocks, so the
-# auto-planner only searches the plain partitioning connector here
-_OOC_PLAN_SPACE = {"connectors": ("partitioning",)}
+# the OOC planner searches both storage policies on top of the full
+# per-superstep space (in-memory drivers inherit the base plan's storage:
+# they never pay a write-back, so the dimension would only produce ties)
+_OOC_AUTO_SPACE = {"storages": STORAGES}
+
+
+def _empty_inbox(P: int, D: int):
+    """Run-structured empty inbox: one invalid slot per (dst, src) run."""
+    return (np.full((P, P, 1), -1, np.int32),
+            np.zeros((P, P, 1, D), np.float32),
+            np.zeros((P, P, 1), bool))
+
+
+def _round_run_width(max_count: int, cap: int) -> int:
+    """Trim width for the inbox runs: next power of two >= the widest
+    occupied run, clamped to [1, bucket_cap]. Power-of-two rounding keeps
+    the set of distinct jitted message shapes logarithmic in cap, so the
+    jit cache amortizes across supersteps as the frontier breathes."""
+    w = 1
+    while w < max_count:
+        w *= 2
+    return max(1, min(w, cap))
+
+
+def _sort_inbox_runs(inbox):
+    """Sort every (dst, src) run of the host inbox by dst — the host-side
+    mirror of ``planner.adaptive.migrate_msgs`` for a mid-run switch onto
+    the merging connector when the previous plan produced UNSORTED runs
+    (plain partitioning without a sender combine). Invalid slots key as
+    int32 max, so the stable sort keeps valid entries a run prefix."""
+    d, p, v = inbox
+    key = np.where(v, d, np.iinfo(np.int32).max)
+    order = np.argsort(key, axis=2, kind="stable")
+    return (np.take_along_axis(d, order, axis=2),
+            np.take_along_axis(p, order[..., None], axis=2),
+            np.take_along_axis(v, order, axis=2))
+
+
+def _pad_run_width(block, C_new: int):
+    """End-pad a collected (sp, P, C_old) bucket block to C_old=C_new.
+    Valid entries occupy a prefix per bucket, so end-padding with invalid
+    slots preserves the run layout (cf. driver._regrow_msgs)."""
+    d, p, v = block
+    pad = C_new - d.shape[2]
+    if pad <= 0:
+        return block
+    return (np.pad(d, ((0, 0), (0, 0), (0, pad)), constant_values=-1),
+            np.pad(p, ((0, 0), (0, 0), (0, pad), (0, 0))),
+            np.pad(v, ((0, 0), (0, 0), (0, pad))))
 
 
 def run_out_of_core(vert: VertexRel, program: VertexProgram,
@@ -40,12 +113,14 @@ def run_out_of_core(vert: VertexRel, program: VertexProgram,
                     budget_partitions: int,
                     max_supersteps: int = 50,
                     ec: Optional[EngineConfig] = None,
-                    auto_config=None) -> RunResult:
+                    auto_config=None,
+                    auto_space: Optional[dict] = None) -> RunResult:
     """budget_partitions = how many partitions fit in device memory at once
     (the HBM budget). P % budget_partitions must be 0. plan="auto" picks
-    the plan from the cost model and re-picks it at superstep boundaries
-    (messages live host-side between supersteps, so a switch is just a
-    re-jit — no in-flight layout migration)."""
+    the plan from the cost model and re-picks it at superstep boundaries —
+    over the FULL plan space including connector and storage (messages
+    live host-side between supersteps in run-structured buffers, so any
+    switch is just a re-jit — no in-flight layout migration)."""
     from repro.planner.stats import StatsCollector
 
     t0 = time.time()
@@ -53,12 +128,18 @@ def run_out_of_core(vert: VertexRel, program: VertexProgram,
     assert P % budget_partitions == 0
     n_sp = P // budget_partitions
     sp = budget_partitions
-    plan, controller = _resolve_plan(vert, program, plan, adaptive=True,
-                                     ec=ec, auto_config=auto_config,
-                                     auto_space=_OOC_PLAN_SPACE)
+    plan, controller = _resolve_plan(
+        vert, program, plan, adaptive=True, ec=ec, auto_config=auto_config,
+        auto_space=_OOC_AUTO_SPACE if auto_space is None else auto_space)
     ec = ec or default_engine_config(vert, program, plan)
-    ec = dataclasses.replace(ec, ooc_collect=True)
+    # resolve frontier_cap=0 (the EngineConfig "Np/2" default) to its
+    # concrete value up front: the overflow regrow path doubles it, and
+    # 0 * 2 = 0 would re-jit the identical config forever
+    ec = dataclasses.replace(ec, ooc_collect=True,
+                             frontier_cap=ec.frontier_cap or
+                             max(Np // 2, 1))
     step = jax.jit(make_superstep(program, plan, ec))
+    seen_widths = set()   # inbox widths this `step` has already traced
 
     # host-resident state (the "disk")
     host = {k: np.array(getattr(vert, k)) for k in
@@ -73,9 +154,10 @@ def run_out_of_core(vert: VertexRel, program: VertexProgram,
         host["value"][sl] = np.asarray(vpart.value)
 
     D = program.msg_dims
-    C = ec.bucket_cap
-    # per-destination-partition host message queues
-    inbox = [[] for _ in range(P)]
+    # run-structured host inbox: dst (P_dst, P_src, C), payload, valid —
+    # row q holds P source runs, exactly the layout the receiver group-by
+    # sees in-memory after the exchange
+    inbox = _empty_inbox(P, D)
     n_live = (controller.g.n_vertices if controller is not None
               else int((host["vid"] >= 0).sum()))
     coll = StatsCollector(n_partitions=P, vertex_capacity=Np, msg_dims=D,
@@ -83,69 +165,96 @@ def run_out_of_core(vert: VertexRel, program: VertexProgram,
     stats = []
     i = 0
     delta_bytes = full_bytes = 0
+    recompiled = True  # first superstep includes the jit compile
     while i < max_supersteps:
         ts = time.time()
-        M_in = max(max((sum(len(a[0]) for a in inbox[q])
-                        for q in range(P)), default=1), 1)
-        new_inbox = [[] for _ in range(P)]
+        this_recompiled = recompiled
+        recompiled = False
+        in_dst, in_pay, in_val = inbox
+        C_in = in_dst.shape[2]
+        if C_in not in seen_widths:
+            # a new message width retraces inside jit: this superstep's
+            # wall time includes a compile
+            seen_widths.add(C_in)
+            this_recompiled = True
+        out_blocks = []   # per super-partition (dst, payload, valid) nd
         halt_all = True
-        msg_count = 0
-        overflow = 0
         active = 0
+        step_delta = step_full = 0
         agg = np.zeros((program.agg_dims,), np.float32)
-        for s in range(n_sp):
+        s = 0
+        while s < n_sp:
             sl = slice(s * sp, (s + 1) * sp)
             vpart = VertexRel(**{k: jnp.asarray(host[k][sl]) for k in host})
-            # build padded incoming message block for these partitions
-            md = np.full((sp, M_in), -1, np.int32)
-            mp = np.zeros((sp, M_in, D), np.float32)
-            mv = np.zeros((sp, M_in), bool)
-            for j in range(sp):
-                q = s * sp + j
-                pos = 0
-                for d_arr, p_arr in inbox[q]:
-                    c = len(d_arr)
-                    md[j, pos:pos + c] = d_arr
-                    mp[j, pos:pos + c] = p_arr
-                    mv[j, pos:pos + c] = True
-                    pos += c
-            msg = MsgRel(dst=jnp.asarray(md), payload=jnp.asarray(mp),
-                         valid=jnp.asarray(mv))
-            old_value = host["value"][sl].copy()
+            # incoming block: slice the run-structured inbox and flatten
+            # the (P_src, C_in) runs — already the receiver's layout
+            msg = MsgRel(
+                dst=jnp.asarray(in_dst[sl].reshape(sp, P * C_in)),
+                payload=jnp.asarray(in_pay[sl].reshape(sp, P * C_in, D)),
+                valid=jnp.asarray(in_val[sl].reshape(sp, P * C_in)))
             v2, buckets, g2 = step(vpart, msg, gs)
             jax.block_until_ready(g2.superstep)
-            # write back vertex state (delta vs full storage policy)
+            if int(g2.overflow) - int(gs.overflow) > 0:
+                # a bucket / frontier / edge / mutation capacity
+                # overflowed: host state for this super-partition is not
+                # yet committed, so double the capacities, re-jit, pad the
+                # already-collected blocks and REDO this super-partition
+                # (the OOC mirror of run_host's regrow-and-redo)
+                ec = dataclasses.replace(
+                    ec, bucket_cap=ec.bucket_cap * 2,
+                    mutation_cap=ec.mutation_cap * 2,
+                    frontier_cap=ec.frontier_cap * 2)
+                step = jax.jit(make_superstep(program, plan, ec))
+                seen_widths = {C_in}
+                out_blocks = [_pad_run_width(b, ec.bucket_cap)
+                              for b in out_blocks]
+                stats.append(coll.event(
+                    i, "regrow", bucket_cap=ec.bucket_cap,
+                    frontier_cap=ec.frontier_cap).as_dict())
+                this_recompiled = True
+                continue
+            # commit vertex state (delta vs full write-back policy); both
+            # policies' bytes are measured every superstep to feed the
+            # cost model's storage dimension
+            old_value = host["value"][sl]
             new_value = np.asarray(v2.value)
+            changed = np.any(new_value != old_value, axis=-1)
+            step_delta += int(changed.sum()) * new_value.shape[-1] * 4
+            step_full += new_value.size * 4
             if plan.storage == "delta":
-                changed = np.any(new_value != old_value, axis=-1)
                 host["value"][sl][changed] = new_value[changed]
-                delta_bytes += int(changed.sum()) * new_value.shape[-1] * 4
             else:
                 host["value"][sl] = new_value
-                full_bytes += new_value.size * 4
             host["halt"][sl] = np.asarray(v2.halt)
             host["vid"][sl] = np.asarray(v2.vid)
             host["edge_dst"][sl] = np.asarray(v2.edge_dst)
             host["edge_val"][sl] = np.asarray(v2.edge_val)
-            # collect outgoing buckets into destination inboxes
-            b_dst = np.asarray(buckets.dst)      # (sp, P, C)
-            b_pay = np.asarray(buckets.payload)  # (sp, P, C, D)
-            b_val = np.asarray(buckets.valid)
-            for j in range(sp):
-                for q in range(P):
-                    ok = b_val[j, q]
-                    if ok.any():
-                        new_inbox[q].append((b_dst[j, q][ok],
-                                             b_pay[j, q][ok]))
-            halt_all &= bool(np.all(np.asarray(v2.halt) |
-                                    (np.asarray(v2.vid) < 0)))
-            msg_count += int(np.asarray(buckets.valid).sum())
-            overflow += int(g2.overflow) - int(gs.overflow)
+            out_blocks.append((np.asarray(buckets.dst),
+                               np.asarray(buckets.payload),
+                               np.asarray(buckets.valid)))
+            halt_all &= bool(np.all(host["halt"][sl] |
+                                    (host["vid"][sl] < 0)))
             active += int(g2.active_count)
             agg += np.asarray(g2.aggregate)
-        if overflow:
-            raise RuntimeError("OOC bucket overflow; raise bucket_cap")
-        inbox = new_inbox
+            s += 1
+        delta_bytes += step_delta
+        full_bytes += step_full
+        # vectorized inbox rebuild: stack the (sp, P, C) blocks into
+        # (P_src, P_dst, C), transpose to destination-major (the host-side
+        # emulated exchange) and trim every run to the widest occupancy —
+        # valid entries are a bucket PREFIX, so the trim drops only
+        # invalid tail slots
+        b_dst = np.concatenate([b[0] for b in out_blocks], axis=0)
+        b_pay = np.concatenate([b[1] for b in out_blocks], axis=0)
+        b_val = np.concatenate([b[2] for b in out_blocks], axis=0)
+        counts = b_val.sum(axis=2)
+        msg_count = int(counts.sum())
+        C_eff = _round_run_width(int(counts.max(initial=0)), ec.bucket_cap)
+        inbox = (
+            np.ascontiguousarray(b_dst.transpose(1, 0, 2)[:, :, :C_eff]),
+            np.ascontiguousarray(
+                b_pay.transpose(1, 0, 2, 3)[:, :, :C_eff]),
+            np.ascontiguousarray(b_val.transpose(1, 0, 2)[:, :, :C_eff]))
         i += 1
         gs = GlobalState(halt=jnp.asarray(halt_all and msg_count == 0),
                          aggregate=jnp.asarray(agg),
@@ -155,28 +264,62 @@ def run_out_of_core(vert: VertexRel, program: VertexProgram,
                          msg_count=jnp.asarray(msg_count, jnp.int32))
         rec = coll.record(i, active=active, messages=msg_count,
                           wall_s=time.time() - ts,
-                          delta_bytes=delta_bytes, full_bytes=full_bytes)
+                          recompiled=this_recompiled,
+                          delta_bytes=delta_bytes, full_bytes=full_bytes,
+                          change_density=step_delta / max(step_full, 1),
+                          storage=plan.storage, ooc=True)
         stats.append(rec.as_dict())
+        switched = False
         if controller is not None and not bool(gs.halt):
             new_plan = controller.observe(rec, bucket_cap=ec.bucket_cap)
             if new_plan is not None:
-                # keep the full frontier capacity: OOC has no overflow
-                # regrow path, so a refit that the frontier later outgrows
-                # would abort the run (ROADMAP open item). Bucket capacity
-                # CAN only grow here — dropping the sender combine needs
-                # room for uncombined sends, and inter-superstep messages
-                # live host-side so a re-jit is all it takes.
+                if (new_plan.connector == "partitioning_merging"
+                        and plan.connector != "partitioning_merging"
+                        and not plan.sender_combine):
+                    # the old plan left runs unsorted; give the merging
+                    # receiver its dst-sorted runs (one-off, host-side —
+                    # the OOC analogue of migrate_msgs)
+                    inbox = _sort_inbox_runs(inbox)
                 plan = new_plan
+                if plan.join == "left_outer":
+                    # refit the frontier to the live set — safe now that
+                    # an outgrown refit regrows instead of aborting
+                    act = active // max(P, 1) + 1
+                    ec = dataclasses.replace(
+                        ec, frontier_cap=min(max(FRONTIER_FLOOR, act * 4),
+                                             Np + 8))
+                # dropping the sender combine needs room for uncombined
+                # sends: grow the buckets now instead of paying an
+                # overflow-redo on the next superstep
                 need = default_engine_config(vert, program, plan)
                 if need.bucket_cap > ec.bucket_cap:
                     ec = dataclasses.replace(ec,
                                              bucket_cap=need.bucket_cap)
                 step = jax.jit(make_superstep(program, plan, ec))
+                seen_widths = set()
                 stats.append(coll.event(
                     i, "plan-switch", join=plan.join,
                     groupby=plan.groupby, connector=plan.connector,
                     sender_combine=plan.sender_combine,
+                    storage=plan.storage,
                     frontier_cap=ec.frontier_cap).as_dict())
+                recompiled = True
+                switched = True
+        # adaptive frontier refit (left-outer plan), mirroring run_host:
+        # when the live set collapses, shrink the frontier capacity so
+        # each super-partition only pays O(|frontier|)
+        if plan.join == "left_outer" and not switched and not bool(gs.halt):
+            act = active // max(P, 1) + 1
+            if act * 4 < ec.frontier_cap and ec.frontier_cap > \
+                    FRONTIER_FLOOR:
+                ec = dataclasses.replace(
+                    ec, frontier_cap=max(FRONTIER_FLOOR, act * 2))
+                step = jax.jit(make_superstep(program, plan, ec))
+                seen_widths = set()
+                stats.append(coll.event(
+                    i, "frontier-refit",
+                    frontier_cap=ec.frontier_cap).as_dict())
+                recompiled = True
         if bool(gs.halt):
             break
     final = VertexRel(**{k: jnp.asarray(host[k]) for k in host})

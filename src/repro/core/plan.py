@@ -26,14 +26,30 @@ sender_combine: pre-aggregate messages per destination on the sender
   (the paper's combiner applied in dataflow D3) — trades compute for
   exchange bytes.
 
-storage:
-  inplace   dense in-place value updates (B-tree analogue)
-  delta     append (slot, value) deltas, merged every merge_every supersteps
-            (LSM B-tree analogue; right for mutation-heavy workloads)
+storage — the vertex-store write-back policy. In-memory drivers keep the
+  Vertex relation resident in device memory, so storage only changes the
+  plan's label there; OUT-OF-CORE it decides what crosses the device->host
+  link (and hits the host store) every superstep, and the planner models
+  and switches it mid-run (planner/cost.py "storage_writeback" term):
+
+  inplace   ship and stream the FULL value block back to the host store
+            each superstep (B-tree in-place update analogue). Sequential
+            host writes, bytes independent of how much actually changed —
+            right when most vertices update every superstep (PageRank).
+  delta     ship only CHANGED (slot, value) records and scatter-merge them
+            into the host store (LSM deferred-merge analogue). Pays a
+            per-record slot index and random host writes, but bytes scale
+            with the observed change density — right for sparse-update
+            workloads (SSSP past the frontier peak). ``merge_every`` is
+            the LSM merge cadence knob (kept for the analogue; the dense
+            host store merges eagerly, so it does not affect results).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+
+# the two write-back policies the planner's storage dimension ranges over
+STORAGES = ("inplace", "delta")
 
 
 @dataclass(frozen=True)

@@ -34,7 +34,10 @@ class EngineConfig:
     mutation_cap: int = 64       # insert-proposal bucket capacity
     frontier_cap: int = 0        # left-outer frontier capacity (0 = Np/2)
     axis_name: Optional[tuple] = None   # shard_map axes, None = emulated
-    ooc_collect: bool = False    # out-of-core: return buckets, skip exchange
+    # out-of-core: return the (P_local, n_parts, C) sender buckets to the
+    # host instead of exchanging — the OOC driver performs the exchange as
+    # a host-side transpose into its run-structured inbox (core/ooc.py)
+    ooc_collect: bool = False
 
 
 def _combine_fns(program: VertexProgram):
@@ -70,6 +73,9 @@ def make_superstep(program: VertexProgram, plan: PhysicalPlan,
         return jnp.where(valid, dst // n_parts, Np)
 
     def receiver_groupby(msg: MsgRel, Np: int):
+        # run-capacity assumption: msg.capacity = n_parts equal-width
+        # sender runs. Both the in-memory exchange (fixed C buckets) and
+        # the out-of-core inbox (trimmed host runs) deliver this layout.
         slot = _slot_of(msg.dst, msg.valid, Np)
 
         if plan.connector == "partitioning_merging":

@@ -172,6 +172,12 @@ def main():
     # non-dryrun demo mode
     ap.add_argument("--dataset", default="webmap-tiny")
     ap.add_argument("--parts", type=int, default=4)
+    ap.add_argument("--ooc", action="store_true",
+                    help="run out-of-core: stream super-partitions "
+                         "through the device within --budget-partitions")
+    ap.add_argument("--budget-partitions", type=int, default=0,
+                    help="device-memory budget in partitions for --ooc "
+                         "(default: parts // 2)")
     args = ap.parse_args()
 
     plan = "auto" if args.auto_plan else PhysicalPlan(
@@ -212,21 +218,38 @@ def main():
     program = ALGOS[args.algo](n)
     vert = load_graph(edges, n, P=args.parts,
                       value_dims=program.value_dims)
-    res = run_host(vert, program, plan, max_supersteps=40)
+    if args.ooc:
+        from repro.core.ooc import run_out_of_core
+        budget = args.budget_partitions
+        if budget and args.parts % budget:
+            ap.error(f"--budget-partitions {budget} must divide "
+                     f"--parts {args.parts}")
+        if not budget:   # largest divisor of parts that is <= parts // 2
+            budget = next(b for b in range(max(args.parts // 2, 1), 0, -1)
+                          if args.parts % b == 0)
+        res = run_out_of_core(vert, program, plan,
+                              budget_partitions=budget, max_supersteps=40)
+        mode = f"out-of-core (budget={budget}/{args.parts} partitions)"
+    else:
+        res = run_host(vert, program, plan, max_supersteps=40)
+        mode = "in-memory"
     vals = gather_values(res.vertex, n)
-    print(f"{args.algo} on {args.dataset}: {res.supersteps} supersteps, "
-          f"{res.wall_s:.2f}s wall")
+    print(f"{args.algo} on {args.dataset} [{mode}]: "
+          f"{res.supersteps} supersteps, {res.wall_s:.2f}s wall")
     if args.auto_plan:
         switches = [s for s in res.stats
                     if s.get("event") == "plan-switch"]
         print(f"final plan: join={res.plan.join} "
               f"groupby={res.plan.groupby} "
               f"connector={res.plan.connector} "
-              f"sender_combine={res.plan.sender_combine}; "
+              f"sender_combine={res.plan.sender_combine} "
+              f"storage={res.plan.storage}; "
               f"{len(switches)} plan switch(es)")
         for s in switches:
             print(f"  superstep {s['superstep']}: -> join={s['join']} "
-                  f"sender_combine={s['sender_combine']}")
+                  f"connector={s['connector']} "
+                  f"sender_combine={s['sender_combine']} "
+                  f"storage={s.get('storage', '-')}")
     print("per-superstep:", [round(s['wall_s'], 3) for s in res.stats
                              if 'wall_s' in s])
     print("value head:", vals[:5, 0])

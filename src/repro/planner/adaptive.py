@@ -58,9 +58,15 @@ class AdaptiveController:
         `bucket_cap` = the engine's live bucket capacity, flooring every
         candidate's modeled message capacity (buckets only grow)."""
         cfg = self.config
+        # OOC drivers annotate their records with ooc=True and the
+        # measured per-superstep change density (delta/full write-back
+        # byte ratio) — that is what prices the storage dimension
         obs = Observation(frontier_density=rec.frontier_density,
                           messages=rec.messages, superstep=rec.superstep,
-                          bucket_cap=bucket_cap)
+                          bucket_cap=bucket_cap,
+                          change_density=rec.extra.get(
+                              "change_density", 1.0),
+                          ooc=bool(rec.extra.get("ooc", False)))
         best, best_cost = choose(self.program, self.g, obs,
                                  base=self.plan, machine=self.machine,
                                  **self.space_kw)

@@ -12,6 +12,13 @@ constants). ``hlo_calibrate`` cross-checks the capacity terms against the
 trip-count-aware HLO analyzer (``launch/hlo_cost.py``) on a lowered
 superstep.
 
+Out-of-core runs add a STORAGE dimension: each streamed super-partition
+writes its vertex updates back over the device<->host link, and the
+``storage_writeback`` term prices the ``inplace`` (full-block stream) vs
+``delta`` (changed-records scatter-merge) policies from the measured
+change density (``Observation.change_density`` = delta_bytes/full_bytes
+from the OOC statistics stream).
+
 Only RANKING between plans matters for the optimizer; absolute seconds are
 the single-chip roofline bound, a lower bound on real wall time.
 """
@@ -23,12 +30,27 @@ from dataclasses import dataclass, field
 from repro.core.plan import FRONTIER_FLOOR, PhysicalPlan, bucket_capacity
 
 WORD = 4          # bytes per int32/float32 element
-K_COMPUTE = 8.0   # flops per element of a fused elementwise UDF stage
-K_SCATTER = 4.0   # random gather/scatter amplification: each access moves
-                  # a cache line / memory transaction, not one element
-# sorts are memory-bound: effective read+write passes over the keyed
-# payload per sort = SORT_PASS_FRAC * log2(n) (cache-resident merge
-# passes cost well under a full memory round-trip each)
+
+# ---- analytic constants (units in comments; hand-tuned against
+# ``hlo_calibrate``, which lowers a real superstep and measures it with the
+# trip-count-aware HLO analyzer — the periodic re-calibration loop that
+# would refresh these per backend is a ROADMAP item)
+
+# K_COMPUTE [flops/element]: arithmetic intensity of one fused elementwise
+# UDF stage (compute/send/combine bodies lower to a handful of fused ops
+# per element; 8 flops/element matches the HLO flop counts of the built-in
+# algorithm library within ~2x, which is enough for ranking).
+K_COMPUTE = 8.0
+# K_SCATTER [dimensionless bytes multiplier]: random gather/scatter
+# amplification — each randomly-addressed access moves a cache line /
+# memory transaction, not one element, so scattered traffic is charged
+# K_SCATTER times the payload bytes (sequential/streamed traffic is
+# charged 1x).
+K_SCATTER = 4.0
+# SORT_PASS_FRAC [dimensionless]: sorts are memory-bound; one argsort +
+# permute over n rows is modeled as SORT_PASS_FRAC * log2(n) full
+# read+write passes over the keyed payload (cache-resident merge passes
+# cost well under a full memory round-trip each, hence the fraction < 1).
 SORT_PASS_FRAC = 0.25
 FRONTIER_SLACK = 2.0   # refit keeps 2x headroom over the live frontier
 MIN_FRONTIER = FRONTIER_FLOOR   # the driver's refit floor
@@ -40,12 +62,17 @@ class MachineModel:
     peak_flops: float = 197e12   # bf16 flops/s per chip
     hbm_bw: float = 819e9        # bytes/s per chip
     link_bw: float = 50e9        # bytes/s per ICI link
+    host_bw: float = 32e9        # bytes/s device<->host (PCIe-class); the
+                                 # OOC storage write-back crosses this link
 
 
 DEFAULT_MACHINE = MachineModel()
 # emulated transport (single host): the "exchange" is a transpose through
-# memory, not an ICI hop — the host drivers plan with this model
-EMULATED_MACHINE = MachineModel(link_bw=DEFAULT_MACHINE.hbm_bw)
+# memory and the "host link" is a memcpy, not an ICI/PCIe hop — the host
+# drivers plan with this model (the delta-vs-inplace distinction survives:
+# scatter amplification vs streaming is a memory-system property)
+EMULATED_MACHINE = MachineModel(link_bw=DEFAULT_MACHINE.hbm_bw,
+                                host_bw=DEFAULT_MACHINE.hbm_bw)
 
 
 @dataclass(frozen=True)
@@ -82,6 +109,14 @@ class Observation:
     # drivers only GROW buckets, so a candidate plan cannot realize a
     # smaller message capacity than the engine already carries
     bucket_cap: int = 0
+    # fraction of vertex-value bytes that changed last superstep — the OOC
+    # driver measures it as delta_bytes / full_bytes per superstep; drives
+    # the storage (write-back) dimension. 1.0 = everything changed.
+    change_density: float = 1.0
+    # True when the job streams super-partitions through the device (OOC):
+    # only then does the storage write-back cross the host link and enter
+    # the cost; in-memory drivers keep the Vertex relation resident.
+    ooc: bool = False
 
 
 @dataclass
@@ -89,21 +124,26 @@ class PlanCost:
     flops: float = 0.0
     bytes: float = 0.0            # HBM traffic per partition
     exchange_bytes: float = 0.0   # cross-partition link bytes
+    host_bytes: float = 0.0       # device<->host link bytes (OOC only)
     terms: dict = field(default_factory=dict)   # per-operator seconds
 
     def add(self, term: str, machine: MachineModel, *, flops: float = 0.0,
-            bytes: float = 0.0, exchange_bytes: float = 0.0):
+            bytes: float = 0.0, exchange_bytes: float = 0.0,
+            host_bytes: float = 0.0):
         self.flops += flops
         self.bytes += bytes
         self.exchange_bytes += exchange_bytes
+        self.host_bytes += host_bytes
         self.terms[term] = self.terms.get(term, 0.0) + (
             flops / machine.peak_flops + bytes / machine.hbm_bw +
-            exchange_bytes / machine.link_bw)
+            exchange_bytes / machine.link_bw +
+            host_bytes / machine.host_bw)
 
     def seconds(self, machine: MachineModel = DEFAULT_MACHINE) -> float:
         return (self.flops / machine.peak_flops +
                 self.bytes / machine.hbm_bw +
-                self.exchange_bytes / machine.link_bw)
+                self.exchange_bytes / machine.link_bw +
+                self.host_bytes / machine.host_bw)
 
 
 def bucket_cap(plan: PhysicalPlan, g: GraphStats, slack: float = 1.5) -> int:
@@ -199,6 +239,25 @@ def estimate(plan: PhysicalPlan, g: GraphStats, obs: Observation,
     # exchange: fixed-capacity buckets cross the links whole
     c.add("exchange", machine,
           exchange_bytes=M * msg_w * (P - 1) / max(P, 1))
+
+    # storage write-back (OOC only): in-memory drivers keep the Vertex
+    # relation resident, but a streamed super-partition must push its
+    # vertex updates back over the device<->host link and into the host
+    # store every superstep. `change_density` is the measured
+    # delta_bytes/full_bytes ratio from the OOC statistics stream.
+    if obs.ooc:
+        vblock = Np * V * WORD
+        if plan.storage == "delta":
+            cd = min(max(obs.change_density, 0.0), 1.0)
+            # changed (slot, value) records cross the link; the compare
+            # streams the store once and the merge scatters the survivors
+            c.add("storage_writeback", machine,
+                  host_bytes=cd * Np * (1 + V) * WORD,
+                  bytes=vblock + K_SCATTER * cd * vblock)
+        else:
+            # the full value block streams across the link and the store
+            c.add("storage_writeback", machine,
+                  host_bytes=vblock, bytes=vblock)
     return c
 
 

@@ -2,18 +2,21 @@
 Section 5.3 plan choices per algorithm in Figure 9; this module derives
 them from statistics instead).
 
-The space is join x group-by x connector x sender_combine from
+The space is join x group-by x connector x sender_combine x storage from
 ``core/plan.py``, pruned by ``PhysicalPlan.validate`` (e.g. the scatter /
-hash group-by cannot run a custom combine UDF). Storage, partitioning and
-merge cadence are inherited from the base plan: they are load-time /
-driver-level choices, not per-superstep ones.
+hash group-by cannot run a custom combine UDF). Storage defaults to the
+base plan's policy — in-memory drivers never pay a write-back, so varying
+it would only produce cost ties; the OOC driver passes
+``storages=STORAGES`` to search both policies (its write-back is measured
+and modeled). Partitioning and merge cadence stay inherited: they are
+load-time choices, not per-superstep ones.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Iterator, List, Optional, Tuple
 
-from repro.core.plan import DEFAULT_PLAN, PhysicalPlan
+from repro.core.plan import DEFAULT_PLAN, STORAGES, PhysicalPlan
 from repro.planner.cost import (DEFAULT_MACHINE, GraphStats, MachineModel,
                                 Observation, PlanCost, estimate)
 
@@ -27,22 +30,28 @@ def plan_space(program, base: Optional[PhysicalPlan] = None, *,
                groupbys: Tuple[str, ...] = GROUPBYS,
                connectors: Tuple[str, ...] = CONNECTORS,
                sender_combines: Tuple[bool, ...] = (True, False),
+               storages: Optional[Tuple[str, ...]] = None,
                ) -> Iterator[PhysicalPlan]:
     """Valid plans for `program`, varying the per-superstep dimensions of
-    `base`. Invalid combinations are pruned via PhysicalPlan.validate."""
+    `base`. Invalid combinations are pruned via PhysicalPlan.validate.
+    ``storages=None`` inherits the base plan's storage policy; the OOC
+    driver passes ``core.plan.STORAGES`` to search both."""
     base = base if base is not None else DEFAULT_PLAN
+    storages = storages if storages is not None else (base.storage,)
     for join in joins:
         for groupby in groupbys:
             for connector in connectors:
                 for sc in sender_combines:
-                    plan = dataclasses.replace(
-                        base, join=join, groupby=groupby,
-                        connector=connector, sender_combine=sc)
-                    try:
-                        plan.validate(program.combine_op)
-                    except ValueError:
-                        continue
-                    yield plan
+                    for storage in storages:
+                        plan = dataclasses.replace(
+                            base, join=join, groupby=groupby,
+                            connector=connector, sender_combine=sc,
+                            storage=storage)
+                        try:
+                            plan.validate(program.combine_op)
+                        except ValueError:
+                            continue
+                        yield plan
 
 
 def rank(program, g: GraphStats, obs: Observation, *,

@@ -8,6 +8,14 @@ consume the same stream the drivers expose to callers.
 
 ``RunResult.stats`` stays a list of plain dicts (``SuperstepStats.as_dict``)
 for backward compatibility with benchmarks and tests that index by key.
+
+Driver-specific observables travel in ``extra``: the out-of-core driver
+annotates every record with ``ooc=True``, cumulative ``delta_bytes`` /
+``full_bytes`` (what the delta vs full write-back policies ship
+device->host), ``change_density`` (their per-superstep ratio — the signal
+behind the planner's storage dimension) and the active ``storage`` policy.
+``AdaptiveController.observe`` lifts these into the cost model's
+``Observation``.
 """
 from __future__ import annotations
 

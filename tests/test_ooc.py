@@ -1,0 +1,218 @@
+"""Out-of-core parity + resilience suite.
+
+The paper's headline claim is that ONE set of plans runs in-memory and
+out-of-core. We hold it to the strongest possible standard: for
+PageRank / SSSP / CC, ``run_out_of_core`` must match ``run_host``
+BIT-FOR-BIT under every connector x storage combination (the
+run-structured inbox delivers the exact same receiver layout the
+in-memory exchange does, so even float accumulation order agrees), and
+capacity overflows (bucket or frontier) must regrow-and-redo instead of
+raising.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, PhysicalPlan, gather_values,
+                        load_graph, run_host)
+from repro.core.ooc import (_pad_run_width, _round_run_width,
+                            _sort_inbox_runs, run_out_of_core)
+from repro.graph import SSSP, ConnectedComponents, PageRank, rmat_graph
+from repro.graph.generators import grid_graph
+
+N = 220
+EDGES = rmat_graph(N, 1200, seed=7)
+ALGOS = {
+    "pagerank": (lambda: PageRank(N, iterations=6), 2),
+    "sssp": (lambda: SSSP(source=3), 1),
+    "cc": (lambda: ConnectedComponents(), 1),
+}
+_HOST_REF = {}   # (algo, connector) -> gathered values of run_host
+
+
+def _host_ref(algo: str, connector: str) -> np.ndarray:
+    if (algo, connector) not in _HOST_REF:
+        mk, vd = ALGOS[algo]
+        prog = mk()
+        plan = dataclasses.replace(prog.suggested_plan, connector=connector)
+        vert = load_graph(EDGES, N, P=4, value_dims=vd)
+        res = run_host(vert, prog, plan, max_supersteps=30)
+        _HOST_REF[(algo, connector)] = gather_values(res.vertex, N)
+    return _HOST_REF[(algo, connector)]
+
+
+@pytest.mark.parametrize("algo", list(ALGOS))
+@pytest.mark.parametrize("connector",
+                         ["partitioning", "partitioning_merging"])
+@pytest.mark.parametrize("storage", ["inplace", "delta"])
+def test_ooc_parity_bit_for_bit(algo, connector, storage):
+    """run_out_of_core == run_host exactly, every connector x storage."""
+    mk, vd = ALGOS[algo]
+    prog = mk()
+    plan = dataclasses.replace(prog.suggested_plan, connector=connector,
+                               storage=storage)
+    vert = load_graph(EDGES, N, P=4, value_dims=vd)
+    res = run_out_of_core(vert, prog, plan, budget_partitions=2,
+                          max_supersteps=30)
+    assert np.array_equal(gather_values(res.vertex, N),
+                          _host_ref(algo, connector))
+
+
+def test_bucket_overflow_regrows_instead_of_raising():
+    """A bucket_cap far too small for superstep 0's all-active sends must
+    regrow-and-redo the super-partition, not lose work or raise (the seed
+    raised RuntimeError('OOC bucket overflow; raise bucket_cap'))."""
+    prog = SSSP(source=3)
+    vert = load_graph(EDGES, N, P=4, value_dims=1)
+    ec = EngineConfig(n_parts=4, bucket_cap=2,
+                      frontier_cap=vert.capacity + 8)
+    res = run_out_of_core(vert, prog, prog.suggested_plan,
+                          budget_partitions=2, max_supersteps=30, ec=ec)
+    regrows = [s for s in res.stats if s.get("event") == "regrow"]
+    assert regrows, "expected at least one regrow event"
+    assert regrows[-1]["bucket_cap"] > 2
+    assert np.array_equal(gather_values(res.vertex, N),
+                          _host_ref("sssp", "partitioning"))
+
+
+def test_frontier_overflow_regrows_instead_of_raising():
+    """Left-outer with a tiny frontier capacity: superstep 0 activates all
+    vertices, overflowing the frontier compaction — the regrow path must
+    double it until the superstep fits, making adaptive refits safe."""
+    prog = SSSP(source=3)
+    vert = load_graph(EDGES, N, P=4, value_dims=1)
+    plan = dataclasses.replace(prog.suggested_plan, join="left_outer")
+    ec = EngineConfig(n_parts=4, bucket_cap=64, frontier_cap=4)
+    res = run_out_of_core(vert, prog, plan, budget_partitions=2,
+                          max_supersteps=30, ec=ec)
+    regrows = [s for s in res.stats if s.get("event") == "regrow"]
+    assert regrows, "expected at least one regrow event"
+    assert regrows[-1]["frontier_cap"] > 4
+    assert np.array_equal(gather_values(res.vertex, N),
+                          _host_ref("sssp", "partitioning"))
+
+
+def test_ooc_auto_searches_full_space_and_switches_storage():
+    """plan='auto' out-of-core: matches the static reference exactly, and
+    on the high-diameter lattice (frontier collapses, few values change
+    per superstep) re-plans mid-run onto storage='delta' — the scenario
+    the seed's _OOC_PLAN_SPACE fence made unreachable."""
+    side = 40
+    n = side * side
+    edges = grid_graph(side)
+    prog = SSSP(source=0)
+    static = run_host(load_graph(edges, n, P=4, value_dims=1), prog,
+                      prog.suggested_plan, max_supersteps=100)
+    auto = run_out_of_core(load_graph(edges, n, P=4, value_dims=1), prog,
+                           "auto", budget_partitions=2, max_supersteps=100)
+    assert np.array_equal(gather_values(auto.vertex, n),
+                          gather_values(static.vertex, n))
+    switches = [s for s in auto.stats if s.get("event") == "plan-switch"]
+    assert len(switches) >= 1
+    assert auto.plan.storage == "delta"
+    assert auto.plan.join == "left_outer"
+    # the OOC statistics stream carries the measured write-back signal
+    recs = [s for s in auto.stats if "change_density" in s]
+    assert recs and all(0.0 <= s["change_density"] <= 1.0 for s in recs)
+    assert all(s["ooc"] for s in recs)
+
+
+def test_ooc_runs_merging_connector_with_auto_space():
+    """The merging connector is a legal auto-space member in OOC now:
+    pin the space to it and both storages — the run must still match."""
+    prog = PageRank(N, iterations=6)
+    vert = load_graph(EDGES, N, P=4, value_dims=2)
+    res = run_out_of_core(
+        vert, prog, "auto", budget_partitions=2, max_supersteps=10,
+        auto_space={"connectors": ("partitioning_merging",),
+                    "storages": ("inplace", "delta")})
+    assert res.plan.connector == "partitioning_merging"
+    assert np.array_equal(gather_values(res.vertex, N),
+                          _host_ref("pagerank", "partitioning_merging"))
+
+
+def test_frontier_cap_default_zero_still_regrows():
+    """A caller-supplied EngineConfig with frontier_cap=0 (the 'Np/2'
+    dataclass default) must not wedge the regrow doubling at 0: SSSP
+    superstep 0 activates every vertex, overflowing Np/2, and the run
+    must recover and terminate."""
+    prog = SSSP(source=3)
+    vert = load_graph(EDGES, N, P=4, value_dims=1)
+    plan = dataclasses.replace(prog.suggested_plan, join="left_outer")
+    ec = EngineConfig(n_parts=4, bucket_cap=64)   # frontier_cap = 0
+    res = run_out_of_core(vert, prog, plan, budget_partitions=2,
+                          max_supersteps=30, ec=ec)
+    assert any(s.get("event") == "regrow" for s in res.stats)
+    assert np.array_equal(gather_values(res.vertex, N),
+                          _host_ref("sssp", "partitioning"))
+
+
+def test_switch_to_merging_sorts_unsorted_inbox_runs(monkeypatch):
+    """A mid-run switch from (partitioning, sender_combine=False) onto
+    the merging connector must dst-sort the in-flight host runs (the OOC
+    analogue of migrate_msgs) — forced here via the controller."""
+    from repro.planner.adaptive import AdaptiveController
+    prog = PageRank(N, iterations=6)
+
+    def force_merging(self, rec, *, bucket_cap=0):
+        if rec.superstep == 2:
+            self.plan = dataclasses.replace(
+                self.plan, connector="partitioning_merging")
+            return self.plan
+        return None
+
+    monkeypatch.setattr(AdaptiveController, "observe", force_merging)
+    vert = load_graph(EDGES, N, P=4, value_dims=2)
+    res = run_out_of_core(
+        vert, prog, "auto", budget_partitions=2, max_supersteps=10,
+        auto_space={"connectors": ("partitioning",),
+                    "sender_combines": (False,),
+                    "storages": ("inplace",)})
+    assert res.plan.connector == "partitioning_merging"
+    assert any(s.get("event") == "plan-switch" for s in res.stats)
+    # PageRank's ranks must come out right despite the layout change
+    ref = _host_ref("pagerank", "partitioning")
+    got = gather_values(res.vertex, N)
+    assert np.allclose(got, ref, atol=1e-6)
+
+
+def test_sort_inbox_runs_orders_and_preserves_messages():
+    rng = np.random.default_rng(3)
+    P, C, D = 3, 8, 2
+    dst = rng.integers(0, 50, (P, P, C)).astype(np.int32)
+    val = rng.random((P, P, C)) > 0.4
+    # prefix-compact the valid mask the way real buckets arrive
+    val = np.sort(val, axis=2)[:, :, ::-1]
+    dst = np.where(val, dst, -1)
+    pay = np.repeat(dst[..., None], D, axis=-1).astype(np.float32)
+    d2, p2, v2 = _sort_inbox_runs((dst, pay, val))
+    for q in range(P):
+        for p in range(P):
+            live = d2[q, p][v2[q, p]]
+            assert (np.diff(live) >= 0).all()          # dst ascending
+            assert (p2[q, p][v2[q, p], 0] == live).all()  # payload follows
+            # valid entries stay a prefix
+            k = v2[q, p].sum()
+            assert v2[q, p][:k].all() and not v2[q, p][k:].any()
+    assert sorted(dst[val]) == sorted(d2[v2])          # same multiset
+
+
+def test_round_run_width_pow2_clamped():
+    assert _round_run_width(0, 64) == 1
+    assert _round_run_width(1, 64) == 1
+    assert _round_run_width(3, 64) == 4
+    assert _round_run_width(33, 64) == 64
+    assert _round_run_width(200, 64) == 64   # clamped to bucket_cap
+
+
+def test_pad_run_width_preserves_prefix_layout():
+    d = np.array([[[5, -1]]], np.int32)
+    p = np.ones((1, 1, 2, 1), np.float32)
+    v = np.array([[[True, False]]])
+    d2, p2, v2 = _pad_run_width((d, p, v), 4)
+    assert d2.shape == (1, 1, 4) and p2.shape == (1, 1, 4, 1)
+    assert (d2[0, 0] == [5, -1, -1, -1]).all()
+    assert (v2[0, 0] == [True, False, False, False]).all()
+    same = _pad_run_width((d, p, v), 2)
+    assert same[0] is d

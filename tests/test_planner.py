@@ -67,6 +67,74 @@ def test_rank_is_sorted_and_covers_space():
     assert secs == sorted(secs)
 
 
+def test_storage_dimension_defaults_inherited_and_ooc_doubles_space():
+    """In-memory spaces inherit the base storage (write-back never paid,
+    so varying it only makes ties); storages=STORAGES doubles the space."""
+    from repro.core import STORAGES
+    pr = PageRank(100_000)
+    assert len(list(plan_space(pr))) == 16
+    both = list(plan_space(pr, storages=STORAGES))
+    assert len(both) == 32
+    assert {p.storage for p in both} == {"inplace", "delta"}
+
+
+def test_storage_cost_follows_measured_change_density():
+    """The storage_writeback term prices delta by the measured
+    delta/full byte ratio: sparse updates favor delta, dense inplace —
+    and without ooc the policies tie (no write-back crosses the link)."""
+    inplace = PhysicalPlan(storage="inplace")
+    delta = PhysicalPlan(storage="delta")
+    sparse = Observation(ooc=True, change_density=0.01)
+    dense = Observation(ooc=True, change_density=1.0)
+    assert estimate(delta, WEB, sparse).seconds() < \
+        estimate(inplace, WEB, sparse).seconds()
+    assert estimate(inplace, WEB, dense).seconds() < \
+        estimate(delta, WEB, dense).seconds()
+    in_mem = Observation(change_density=0.01)
+    assert estimate(delta, WEB, in_mem).seconds() == \
+        estimate(inplace, WEB, in_mem).seconds()
+    # the write-back term lives on the device<->host link
+    assert estimate(inplace, WEB, sparse).host_bytes > 0
+    assert estimate(inplace, WEB, in_mem).host_bytes == 0
+
+
+def test_choose_switches_storage_with_change_density():
+    from repro.core import STORAGES
+    sssp = SSSP(source=0)
+    sparse, _ = choose(sssp, WEB,
+                       Observation(ooc=True, change_density=0.01,
+                                   frontier_density=0.05),
+                       storages=STORAGES)
+    dense, _ = choose(PageRank(100_000), WEB,
+                      Observation(ooc=True, change_density=1.0,
+                                  frontier_density=1.0),
+                      storages=STORAGES)
+    assert sparse.storage == "delta"
+    assert dense.storage == "inplace"
+
+
+def test_controller_reads_change_density_from_stats_extra():
+    """The OOC driver annotates records with ooc/change_density; the
+    controller must surface them into the Observation it plans with."""
+    from repro.core import STORAGES
+    from repro.planner import AdaptiveController
+    sssp = SSSP(source=0)
+    plan, _ = choose(sssp, WEB, Observation(frontier_density=1.0, ooc=True),
+                     storages=STORAGES)
+    ctl = AdaptiveController(sssp, WEB, plan,
+                             AdaptiveConfig(patience=1, cooldown=0),
+                             space_kw={"storages": STORAGES})
+    coll = StatsCollector(n_partitions=WEB.n_partitions,
+                          vertex_capacity=WEB.vertex_capacity,
+                          msg_dims=WEB.msg_dims)
+    total = WEB.n_partitions * WEB.vertex_capacity
+    rec = coll.record(2, active=total // 100, messages=10, wall_s=0.0,
+                      ooc=True, change_density=0.01)
+    switched = ctl.observe(rec)
+    assert switched is not None
+    assert switched.storage == "delta"
+
+
 def test_migrate_msgs_sorts_runs_for_merging_receiver():
     import jax.numpy as jnp
 
