@@ -6,15 +6,18 @@ from repro.core.driver import (RunResult, default_engine_config, run_host,
 from repro.core.plan import (DEFAULT_PLAN, SPARSE_PLAN, STORAGES,
                              PhysicalPlan)
 from repro.core.program import ComputeOut, VertexProgram
-from repro.core.relations import (GlobalState, MsgRel, VertexRel,
-                                  empty_msgs, gather_values, init_gs,
-                                  load_graph, out_degrees)
-from repro.core.superstep import EngineConfig, make_superstep
+from repro.core.relations import (N_OVERFLOW, OVF_BUCKET, OVF_EDGE,
+                                  OVF_FRONTIER, OVF_MUTATION, GlobalState,
+                                  MsgRel, VertexRel, empty_msgs,
+                                  gather_values, init_gs, load_graph,
+                                  out_degrees)
+from repro.core.superstep import EngineConfig, jit_superstep, make_superstep
 
 __all__ = [
     "RunResult", "default_engine_config", "run_host", "run_jit",
     "DEFAULT_PLAN", "SPARSE_PLAN", "STORAGES", "PhysicalPlan", "ComputeOut",
     "VertexProgram", "GlobalState", "MsgRel", "VertexRel", "empty_msgs",
     "gather_values", "init_gs", "load_graph", "out_degrees",
-    "EngineConfig", "make_superstep",
+    "N_OVERFLOW", "OVF_BUCKET", "OVF_FRONTIER", "OVF_MUTATION", "OVF_EDGE",
+    "EngineConfig", "jit_superstep", "make_superstep",
 ]

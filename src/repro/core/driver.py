@@ -20,11 +20,14 @@ from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.plan import FRONTIER_FLOOR, PhysicalPlan
 from repro.core.program import VertexProgram
-from repro.core.relations import (GlobalState, MsgRel, VertexRel,
-                                  empty_msgs, init_gs, out_degrees)
+from repro.core.relations import (OVF_BUCKET, OVF_EDGE, OVF_FRONTIER,
+                                  OVF_MUTATION, GlobalState, MsgRel,
+                                  VertexRel, empty_msgs, init_gs,
+                                  out_degrees)
 from repro.core.superstep import EngineConfig, make_superstep
 
 PlanArg = Union[PhysicalPlan, str]   # a PhysicalPlan or the string "auto"
@@ -52,11 +55,19 @@ def _resolve_plan(vert, program, plan: PlanArg, *, adaptive: bool,
     from repro.planner import (DEFAULT_MACHINE, EMULATED_MACHINE,
                                AdaptiveConfig, resolve_auto_plan)
     emulated = ec is None or ec.axis_name is None
+    config = auto_config or AdaptiveConfig()
+    machine = EMULATED_MACHINE if emulated else DEFAULT_MACHINE
+    if config.calibrate:
+        # one-shot startup calibration (opt-in): lower a probe superstep
+        # per backend and refit the analytic cost constants against the
+        # trip-count-aware HLO analyzer instead of trusting the
+        # hand-tuned K_COMPUTE / K_SCATTER / SORT_PASS_FRAC
+        from repro.planner.cost import GraphStats, calibrate_machine
+        machine = calibrate_machine(
+            program, GraphStats.from_vertex(vert, program), machine)
     return resolve_auto_plan(
-        vert, program, adaptive=adaptive,
-        config=auto_config or AdaptiveConfig(),
-        machine=EMULATED_MACHINE if emulated else DEFAULT_MACHINE,
-        space_kw=auto_space)
+        vert, program, adaptive=adaptive, config=config,
+        machine=machine, space_kw=auto_space)
 
 
 def default_engine_config(vert: VertexRel, program: VertexProgram,
@@ -80,6 +91,27 @@ def init_vertex_values(vert: VertexRel, program: VertexProgram,
         (vert.vid >= 0)[..., None], value, 0.0))
 
 
+def grow_overflowed(ec: EngineConfig, delta, *,
+                    vertex_capacity: int = 0) -> EngineConfig:
+    """Double only the capacities whose per-source overflow counter grew
+    (`delta` = the GlobalState.overflow increase of the failed step).
+    Edge-stream overflow is attributed to the frontier: the edge
+    compaction capacity is derived from frontier_cap (EF = 8 *
+    frontier_cap in gen_messages). A frontier_cap of 0 (the "Np/2"
+    EngineConfig default) is resolved against `vertex_capacity` first so
+    the doubling cannot wedge at 0."""
+    delta = np.asarray(delta)
+    kw = {}
+    if delta[OVF_BUCKET] > 0:
+        kw["bucket_cap"] = ec.bucket_cap * 2
+    if delta[OVF_FRONTIER] > 0 or delta[OVF_EDGE] > 0:
+        cur = ec.frontier_cap or max(vertex_capacity // 2, 1)
+        kw["frontier_cap"] = cur * 2
+    if delta[OVF_MUTATION] > 0:
+        kw["mutation_cap"] = ec.mutation_cap * 2
+    return dataclasses.replace(ec, **kw)
+
+
 def run_jit(vert: VertexRel, program: VertexProgram,
             plan: PlanArg = PhysicalPlan(), *,
             max_supersteps: int = 50,
@@ -97,7 +129,7 @@ def run_jit(vert: VertexRel, program: VertexProgram,
     def cond(state):
         v, m, g = state
         return (~g.halt) & (g.superstep < max_supersteps) & \
-            (g.overflow == 0)
+            jnp.all(g.overflow == 0)
 
     def body(state):
         return step(*state)
@@ -105,10 +137,11 @@ def run_jit(vert: VertexRel, program: VertexProgram,
     v, m, g = jax.jit(
         lambda s: jax.lax.while_loop(cond, body, s))((vert, msg, gs))
     jax.block_until_ready(g.superstep)
-    if int(g.overflow) > 0:
+    if int(np.asarray(g.overflow).sum()) > 0:
         raise RuntimeError(
-            f"message capacity overflow ({int(g.overflow)} dropped); "
-            "use run_host (auto-grows) or raise bucket_cap")
+            f"capacity overflow (bucket/frontier/mutation/edge = "
+            f"{np.asarray(g.overflow).tolist()} dropped); "
+            "use run_host (auto-grows) or raise the capacities")
     return RunResult(vertex=v, gs=g, supersteps=int(g.superstep),
                      wall_s=time.time() - t0, plan=plan)
 
@@ -156,16 +189,21 @@ def run_host(vert: VertexRel, program: VertexProgram,
         prev = (vert, msg, gs)
         vert2, msg2, gs2 = step(vert, msg, gs)
         jax.block_until_ready(gs2.superstep)
-        if int(gs2.overflow) > int(gs.overflow):
-            # grow capacities x2 and REDO this superstep from `prev`
-            ec = dataclasses.replace(ec, bucket_cap=ec.bucket_cap * 2,
-                                     mutation_cap=ec.mutation_cap * 2,
-                                     frontier_cap=ec.frontier_cap * 2)
+        ovf_delta = np.asarray(gs2.overflow) - np.asarray(gs.overflow)
+        if (ovf_delta > 0).any():
+            # grow ONLY the overflowed capacities x2 and REDO this
+            # superstep from `prev` (per-source counters keep a frontier
+            # overflow from dragging the bucket tensors along)
+            ec = grow_overflowed(ec, ovf_delta,
+                                 vertex_capacity=vert.capacity)
             step = jax.jit(make_superstep(program, plan, ec))
             vert, msg, gs = prev
             msg = _regrow_msgs(msg, ec)
-            stats.append(coll.event(i, "regrow",
-                                    bucket_cap=ec.bucket_cap).as_dict())
+            stats.append(coll.event(
+                i, "regrow", bucket_cap=ec.bucket_cap,
+                frontier_cap=ec.frontier_cap,
+                mutation_cap=ec.mutation_cap,
+                sources=np.flatnonzero(ovf_delta > 0).tolist()).as_dict())
             recompiled = True
             continue
         vert, msg, gs = vert2, msg2, gs2

@@ -8,6 +8,32 @@ budget) through the jitted partial superstep, collecting outgoing message
 buckets host-side (the "sender-side materializing pipelined" policy) and
 delivering them at the next superstep.
 
+PIPELINED STREAMING (``stream=True``, the default): the executor keeps up
+to ``prefetch_depth`` super-partitions in flight. A DISPATCHER uploads
+super-partition s+1's vertex slices and inbox runs with non-blocking
+``jax.device_put`` and enqueues its jitted step while s is still
+computing; a COLLECTOR consumes completed super-partitions — out of
+dispatch order when a later one finishes first — committing each one's
+host write-back while the device works on the next. Steady-state wall
+time per superstep therefore approaches ``max(compute, transfer)``
+instead of their sum (the GraphD/GraphH overlap discipline, arXiv
+1601.05590 / 1705.05595). The uploaded vertex block is DONATED to its
+updated output (``superstep.jit_superstep``), so a pipeline slot costs
+one resident vertex block, not two. ``stream=False`` degenerates to the
+synchronous upload -> step -> block -> collect loop (a window of 1).
+
+Because results land asynchronously, the overflow/regrow protocol is
+DEFERRED: host state for a super-partition commits only when its result
+is collected clean. When a collected result reports overflow, the
+collector drains the pipeline — committing in-flight super-partitions
+that finished clean, marking overflowed ones for redo — then doubles
+ONLY the overflowed capacities (per-source ``GlobalState.overflow``
+counters), re-jits, end-pads the already-committed bucket blocks, and
+re-dispatches the redo set from retained host state. Float-sensitive
+reductions (the user aggregate) are folded in super-partition order at
+the superstep barrier, so streaming runs are bit-for-bit identical to
+synchronous ones.
+
 The host inbox is RUN-STRUCTURED: the per-super-partition bucket tensors
 coming off the device — ``(sp, P, C)`` with valid entries occupying a
 PREFIX of every ``(src, dst)`` bucket (``connector.bucket_by_owner``'s
@@ -30,20 +56,17 @@ storage="delta" (LSM analogue): only CHANGED vertex values are written
 back to the host store each superstep instead of the full value array —
 the deferred-merge write path, right for sparse-update workloads. Both
 policies' write-back bytes are measured every superstep and feed the cost
-model's storage dimension (``planner/cost.py`` ``storage_writeback``).
-
-Overflow (bucket, frontier, edge or mutation capacity) never aborts: the
-driver doubles the capacities and REDOES the current super-partition —
-host state is only committed after a clean step, so the regrow mirrors
-``driver.run_host``'s redo-from-retained-state (which likewise doubles
-bucket/mutation/frontier together: ``GlobalState.overflow`` aggregates
-all overflow sources, so the regrow cannot attribute one) and makes
-adaptive frontier refits safe out-of-core.
+model's storage dimension (``planner/cost.py`` ``storage_writeback``);
+the statistics stream also carries the dispatch / collect-wait / commit
+wall-time split and the ``streaming`` flag, so the planner prices plans
+with the overlap-aware ``max(step, transfer)`` host-link term when the
+pipelined executor is active.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Optional
 
 import jax
@@ -51,16 +74,36 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.driver import (PlanArg, RunResult, _resolve_plan,
-                               default_engine_config)
+                               default_engine_config, grow_overflowed)
 from repro.core.plan import FRONTIER_FLOOR, STORAGES, PhysicalPlan
 from repro.core.program import VertexProgram
 from repro.core.relations import GlobalState, MsgRel, VertexRel, init_gs
-from repro.core.superstep import EngineConfig, make_superstep
+from repro.core.superstep import EngineConfig, jit_superstep
 
 # the OOC planner searches both storage policies on top of the full
 # per-superstep space (in-memory drivers inherit the base plan's storage:
 # they never pay a write-back, so the dimension would only produce ties)
 _OOC_AUTO_SPACE = {"storages": STORAGES}
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched, uncollected super-partition (async device refs)."""
+    s: int
+    v2: VertexRel
+    buckets: MsgRel
+    g2: GlobalState
+
+
+@dataclasses.dataclass
+class _Done:
+    """One committed super-partition (host-side results)."""
+    block: tuple          # (dst, payload, valid) sender buckets, np
+    halt_ok: bool
+    active: int
+    agg: np.ndarray
+    delta_bytes: int
+    full_bytes: int
 
 
 def _empty_inbox(P: int, D: int):
@@ -114,13 +157,21 @@ def run_out_of_core(vert: VertexRel, program: VertexProgram,
                     max_supersteps: int = 50,
                     ec: Optional[EngineConfig] = None,
                     auto_config=None,
-                    auto_space: Optional[dict] = None) -> RunResult:
+                    auto_space: Optional[dict] = None,
+                    stream: bool = True,
+                    prefetch_depth: int = 2) -> RunResult:
     """budget_partitions = how many partitions fit in device memory at once
     (the HBM budget). P % budget_partitions must be 0. plan="auto" picks
     the plan from the cost model and re-picks it at superstep boundaries —
     over the FULL plan space including connector and storage (messages
     live host-side between supersteps in run-structured buffers, so any
-    switch is just a re-jit — no in-flight layout migration)."""
+    switch is just a re-jit — no in-flight layout migration).
+
+    stream=True (default) pipelines the super-partition stream: up to
+    ``prefetch_depth`` super-partitions are in flight at once, hiding
+    host<->device transfer behind compute; stream=False is the
+    synchronous loop (a pipeline window of 1). Results are bit-for-bit
+    identical either way."""
     from repro.planner.stats import StatsCollector
 
     t0 = time.time()
@@ -128,6 +179,7 @@ def run_out_of_core(vert: VertexRel, program: VertexProgram,
     assert P % budget_partitions == 0
     n_sp = P // budget_partitions
     sp = budget_partitions
+    window = max(int(prefetch_depth), 1) if stream else 1
     plan, controller = _resolve_plan(
         vert, program, plan, adaptive=True, ec=ec, auto_config=auto_config,
         auto_space=_OOC_AUTO_SPACE if auto_space is None else auto_space)
@@ -138,7 +190,7 @@ def run_out_of_core(vert: VertexRel, program: VertexProgram,
     ec = dataclasses.replace(ec, ooc_collect=True,
                              frontier_cap=ec.frontier_cap or
                              max(Np // 2, 1))
-    step = jax.jit(make_superstep(program, plan, ec))
+    step = jit_superstep(program, plan, ec, donate_vertex=True)
     seen_widths = set()   # inbox widths this `step` has already traced
 
     # host-resident state (the "disk")
@@ -177,66 +229,125 @@ def run_out_of_core(vert: VertexRel, program: VertexProgram,
             # wall time includes a compile
             seen_widths.add(C_in)
             this_recompiled = True
-        out_blocks = []   # per super-partition (dst, payload, valid) nd
-        halt_all = True
-        active = 0
-        step_delta = step_full = 0
-        agg = np.zeros((program.agg_dims,), np.float32)
-        s = 0
-        while s < n_sp:
+        ovf0 = np.asarray(gs.overflow)
+        t_io = {"dispatch": 0.0, "wait": 0.0, "commit": 0.0}
+        committed = {}                # s -> _Done
+        todo = deque(range(n_sp))     # dispatch queue (redo re-enters it)
+        pending = []                  # _InFlight, dispatch order
+
+        def dispatch(s):
+            """Non-blocking H2D upload + step enqueue for one
+            super-partition: the device starts (or queues) the work while
+            the host moves on to collect an earlier one."""
+            td = time.time()
             sl = slice(s * sp, (s + 1) * sp)
-            vpart = VertexRel(**{k: jnp.asarray(host[k][sl]) for k in host})
+            vpart = VertexRel(**{k: jax.device_put(host[k][sl])
+                                 for k in host})
             # incoming block: slice the run-structured inbox and flatten
             # the (P_src, C_in) runs — already the receiver's layout
             msg = MsgRel(
-                dst=jnp.asarray(in_dst[sl].reshape(sp, P * C_in)),
-                payload=jnp.asarray(in_pay[sl].reshape(sp, P * C_in, D)),
-                valid=jnp.asarray(in_val[sl].reshape(sp, P * C_in)))
+                dst=jax.device_put(in_dst[sl].reshape(sp, P * C_in)),
+                payload=jax.device_put(
+                    in_pay[sl].reshape(sp, P * C_in, D)),
+                valid=jax.device_put(in_val[sl].reshape(sp, P * C_in)))
             v2, buckets, g2 = step(vpart, msg, gs)
-            jax.block_until_ready(g2.superstep)
-            if int(g2.overflow) - int(gs.overflow) > 0:
-                # a bucket / frontier / edge / mutation capacity
-                # overflowed: host state for this super-partition is not
-                # yet committed, so double the capacities, re-jit, pad the
-                # already-collected blocks and REDO this super-partition
-                # (the OOC mirror of run_host's regrow-and-redo)
-                ec = dataclasses.replace(
-                    ec, bucket_cap=ec.bucket_cap * 2,
-                    mutation_cap=ec.mutation_cap * 2,
-                    frontier_cap=ec.frontier_cap * 2)
-                step = jax.jit(make_superstep(program, plan, ec))
-                seen_widths = {C_in}
-                out_blocks = [_pad_run_width(b, ec.bucket_cap)
-                              for b in out_blocks]
-                stats.append(coll.event(
-                    i, "regrow", bucket_cap=ec.bucket_cap,
-                    frontier_cap=ec.frontier_cap).as_dict())
-                this_recompiled = True
-                continue
-            # commit vertex state (delta vs full write-back policy); both
-            # policies' bytes are measured every superstep to feed the
-            # cost model's storage dimension
-            old_value = host["value"][sl]
-            new_value = np.asarray(v2.value)
-            changed = np.any(new_value != old_value, axis=-1)
-            step_delta += int(changed.sum()) * new_value.shape[-1] * 4
-            step_full += new_value.size * 4
+            t_io["dispatch"] += time.time() - td
+            return _InFlight(s, v2, buckets, g2)
+
+        def commit(e):
+            """Drain one clean super-partition D2H and commit its host
+            state (delta vs full write-back policy; both byte counts are
+            measured every superstep to feed the cost model's storage
+            dimension). Blocking on the value pull is the pipeline's
+            compute-wait; everything after is host-side commit time."""
+            tw = time.time()
+            new_value = np.asarray(e.v2.value)   # blocks on e's step
+            t_io["wait"] += time.time() - tw
+            tc = time.time()
+            sl = slice(e.s * sp, (e.s + 1) * sp)
+            changed = np.any(new_value != host["value"][sl], axis=-1)
+            d_b = int(changed.sum()) * new_value.shape[-1] * 4
+            f_b = new_value.size * 4
             if plan.storage == "delta":
                 host["value"][sl][changed] = new_value[changed]
             else:
                 host["value"][sl] = new_value
-            host["halt"][sl] = np.asarray(v2.halt)
-            host["vid"][sl] = np.asarray(v2.vid)
-            host["edge_dst"][sl] = np.asarray(v2.edge_dst)
-            host["edge_val"][sl] = np.asarray(v2.edge_val)
-            out_blocks.append((np.asarray(buckets.dst),
-                               np.asarray(buckets.payload),
-                               np.asarray(buckets.valid)))
-            halt_all &= bool(np.all(host["halt"][sl] |
-                                    (host["vid"][sl] < 0)))
-            active += int(g2.active_count)
-            agg += np.asarray(g2.aggregate)
-            s += 1
+            host["halt"][sl] = np.asarray(e.v2.halt)
+            host["vid"][sl] = np.asarray(e.v2.vid)
+            host["edge_dst"][sl] = np.asarray(e.v2.edge_dst)
+            host["edge_val"][sl] = np.asarray(e.v2.edge_val)
+            done = _Done(
+                block=(np.asarray(e.buckets.dst),
+                       np.asarray(e.buckets.payload),
+                       np.asarray(e.buckets.valid)),
+                halt_ok=bool(np.all(host["halt"][sl] |
+                                    (host["vid"][sl] < 0))),
+                active=int(e.g2.active_count),
+                agg=np.asarray(e.g2.aggregate),
+                delta_bytes=d_b, full_bytes=f_b)
+            t_io["commit"] += time.time() - tc
+            return done
+
+        while todo or pending:
+            # fill the pipeline window
+            while todo and len(pending) < window:
+                pending.append(dispatch(todo.popleft()))
+            # collect a completed super-partition — out of dispatch order
+            # when a later one is already done — else block on the oldest
+            j = 0
+            if len(pending) > 1:
+                j = next((k for k, e in enumerate(pending)
+                          if e.g2.overflow.is_ready()), 0)
+            e = pending.pop(j)
+            delta = np.asarray(e.g2.overflow) - ovf0    # blocks on e
+            if (delta > 0).any():
+                # DEFERRED OVERFLOW: a bucket / frontier / mutation /
+                # edge capacity overflowed mid-pipeline. Unwind the
+                # in-flight prefetch: drain every pending result,
+                # committing the ones that finished clean and marking
+                # overflowed ones for redo; then double ONLY the
+                # overflowed capacities, re-jit, end-pad the committed
+                # blocks and redo from retained host state (nothing from
+                # a dirty step was committed).
+                redo = {e.s}
+                for other in pending:
+                    od = np.asarray(other.g2.overflow) - ovf0
+                    if (od > 0).any():
+                        delta = delta + od
+                        redo.add(other.s)
+                    else:
+                        committed[other.s] = commit(other)
+                pending = []
+                ec = grow_overflowed(ec, delta)
+                step = jit_superstep(program, plan, ec, donate_vertex=True)
+                seen_widths = {C_in}
+                for s2, done in committed.items():
+                    committed[s2] = dataclasses.replace(
+                        done, block=_pad_run_width(done.block,
+                                                   ec.bucket_cap))
+                todo = deque(sorted(redo | set(todo)))
+                stats.append(coll.event(
+                    i, "regrow", bucket_cap=ec.bucket_cap,
+                    frontier_cap=ec.frontier_cap,
+                    mutation_cap=ec.mutation_cap,
+                    sources=np.flatnonzero(delta > 0).tolist(),
+                    redo=sorted(redo)).as_dict())
+                this_recompiled = True
+                continue
+            committed[e.s] = commit(e)
+
+        # superstep barrier: fold the per-super-partition results in
+        # super-partition order (float aggregate order must not depend on
+        # pipeline completion order — bit-for-bit vs the synchronous loop)
+        ordered = [committed[s] for s in range(n_sp)]
+        halt_all = all(d.halt_ok for d in ordered)
+        active = sum(d.active for d in ordered)
+        agg = np.zeros((program.agg_dims,), np.float32)
+        for d in ordered:
+            agg += d.agg
+        step_delta = sum(d.delta_bytes for d in ordered)
+        step_full = sum(d.full_bytes for d in ordered)
+        out_blocks = [d.block for d in ordered]
         delta_bytes += step_delta
         full_bytes += step_full
         # vectorized inbox rebuild: stack the (sp, P, C) blocks into
@@ -267,7 +378,11 @@ def run_out_of_core(vert: VertexRel, program: VertexProgram,
                           recompiled=this_recompiled,
                           delta_bytes=delta_bytes, full_bytes=full_bytes,
                           change_density=step_delta / max(step_full, 1),
-                          storage=plan.storage, ooc=True)
+                          storage=plan.storage, ooc=True,
+                          streaming=stream,
+                          dispatch_s=t_io["dispatch"],
+                          collect_wait_s=t_io["wait"],
+                          commit_s=t_io["commit"])
         stats.append(rec.as_dict())
         switched = False
         if controller is not None and not bool(gs.halt):
@@ -295,7 +410,7 @@ def run_out_of_core(vert: VertexRel, program: VertexProgram,
                 if need.bucket_cap > ec.bucket_cap:
                     ec = dataclasses.replace(ec,
                                              bucket_cap=need.bucket_cap)
-                step = jax.jit(make_superstep(program, plan, ec))
+                step = jit_superstep(program, plan, ec, donate_vertex=True)
                 seen_widths = set()
                 stats.append(coll.event(
                     i, "plan-switch", join=plan.join,
@@ -314,7 +429,7 @@ def run_out_of_core(vert: VertexRel, program: VertexProgram,
                     FRONTIER_FLOOR:
                 ec = dataclasses.replace(
                     ec, frontier_cap=max(FRONTIER_FLOOR, act * 2))
-                step = jax.jit(make_superstep(program, plan, ec))
+                step = jit_superstep(program, plan, ec, donate_vertex=True)
                 seen_widths = set()
                 stats.append(coll.event(
                     i, "frontier-refit",

@@ -51,13 +51,26 @@ class MsgRel:
         return self.dst.shape[1]
 
 
+# GlobalState.overflow attributes every capacity overflow to its source,
+# so a regrow can double ONLY the capacity that actually overflowed — a
+# frontier overflow no longer drags the bucket tensors (the device-memory
+# hot spot on the budgeted OOC path) along with it.
+OVF_BUCKET = 0     # message bucket capacity (EngineConfig.bucket_cap)
+OVF_FRONTIER = 1   # left-outer frontier compaction (frontier_cap)
+OVF_MUTATION = 2   # insert-proposal buckets (mutation_cap)
+OVF_EDGE = 3       # frontier edge-stream compaction (scales with
+                   # frontier_cap: EF = frontier_cap * 8)
+N_OVERFLOW = 4
+
+
 @jax.tree_util.register_dataclass
 @dataclass
 class GlobalState:
     halt: jax.Array         # () bool
     aggregate: jax.Array    # (A,) float32 user aggregate
     superstep: jax.Array    # () int32
-    overflow: jax.Array     # () int32 dropped messages (capacity overflow)
+    overflow: jax.Array     # (N_OVERFLOW,) int32 dropped tuples per source
+                            # (bucket / frontier / mutation / edge)
     active_count: jax.Array  # () int32 (statistics collector)
     msg_count: jax.Array     # () int32
 
@@ -72,7 +85,7 @@ def init_gs(agg_dims: int) -> GlobalState:
     return GlobalState(halt=jnp.array(False),
                        aggregate=jnp.zeros((agg_dims,), jnp.float32),
                        superstep=jnp.array(0, jnp.int32),
-                       overflow=jnp.array(0, jnp.int32),
+                       overflow=jnp.zeros((N_OVERFLOW,), jnp.int32),
                        active_count=jnp.array(0, jnp.int32),
                        msg_count=jnp.array(0, jnp.int32))
 

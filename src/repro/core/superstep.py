@@ -283,7 +283,6 @@ def make_superstep(program: VertexProgram, plan: PhysicalPlan,
         r_dst, r_pay, r_val, ovf = route(dst, payload, valid, ec.bucket_cap,
                                          Np, collect=ec.ooc_collect,
                                          presorted=presorted)
-        ovf = ovf + ovf_edges
         ovf_f = frontier[2].sum() if frontier is not None else 0
         # 5. mutations (D6)
         m_ovf = jnp.zeros((), jnp.int32)
@@ -293,11 +292,18 @@ def make_superstep(program: VertexProgram, plan: PhysicalPlan,
                 or out.new_edge_val is not None):
             vid, value, halt, edge_dst, edge_val, m_ovf = apply_mutations(
                 vert, value, halt, out, gs)
-        # 6. global state (D4/D5/D8/D9)
+        # 6. global state (D4/D5/D8/D9). Overflow is counted PER SOURCE
+        # (bucket / frontier / mutation / edge) so the drivers' regrow
+        # paths double only the capacity that actually overflowed.
         msg_count = red_sum(r_val).astype(jnp.int32)
-        overflow = (red_sum(ovf) + red_sum(m_ovf) +
-                    (red_sum(ovf_f) if frontier is not None else 0)
-                    ).astype(jnp.int32)
+        # (order = relations.OVF_BUCKET/FRONTIER/MUTATION/EDGE)
+        zero = jnp.zeros((), jnp.int32)
+        overflow = jnp.stack([
+            red_sum(ovf).astype(jnp.int32),
+            (red_sum(ovf_f).astype(jnp.int32) if frontier is not None
+             else zero),
+            red_sum(m_ovf).astype(jnp.int32),
+            red_sum(ovf_edges).astype(jnp.int32)])
         active_count = red_sum(active).astype(jnp.int32)
         if agg is not None:
             contrib, mask = agg
@@ -324,3 +330,20 @@ def make_superstep(program: VertexProgram, plan: PhysicalPlan,
         return new_vert, new_msg, new_gs
 
     return superstep
+
+
+def jit_superstep(program: VertexProgram, plan: PhysicalPlan,
+                  ec: EngineConfig, *, donate_vertex: bool = False):
+    """jit the superstep, optionally DONATING the vertex-relation input
+    buffers to their updated outputs (the shapes match field-for-field).
+    The OOC streaming executor keeps several super-partitions in flight
+    at once; donation lets XLA reuse each uploaded vertex block for its
+    result instead of doubling the resident footprint per pipeline slot.
+    The message and global-state arguments are never donated: the
+    streaming dispatcher shares one GlobalState across every in-flight
+    super-partition, and the collected bucket outputs do not alias the
+    inbox-slice shapes."""
+    fn = make_superstep(program, plan, ec)
+    if donate_vertex:
+        return jax.jit(fn, donate_argnums=(0,))
+    return jax.jit(fn)

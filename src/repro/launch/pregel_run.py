@@ -14,8 +14,8 @@ import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
-from repro.core import (EngineConfig, GlobalState, MsgRel, PhysicalPlan,  # noqa: E402
-                        VertexRel, make_superstep)
+from repro.core import (N_OVERFLOW, EngineConfig, GlobalState, MsgRel,  # noqa: E402
+                        PhysicalPlan, VertexRel, make_superstep)
 from repro.graph import SSSP, ConnectedComponents, PageRank  # noqa: E402
 from repro.launch import hlo_cost  # noqa: E402
 from repro.launch.dryrun import HBM_BW, LINK_BW, PEAK_FLOPS  # noqa: E402
@@ -70,7 +70,7 @@ def abstract_graph_state(n_vertices: int, n_edges: int, P_total: int,
     gs = GlobalState(halt=sds((), jnp.bool_),
                      aggregate=sds((program.agg_dims,), jnp.float32),
                      superstep=sds((), jnp.int32),
-                     overflow=sds((), jnp.int32),
+                     overflow=sds((N_OVERFLOW,), jnp.int32),
                      active_count=sds((), jnp.int32),
                      msg_count=sds((), jnp.int32))
     return vert, msg, gs, ec
@@ -178,6 +178,14 @@ def main():
     ap.add_argument("--budget-partitions", type=int, default=0,
                     help="device-memory budget in partitions for --ooc "
                          "(default: parts // 2)")
+    ap.add_argument("--stream", dest="stream", action="store_true",
+                    default=True,
+                    help="pipeline the --ooc super-partition stream: "
+                         "prefetch the next upload and drain the previous "
+                         "result while the current one computes (default)")
+    ap.add_argument("--no-stream", dest="stream", action="store_false",
+                    help="synchronous --ooc loop: upload, step, block, "
+                         "collect per super-partition")
     args = ap.parse_args()
 
     plan = "auto" if args.auto_plan else PhysicalPlan(
@@ -228,8 +236,10 @@ def main():
             budget = next(b for b in range(max(args.parts // 2, 1), 0, -1)
                           if args.parts % b == 0)
         res = run_out_of_core(vert, program, plan,
-                              budget_partitions=budget, max_supersteps=40)
-        mode = f"out-of-core (budget={budget}/{args.parts} partitions)"
+                              budget_partitions=budget, max_supersteps=40,
+                              stream=args.stream)
+        mode = (f"out-of-core (budget={budget}/{args.parts} partitions, "
+                f"{'streaming' if args.stream else 'synchronous'})")
     else:
         res = run_host(vert, program, plan, max_supersteps=40)
         mode = "in-memory"

@@ -20,8 +20,9 @@ from repro.planner.adaptive import (AdaptiveConfig, AdaptiveController,
                                     migrate_msgs, resolve_auto_plan)
 from repro.planner.cost import (DEFAULT_MACHINE, EMULATED_MACHINE,
                                 GraphStats, MachineModel, Observation,
-                                PlanCost, bucket_cap, estimate,
-                                hlo_calibrate, refit_frontier_cap)
+                                PlanCost, bucket_cap, calibrate_machine,
+                                estimate, hlo_calibrate,
+                                refit_frontier_cap)
 from repro.planner.optimizer import choose, plan_space, rank
 from repro.planner.stats import StatsCollector, SuperstepStats, msg_bytes
 
@@ -29,7 +30,8 @@ __all__ = [
     "AdaptiveConfig", "AdaptiveController", "migrate_msgs",
     "resolve_auto_plan", "DEFAULT_MACHINE", "EMULATED_MACHINE",
     "GraphStats", "MachineModel",
-    "Observation", "PlanCost", "bucket_cap", "estimate", "hlo_calibrate",
+    "Observation", "PlanCost", "bucket_cap", "calibrate_machine",
+    "estimate", "hlo_calibrate",
     "refit_frontier_cap", "choose", "plan_space", "rank", "StatsCollector",
     "SuperstepStats", "msg_bytes",
 ]

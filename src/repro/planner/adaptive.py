@@ -31,6 +31,11 @@ class AdaptiveConfig:
     patience: int = 2        # consecutive supersteps preferring it
     cooldown: int = 3        # min supersteps between switches
     min_superstep: int = 1   # never switch before this superstep
+    # one-shot startup calibration: lower probe supersteps on the live
+    # backend and refit the cost model's analytic constants against the
+    # HLO analyzer before picking the initial plan (cost.calibrate_machine;
+    # compile-time heavy, cached per backend)
+    calibrate: bool = False
 
 
 class AdaptiveController:
@@ -66,7 +71,9 @@ class AdaptiveController:
                           bucket_cap=bucket_cap,
                           change_density=rec.extra.get(
                               "change_density", 1.0),
-                          ooc=bool(rec.extra.get("ooc", False)))
+                          ooc=bool(rec.extra.get("ooc", False)),
+                          streaming=bool(rec.extra.get("streaming",
+                                                       False)))
         best, best_cost = choose(self.program, self.g, obs,
                                  base=self.plan, machine=self.machine,
                                  **self.space_kw)

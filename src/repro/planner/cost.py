@@ -24,6 +24,7 @@ the single-chip roofline bound, a lower bound on real wall time.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, field
 
@@ -33,8 +34,11 @@ WORD = 4          # bytes per int32/float32 element
 
 # ---- analytic constants (units in comments; hand-tuned against
 # ``hlo_calibrate``, which lowers a real superstep and measures it with the
-# trip-count-aware HLO analyzer — the periodic re-calibration loop that
-# would refresh these per backend is a ROADMAP item)
+# trip-count-aware HLO analyzer). These are the DEFAULTS: ``MachineModel``
+# carries a per-instance copy, and ``calibrate_machine`` refits them per
+# backend from lowered probe supersteps at startup when a driver opts in
+# (``AdaptiveConfig.calibrate``); the periodic re-calibration loop is
+# still a ROADMAP item.
 
 # K_COMPUTE [flops/element]: arithmetic intensity of one fused elementwise
 # UDF stage (compute/send/combine bodies lower to a handful of fused ops
@@ -58,12 +62,18 @@ MIN_FRONTIER = FRONTIER_FLOOR   # the driver's refit floor
 
 @dataclass(frozen=True)
 class MachineModel:
-    """Roofline constants (defaults: TPU v5e, as in launch/dryrun.py)."""
+    """Roofline constants (defaults: TPU v5e, as in launch/dryrun.py) plus
+    the analytic cost constants, so ``calibrate_machine`` can refit the
+    latter per backend without touching module globals."""
     peak_flops: float = 197e12   # bf16 flops/s per chip
     hbm_bw: float = 819e9        # bytes/s per chip
     link_bw: float = 50e9        # bytes/s per ICI link
     host_bw: float = 32e9        # bytes/s device<->host (PCIe-class); the
-                                 # OOC storage write-back crosses this link
+                                 # OOC streaming traffic and storage
+                                 # write-back cross this link
+    k_compute: float = K_COMPUTE
+    k_scatter: float = K_SCATTER
+    sort_pass_frac: float = SORT_PASS_FRAC
 
 
 DEFAULT_MACHINE = MachineModel()
@@ -117,6 +127,11 @@ class Observation:
     # only then does the storage write-back cross the host link and enter
     # the cost; in-memory drivers keep the Vertex relation resident.
     ooc: bool = False
+    # True when the OOC executor PIPELINES the super-partition stream
+    # (core/ooc.py stream=True): host-link transfers then overlap device
+    # compute, so the model prices the superstep as max(step, transfer)
+    # instead of step + transfer (PlanCost.overlap_host).
+    streaming: bool = False
 
 
 @dataclass
@@ -126,6 +141,9 @@ class PlanCost:
     exchange_bytes: float = 0.0   # cross-partition link bytes
     host_bytes: float = 0.0       # device<->host link bytes (OOC only)
     terms: dict = field(default_factory=dict)   # per-operator seconds
+    # pipelined OOC streaming: the host link runs concurrently with the
+    # device, so total seconds = max(device, host) instead of their sum
+    overlap_host: bool = False
 
     def add(self, term: str, machine: MachineModel, *, flops: float = 0.0,
             bytes: float = 0.0, exchange_bytes: float = 0.0,
@@ -139,11 +157,27 @@ class PlanCost:
             exchange_bytes / machine.link_bw +
             host_bytes / machine.host_bw)
 
-    def seconds(self, machine: MachineModel = DEFAULT_MACHINE) -> float:
+    def device_seconds(self, machine: MachineModel = DEFAULT_MACHINE) \
+            -> float:
         return (self.flops / machine.peak_flops +
                 self.bytes / machine.hbm_bw +
-                self.exchange_bytes / machine.link_bw +
-                self.host_bytes / machine.host_bw)
+                self.exchange_bytes / machine.link_bw)
+
+    def host_seconds(self, machine: MachineModel = DEFAULT_MACHINE) \
+            -> float:
+        return self.host_bytes / machine.host_bw
+
+    def seconds(self, machine: MachineModel = DEFAULT_MACHINE) -> float:
+        dev = self.device_seconds(machine)
+        hst = self.host_seconds(machine)
+        if self.overlap_host:
+            # the streaming executor hides the slower of the two behind
+            # the other; steady state settles at their max. The small
+            # residual breaks ties among transfer-bound plans toward the
+            # one doing less total work (overlap is never quite perfect,
+            # and less hidden work frees the pipeline sooner).
+            return max(dev, hst) + 1e-3 * (dev + hst)
+        return dev + hst
 
 
 def bucket_cap(plan: PhysicalPlan, g: GraphStats, slack: float = 1.5) -> int:
@@ -161,11 +195,11 @@ def refit_frontier_cap(g: GraphStats, density: float) -> int:
                    max(MIN_FRONTIER, FRONTIER_SLACK * live_pp)))
 
 
-def _sort_bytes(n: float, width: float) -> float:
+def _sort_bytes(n: float, width: float, frac: float) -> float:
     """Memory traffic of one argsort+permute over n keyed rows of `width`
-    bytes (log-pass model; see SORT_PASS_FRAC)."""
+    bytes (log-pass model; `frac` = the machine's sort_pass_frac)."""
     n = max(n, 2.0)
-    return SORT_PASS_FRAC * math.log2(n) * n * width
+    return frac * math.log2(n) * n * width
 
 
 def estimate(plan: PhysicalPlan, g: GraphStats, obs: Observation,
@@ -174,6 +208,8 @@ def estimate(plan: PhysicalPlan, g: GraphStats, obs: Observation,
     statistics. Follows superstep.py's operator order D1..D3."""
     P, Np, Ep = g.n_partitions, g.vertex_capacity, g.edge_capacity
     D, V = g.msg_dims, g.value_dims
+    kc, ks = machine.k_compute, machine.k_scatter
+    sort_b = lambda n, w: _sort_bytes(n, w, machine.sort_pass_frac)
     f = min(max(obs.frontier_density, 1.0 / max(Np, 1)), 1.0)
     c = PlanCost()
     cap = max(bucket_cap(plan, g), obs.bucket_cap)
@@ -184,18 +220,18 @@ def estimate(plan: PhysicalPlan, g: GraphStats, obs: Observation,
     if plan.connector == "partitioning_merging":
         # presorted runs: one segmented scan, then a scatter of the <=1
         # surviving partial per (run, dst) — run_combine_dense
-        c.add("recv_groupby", machine, flops=K_COMPUTE * M * D,
-              bytes=(1 + K_SCATTER) * M * msg_w)
+        c.add("recv_groupby", machine, flops=kc * M * D,
+              bytes=(1 + ks) * M * msg_w)
     elif plan.groupby == "sort":
-        c.add("recv_groupby", machine, flops=K_COMPUTE * M * D,
-              bytes=_sort_bytes(M, msg_w) + M * msg_w)
+        c.add("recv_groupby", machine, flops=kc * M * D,
+              bytes=sort_b(M, msg_w) + M * msg_w)
     else:  # scatter (hash)
-        c.add("recv_groupby", machine, flops=K_COMPUTE * M * D,
-              bytes=K_SCATTER * M * msg_w)
+        c.add("recv_groupby", machine, flops=kc * M * D,
+              bytes=ks * M * msg_w)
 
     # D1/D2: join + compute + write-back
     if plan.join == "full_outer":
-        c.add("join_compute", machine, flops=K_COMPUTE * Np * (V + D),
+        c.add("join_compute", machine, flops=kc * Np * (V + D),
               bytes=Np * (2 * V + D + 1) * WORD)
         e_work = Ep
     else:
@@ -203,9 +239,9 @@ def estimate(plan: PhysicalPlan, g: GraphStats, obs: Observation,
         # mask scan + cumsum over all slots, edge-gate prepass over all
         # edges, then gather/compute/scatter-back only F rows
         c.add("join_compute", machine,
-              flops=K_COMPUTE * F * (V + D),
+              flops=kc * F * (V + D),
               bytes=(Np + Ep) * WORD +
-              K_SCATTER * F * (2 * V + D + 1) * WORD)
+              ks * F * (2 * V + D + 1) * WORD)
         # gen_messages compacts the edge stream to EF = min(8F, Ep); when
         # the live frontier's edges (~f*Ep) outgrow that, the driver's
         # overflow-regrow doubles the capacity until they fit, so the
@@ -213,13 +249,13 @@ def estimate(plan: PhysicalPlan, g: GraphStats, obs: Observation,
         e_work = min(max(8 * F, MIN_FRONTIER, f * Ep), Ep)
 
     # D3: edge-parallel payload generation
-    c.add("send", machine, flops=K_COMPUTE * e_work * D,
-          bytes=K_SCATTER * e_work * (V + D + 2) * WORD)
+    c.add("send", machine, flops=kc * e_work * D,
+          bytes=ks * e_work * (V + D + 2) * WORD)
 
     # D3/D7: sender combine = sort + segmented fold over the edge stream
     if plan.sender_combine:
-        c.add("sender_combine", machine, flops=K_COMPUTE * e_work * D,
-              bytes=_sort_bytes(e_work, msg_w) + e_work * msg_w)
+        c.add("sender_combine", machine, flops=kc * e_work * D,
+              bytes=sort_b(e_work, msg_w) + e_work * msg_w)
 
     # connector bucket build (bucket_by_owner): the merging connector
     # with hash partitioning sorts twice (by dst, then stably by owner);
@@ -232,20 +268,29 @@ def estimate(plan: PhysicalPlan, g: GraphStats, obs: Observation,
         n_sorts = 2
     else:
         n_sorts = 1
-    c.add("connector", machine, flops=K_COMPUTE * e_work,
-          bytes=n_sorts * _sort_bytes(e_work, msg_w) +
-          K_SCATTER * e_work * msg_w)
+    c.add("connector", machine, flops=kc * e_work,
+          bytes=n_sorts * sort_b(e_work, msg_w) +
+          ks * e_work * msg_w)
 
     # exchange: fixed-capacity buckets cross the links whole
     c.add("exchange", machine,
           exchange_bytes=M * msg_w * (P - 1) / max(P, 1))
 
-    # storage write-back (OOC only): in-memory drivers keep the Vertex
-    # relation resident, but a streamed super-partition must push its
-    # vertex updates back over the device<->host link and into the host
-    # store every superstep. `change_density` is the measured
-    # delta_bytes/full_bytes ratio from the OOC statistics stream.
     if obs.ooc:
+        # super-partition streaming I/O: every superstep the vertex block
+        # (vid/halt/value/edges) and its inbox runs go H2D, and the
+        # vid/halt/edge updates plus collected sender buckets come back
+        # D2H (the value write-back is priced separately below, by
+        # storage policy). Plan-dependent through M: a sender combine
+        # shrinks the bucket capacity that crosses the link.
+        up = Np * ((1 + V) * WORD + 1) + 3 * Ep * WORD + M * msg_w
+        down = Np * (WORD + 1) + 2 * Ep * WORD + M * msg_w
+        c.add("stream_io", machine, host_bytes=up + down)
+        # storage write-back: a streamed super-partition must push its
+        # vertex VALUE updates back over the device<->host link and into
+        # the host store every superstep. `change_density` is the
+        # measured delta_bytes/full_bytes ratio from the OOC statistics
+        # stream.
         vblock = Np * V * WORD
         if plan.storage == "delta":
             cd = min(max(obs.change_density, 0.0), 1.0)
@@ -253,11 +298,14 @@ def estimate(plan: PhysicalPlan, g: GraphStats, obs: Observation,
             # streams the store once and the merge scatters the survivors
             c.add("storage_writeback", machine,
                   host_bytes=cd * Np * (1 + V) * WORD,
-                  bytes=vblock + K_SCATTER * cd * vblock)
+                  bytes=vblock + ks * cd * vblock)
         else:
             # the full value block streams across the link and the store
             c.add("storage_writeback", machine,
                   host_bytes=vblock, bytes=vblock)
+        # the pipelined executor overlaps the host link with compute:
+        # rank plans by max(device, host) instead of their sum
+        c.overlap_host = bool(obs.streaming)
     return c
 
 
@@ -271,7 +319,8 @@ def hlo_calibrate(program, plan: PhysicalPlan, g: GraphStats,
     import jax
     import jax.numpy as jnp
 
-    from repro.core.relations import GlobalState, MsgRel, VertexRel
+    from repro.core.relations import (N_OVERFLOW, GlobalState, MsgRel,
+                                      VertexRel)
     from repro.core.superstep import EngineConfig, make_superstep
     from repro.launch import hlo_cost
 
@@ -294,8 +343,89 @@ def hlo_calibrate(program, plan: PhysicalPlan, g: GraphStats,
     gs = GlobalState(halt=sds((), jnp.bool_),
                      aggregate=sds((program.agg_dims,), jnp.float32),
                      superstep=sds((), jnp.int32),
-                     overflow=sds((), jnp.int32),
+                     overflow=sds((N_OVERFLOW,), jnp.int32),
                      active_count=sds((), jnp.int32),
                      msg_count=sds((), jnp.int32))
     compiled = jax.jit(step).lower(vert, msg, gs).compile()
     return hlo_cost.analyze(compiled.as_text())
+
+
+# (backend name, combine_op) -> fitted (k_compute, k_scatter,
+# sort_pass_frac); the one-shot startup calibration
+# (AdaptiveConfig.calibrate) fills this once per process — the constants
+# are compiler/backend properties, but the probe plans legal for a custom
+# combine UDF differ from the monoid ones, so the fit is cached per
+# combine class too. The periodic refresh loop stays future work.
+_CALIBRATED: dict = {}
+
+
+def _fit_constants(program, g: GraphStats, machine: MachineModel):
+    """Refit (k_compute, k_scatter, sort_pass_frac) against the HLO
+    analyzer. Two probe plans (a scatter-heavy and a sort-heavy group-by;
+    sort-only for custom combine UDFs) are lowered at the capacities
+    ``estimate`` assumes and measured with ``hlo_calibrate``. The model's
+    flops are linear in k_compute and its bytes are affine in
+    (k_scatter, sort_pass_frac), so unit-coefficient estimates turn the
+    fit into one ratio and one 2x2 least-squares solve. Fitted values are
+    clamped to sane ranges; a degenerate system keeps the defaults."""
+    import numpy as np
+    obs = Observation(frontier_density=1.0)
+    if program.combine_op == "custom":
+        probes = [PhysicalPlan(join="full_outer", groupby="sort",
+                               connector="partitioning",
+                               sender_combine=False),
+                  PhysicalPlan(join="full_outer", groupby="sort",
+                               connector="partitioning",
+                               sender_combine=True)]
+    else:
+        probes = [PhysicalPlan(join="full_outer", groupby="scatter",
+                               connector="partitioning",
+                               sender_combine=False),
+                  PhysicalPlan(join="full_outer", groupby="sort",
+                               connector="partitioning",
+                               sender_combine=False)]
+    P = max(g.n_partitions, 1)   # hlo measures all partitions; the model
+    unit = lambda kc, ks, sp: dataclasses.replace(   # is per-partition
+        machine, k_compute=kc, k_scatter=ks, sort_pass_frac=sp)
+    kcs, rows, rhs = [], [], []
+    for p in probes:
+        meas = hlo_calibrate(program, p, g, obs)
+        f_unit = estimate(p, g, obs, unit(1.0, 0.0, 0.0)).flops
+        if f_unit > 0 and meas.flops > 0:
+            kcs.append(meas.flops / P / f_unit)
+        base = estimate(p, g, obs, unit(0.0, 0.0, 0.0)).bytes
+        scat = estimate(p, g, obs, unit(0.0, 1.0, 0.0)).bytes - base
+        srt = estimate(p, g, obs, unit(0.0, 0.0, 1.0)).bytes - base
+        rows.append([scat, srt])
+        rhs.append(meas.bytes / P - base)
+    kc = (float(np.clip(np.mean(kcs), 0.5, 128.0)) if kcs
+          else machine.k_compute)
+    ks, sp = machine.k_scatter, machine.sort_pass_frac
+    try:
+        sol, *_ = np.linalg.lstsq(np.asarray(rows, float),
+                                  np.asarray(rhs, float), rcond=None)
+        if np.isfinite(sol).all():
+            ks = float(np.clip(sol[0], 1.0, 64.0))
+            sp = float(np.clip(sol[1], 0.02, 4.0))
+    except np.linalg.LinAlgError:
+        pass
+    return kc, ks, sp
+
+
+def calibrate_machine(program, g: GraphStats,
+                      machine: MachineModel = DEFAULT_MACHINE
+                      ) -> MachineModel:
+    """One-shot startup calibration (opt-in via
+    ``AdaptiveConfig.calibrate``): lower probe supersteps on the CURRENT
+    backend, measure them with the trip-count-aware HLO analyzer and
+    return a MachineModel whose analytic constants are refit to what this
+    backend's compiler actually emits, instead of the hand-tuned
+    K_COMPUTE / K_SCATTER / SORT_PASS_FRAC. Compile-time heavy, so the
+    fit is cached per backend for the life of the process."""
+    import jax
+    key = (jax.default_backend(), program.combine_op)
+    if key not in _CALIBRATED:
+        _CALIBRATED[key] = _fit_constants(program, g, machine)
+    kc, ks, sp = _CALIBRATED[key]
+    return dataclasses.replace(machine, k_compute=kc, k_scatter=ks,
+                               sort_pass_frac=sp)

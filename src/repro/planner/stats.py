@@ -13,8 +13,14 @@ Driver-specific observables travel in ``extra``: the out-of-core driver
 annotates every record with ``ooc=True``, cumulative ``delta_bytes`` /
 ``full_bytes`` (what the delta vs full write-back policies ship
 device->host), ``change_density`` (their per-superstep ratio — the signal
-behind the planner's storage dimension) and the active ``storage`` policy.
-``AdaptiveController.observe`` lifts these into the cost model's
+behind the planner's storage dimension), the active ``storage`` policy,
+the executor mode (``streaming``) and the pipeline's wall-time split:
+``dispatch_s`` (H2D upload + step enqueue), ``collect_wait_s`` (blocked
+on device results — the compute-bound share) and ``commit_s`` (host-side
+write-back), so benchmarks can report how close a superstep runs to the
+``max(compute, transfer)`` streaming bound (``benchmarks/out_of_core.py``
+aggregates them into ``BENCH_ooc.json``). ``AdaptiveController.observe``
+lifts ``ooc`` / ``change_density`` / ``streaming`` into the cost model's
 ``Observation``.
 """
 from __future__ import annotations

@@ -17,7 +17,8 @@ from pathlib import Path
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.relations import GlobalState, MsgRel, VertexRel
+from repro.core.relations import (N_OVERFLOW, GlobalState, MsgRel,
+                                  VertexRel)
 
 
 def save_checkpoint(ckpt_dir: str, superstep: int, vert: VertexRel,
@@ -54,7 +55,13 @@ def latest_checkpoint(ckpt_dir: str):
 
 
 def load_checkpoint(path: str):
-    z = np.load(path)
+    z = dict(np.load(path))
+    if z["gs_overflow"].ndim == 0:
+        # pre-split checkpoint: one aggregated counter — restore it into
+        # the bucket slot (the only source the old regrow could attribute)
+        ovf = np.zeros((N_OVERFLOW,), np.int32)
+        ovf[0] = int(z["gs_overflow"])
+        z["gs_overflow"] = ovf
     vert = VertexRel(vid=jnp.asarray(z["vid"]),
                      halt=jnp.asarray(z["halt"]),
                      value=jnp.asarray(z["value"]),

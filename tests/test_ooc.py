@@ -97,7 +97,11 @@ def test_ooc_auto_searches_full_space_and_switches_storage():
     """plan='auto' out-of-core: matches the static reference exactly, and
     on the high-diameter lattice (frontier collapses, few values change
     per superstep) re-plans mid-run onto storage='delta' — the scenario
-    the seed's _OOC_PLAN_SPACE fence made unreachable."""
+    the seed's _OOC_PLAN_SPACE fence made unreachable. Run synchronously:
+    the storage dimension is priced additively only when host transfers
+    do NOT overlap compute (under streaming the planner's max(step,
+    transfer) correctly collapses write-back savings that hide behind
+    compute — see test_streaming_observation_prices_with_overlap)."""
     side = 40
     n = side * side
     edges = grid_graph(side)
@@ -105,7 +109,8 @@ def test_ooc_auto_searches_full_space_and_switches_storage():
     static = run_host(load_graph(edges, n, P=4, value_dims=1), prog,
                       prog.suggested_plan, max_supersteps=100)
     auto = run_out_of_core(load_graph(edges, n, P=4, value_dims=1), prog,
-                           "auto", budget_partitions=2, max_supersteps=100)
+                           "auto", budget_partitions=2, max_supersteps=100,
+                           stream=False)
     assert np.array_equal(gather_values(auto.vertex, n),
                           gather_values(static.vertex, n))
     switches = [s for s in auto.stats if s.get("event") == "plan-switch"]
@@ -116,6 +121,7 @@ def test_ooc_auto_searches_full_space_and_switches_storage():
     recs = [s for s in auto.stats if "change_density" in s]
     assert recs and all(0.0 <= s["change_density"] <= 1.0 for s in recs)
     assert all(s["ooc"] for s in recs)
+    assert not any(s["streaming"] for s in recs)
 
 
 def test_ooc_runs_merging_connector_with_auto_space():
@@ -196,6 +202,115 @@ def test_sort_inbox_runs_orders_and_preserves_messages():
             k = v2[q, p].sum()
             assert v2[q, p][:k].all() and not v2[q, p][k:].any()
     assert sorted(dst[val]) == sorted(d2[v2])          # same multiset
+
+
+@pytest.mark.parametrize("algo", list(ALGOS))
+def test_streaming_matches_synchronous_bit_for_bit(algo):
+    """The pipelined executor (prefetch + async collect + deferred
+    commit) must be bit-for-bit identical to the synchronous loop —
+    including the float aggregate, which is folded in super-partition
+    order at the superstep barrier regardless of completion order."""
+    mk, vd = ALGOS[algo]
+    runs = {}
+    for streaming in (False, True):
+        prog = mk()
+        vert = load_graph(EDGES, N, P=4, value_dims=vd)
+        runs[streaming] = run_out_of_core(
+            vert, prog, prog.suggested_plan, budget_partitions=1,
+            max_supersteps=30, stream=streaming, prefetch_depth=3)
+    a, b = runs[False], runs[True]
+    assert np.array_equal(gather_values(a.vertex, N),
+                          gather_values(b.vertex, N))
+    assert a.supersteps == b.supersteps
+    assert np.array_equal(np.asarray(a.gs.aggregate),
+                          np.asarray(b.gs.aggregate))
+    # and both match the in-memory reference exactly
+    assert np.array_equal(gather_values(b.vertex, N),
+                          _host_ref(algo, "partitioning"))
+    # the streamed run annotates the transfer/compute wall-time split
+    recs = [s for s in b.stats if "wall_s" in s]
+    assert recs and all(s["streaming"] for s in recs)
+    for f in ("dispatch_s", "collect_wait_s", "commit_s"):
+        assert all(s[f] >= 0.0 for s in recs)
+    assert not any(s["streaming"] for s in a.stats if "wall_s" in s)
+
+
+def test_streaming_overflow_mid_pipeline_regrows():
+    """An overflow that lands while later super-partitions are already in
+    flight must unwind the prefetch, regrow and redo — committing only
+    clean results — and still match the synchronous run bit-for-bit."""
+    prog = SSSP(source=3)
+    ec = EngineConfig(n_parts=4, bucket_cap=2,
+                      frontier_cap=0)   # bucket AND frontier stress
+    results = {}
+    for streaming in (False, True):
+        vert = load_graph(EDGES, N, P=4, value_dims=1)
+        res = run_out_of_core(vert, prog, prog.suggested_plan,
+                              budget_partitions=1, max_supersteps=30,
+                              ec=ec, stream=streaming, prefetch_depth=4)
+        regrows = [s for s in res.stats if s.get("event") == "regrow"]
+        assert regrows, "expected a mid-pipeline regrow"
+        assert regrows[-1]["bucket_cap"] > 2
+        results[streaming] = res
+    assert np.array_equal(gather_values(results[True].vertex, N),
+                          gather_values(results[False].vertex, N))
+    assert np.array_equal(gather_values(results[True].vertex, N),
+                          _host_ref("sssp", "partitioning"))
+
+
+def test_overflow_attributed_to_source_leaves_buckets_alone():
+    """Per-source overflow counters: a frontier overflow must regrow the
+    frontier capacity WITHOUT doubling the bucket tensors — the
+    device-memory hot spot on the budgeted OOC path."""
+    prog = SSSP(source=3)
+    vert = load_graph(EDGES, N, P=4, value_dims=1)
+    plan = dataclasses.replace(prog.suggested_plan, join="left_outer")
+    ec = EngineConfig(n_parts=4, bucket_cap=64, frontier_cap=4)
+    res = run_out_of_core(vert, prog, plan, budget_partitions=2,
+                          max_supersteps=30, ec=ec)
+    regrows = [s for s in res.stats if s.get("event") == "regrow"]
+    assert regrows
+    assert regrows[-1]["frontier_cap"] > 4
+    assert all(r["bucket_cap"] == 64 for r in regrows), \
+        "frontier overflow must not drag bucket capacity"
+    assert np.array_equal(gather_values(res.vertex, N),
+                          _host_ref("sssp", "partitioning"))
+
+
+def test_host_driver_overflow_attribution():
+    """run_host's regrow likewise doubles only the overflowed source."""
+    from repro.core import run_host as _run_host
+    prog = SSSP(source=3)
+    vert = load_graph(EDGES, N, P=4, value_dims=1)
+    plan = dataclasses.replace(prog.suggested_plan, join="left_outer")
+    ec = EngineConfig(n_parts=4, bucket_cap=64, frontier_cap=4)
+    res = _run_host(vert, prog, plan, max_supersteps=30, ec=ec)
+    regrows = [s for s in res.stats if s.get("event") == "regrow"]
+    assert regrows
+    assert regrows[-1]["frontier_cap"] > 4
+    assert all(r["bucket_cap"] == 64 for r in regrows)
+    assert np.array_equal(gather_values(res.vertex, N),
+                          _host_ref("sssp", "partitioning"))
+
+
+def test_sort_inbox_runs_is_stable_within_equal_dsts():
+    """The run sort must be STABLE: messages sharing a dst keep their
+    arrival order (combine-order determinism for non-commutative custom
+    folds), and invalid slots stay an end-aligned suffix."""
+    P, C, D = 2, 6, 1
+    dst = np.array([[[5, 5, 3, 5, -1, -1]] * P] * P, np.int32)
+    val = dst >= 0
+    # payload tags arrival order within the duplicate dst=5 group
+    pay = np.arange(P * P * C, dtype=np.float32).reshape(P, P, C, 1)
+    d2, p2, v2 = _sort_inbox_runs((dst, pay, val))
+    for q in range(P):
+        for p in range(P):
+            assert (d2[q, p][v2[q, p]] == [3, 5, 5, 5]).all()
+            five = p2[q, p][d2[q, p] == 5, 0]
+            assert (np.diff(five) > 0).all(), \
+                "equal-dst messages must keep arrival order"
+            k = v2[q, p].sum()
+            assert v2[q, p][:k].all() and not v2[q, p][k:].any()
 
 
 def test_round_run_width_pow2_clamped():

@@ -98,6 +98,78 @@ def test_storage_cost_follows_measured_change_density():
     assert estimate(inplace, WEB, in_mem).host_bytes == 0
 
 
+def test_streaming_observation_prices_with_overlap():
+    """Under the pipelined OOC executor the host link overlaps compute:
+    the model prices the superstep at ~max(device, host) instead of
+    their sum — streaming cost is never above synchronous cost and is
+    strictly below it whenever both sides are non-trivial."""
+    plan = PhysicalPlan()
+    sync = estimate(plan, WEB, Observation(ooc=True))
+    strm = estimate(plan, WEB, Observation(ooc=True, streaming=True))
+    assert not sync.overlap_host and strm.overlap_host
+    # identical traffic, different composition rule
+    assert strm.host_bytes == sync.host_bytes
+    assert strm.bytes == sync.bytes
+    assert strm.seconds() < sync.seconds()
+    dev, hst = strm.device_seconds(), strm.host_seconds()
+    assert strm.seconds() == pytest.approx(max(dev, hst), rel=0.01)
+    # in-memory observations are untouched by the streaming flag
+    mem = estimate(plan, WEB, Observation(streaming=True))
+    assert not mem.overlap_host and mem.host_bytes == 0
+
+
+def test_ooc_stream_io_prices_the_super_partition_traffic():
+    """OOC observations charge the host link for the vertex/edge block
+    and message-bucket round trip, not just the value write-back."""
+    plan = PhysicalPlan()
+    ooc = estimate(plan, WEB, Observation(ooc=True))
+    assert "stream_io" in ooc.terms and ooc.terms["stream_io"] > 0
+    assert ooc.host_bytes > estimate(
+        plan, WEB, Observation()).host_bytes == 0
+
+
+def test_calibrate_machine_refits_constants_from_hlo():
+    """One-shot startup calibration: the fitted constants come back
+    finite, inside their clamp ranges, cached per backend, and the
+    calibrated machine still ranks plans (sanity: left-outer wins sparse
+    frontiers)."""
+    from repro.planner import (DEFAULT_MACHINE, calibrate_machine, choose)
+    from repro.planner.cost import _CALIBRATED
+    small = GraphStats(n_vertices=192, n_edges=960, n_partitions=4,
+                       vertex_capacity=64, edge_capacity=256,
+                       value_dims=1, msg_dims=1)
+    prog = SSSP(source=0)
+    _CALIBRATED.clear()
+    m = calibrate_machine(prog, small, DEFAULT_MACHINE)
+    assert 0.5 <= m.k_compute <= 128.0
+    assert 1.0 <= m.k_scatter <= 64.0
+    assert 0.02 <= m.sort_pass_frac <= 4.0
+    # cached: a second call must not refit (and must agree)
+    m2 = calibrate_machine(prog, small, DEFAULT_MACHINE)
+    assert (m2.k_compute, m2.k_scatter, m2.sort_pass_frac) == \
+        (m.k_compute, m.k_scatter, m.sort_pass_frac)
+    assert len(_CALIBRATED) == 1
+    sparse, _ = choose(prog, WEB, Observation(frontier_density=0.01),
+                       machine=m)
+    assert sparse.join == "left_outer"
+
+
+def test_run_host_auto_with_calibration_matches_static():
+    """AdaptiveConfig(calibrate=True) wires the one-shot calibration into
+    _resolve_plan; the run must still be exact."""
+    side = 12
+    edges = grid_graph(side)
+    n = side * side
+    prog = SSSP(source=0)
+    static = run_host(load_graph(edges, n, P=4, value_dims=1), prog,
+                      prog.suggested_plan, max_supersteps=60)
+    auto = run_host(load_graph(edges, n, P=4, value_dims=1), prog, "auto",
+                    max_supersteps=60,
+                    auto_config=AdaptiveConfig(calibrate=True))
+    assert np.array_equal(gather_values(auto.vertex, n),
+                          gather_values(static.vertex, n))
+
+
 def test_choose_switches_storage_with_change_density():
     from repro.core import STORAGES
     sssp = SSSP(source=0)
@@ -115,14 +187,19 @@ def test_choose_switches_storage_with_change_density():
 
 def test_controller_reads_change_density_from_stats_extra():
     """The OOC driver annotates records with ooc/change_density; the
-    controller must surface them into the Observation it plans with."""
+    controller must surface them into the Observation it plans with.
+    Planned on the EMULATED machine (host link = memcpy), like the real
+    emulated-transport OOC driver: on a PCIe-class host link the
+    stream_io term correctly makes synchronous OOC transfer-bound, which
+    mutes per-plan differences below the switch margin."""
     from repro.core import STORAGES
-    from repro.planner import AdaptiveController
+    from repro.planner import EMULATED_MACHINE, AdaptiveController
     sssp = SSSP(source=0)
     plan, _ = choose(sssp, WEB, Observation(frontier_density=1.0, ooc=True),
-                     storages=STORAGES)
+                     machine=EMULATED_MACHINE, storages=STORAGES)
     ctl = AdaptiveController(sssp, WEB, plan,
                              AdaptiveConfig(patience=1, cooldown=0),
+                             machine=EMULATED_MACHINE,
                              space_kw={"storages": STORAGES})
     coll = StatsCollector(n_partitions=WEB.n_partitions,
                           vertex_capacity=WEB.vertex_capacity,
