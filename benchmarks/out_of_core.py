@@ -30,6 +30,9 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import tempfile
+
+import numpy as np
 
 from repro.core import PhysicalPlan, load_graph, run_host
 from repro.core.ooc import run_out_of_core
@@ -189,7 +192,66 @@ def auto_race(scale: float, P: int = 8):
     return out
 
 
-def main(scale: float = 1.0, out_path: str = "BENCH_ooc.json"):
+def _tier_stats(res):
+    """Mean pager hit rate + total spill traffic of one run."""
+    recs = [s for s in res.stats if "cache_hit_rate" in s]
+    if not recs:
+        return {"hit_rate": 1.0, "spill_read_bytes": 0,
+                "spill_write_bytes": 0}
+    return {
+        "hit_rate": sum(s["cache_hit_rate"] for s in recs) / len(recs),
+        "spill_read_bytes": sum(s["spill_read_bytes"] for s in recs),
+        "spill_write_bytes": sum(s["spill_write_bytes"] for s in recs),
+    }
+
+
+def disk_tier_race(scale: float, P: int = 8):
+    """Part 4 (the disk-tier claim): the DRAM-only store vs the buffer
+    cache spilling to disk under a tight memory budget, per eviction
+    policy. The spill directory is a tmpdir torn down on exit — success
+    OR failure — so CI never leaks page files. Writes the wall times,
+    pager hit rates and spill traffic that BENCH_storage.json archives."""
+    n = max(int(16_000 * scale), 16 * P)
+    edges = rmat_graph(n, 10 * n, seed=4)
+    prog = PageRank(n, iterations=6)
+    plan = dataclasses.replace(prog.suggested_plan, join="full_outer")
+    budget_parts = P // 2
+
+    vert = load_graph(edges, n, P=P, value_dims=2)
+    dram = run_out_of_core(vert, prog, plan,
+                           budget_partitions=budget_parts,
+                           max_supersteps=8)
+    t_dram = time_supersteps(dram)
+    record("storage/dram_only", t_dram * 1e6, "no disk tier")
+    # size the DRAM budget to half the working set so the run must spill
+    # (floor low enough that even the --smoke graph actually pages)
+    working = sum(int(np.asarray(getattr(vert, k)).nbytes) for k in
+                  ("vid", "halt", "value", "edge_src", "edge_dst",
+                   "edge_val"))
+    budget = max(working // 2, 96 * 1024)
+    out = {"dram_only_s": t_dram, "working_set_bytes": working,
+           "memory_budget_bytes": budget, "disk": {}}
+    for policy in ("lru", "mru"):
+        with tempfile.TemporaryDirectory(prefix="pregelix-spill-") as td:
+            vert2 = load_graph(edges, n, P=P, value_dims=2)
+            res = run_out_of_core(vert2, prog, plan,
+                                  budget_partitions=budget_parts,
+                                  max_supersteps=8,
+                                  memory_budget_bytes=budget,
+                                  disk_dir=td, eviction=policy)
+            t = time_supersteps(res)
+            tier = _tier_stats(res)
+            out["disk"][policy] = {
+                "wall_s": t, "slowdown_vs_dram": t / max(t_dram, 1e-12),
+                **tier}
+            record(f"storage/disk_{policy}", t * 1e6,
+                   f"hit_rate={tier['hit_rate']:.2f},"
+                   f"slowdown={t / max(t_dram, 1e-12):.2f}x")
+    return out
+
+
+def main(scale: float = 1.0, out_path: str = "BENCH_ooc.json",
+         disk: bool = False, storage_out: str = "BENCH_storage.json"):
     out = {"scale": scale}
     out["budget_sweep"] = budget_sweep(scale)
     out["streaming"] = streaming_race(scale)
@@ -198,6 +260,13 @@ def main(scale: float = 1.0, out_path: str = "BENCH_ooc.json"):
         json.dump(out, f, indent=1)
     print(f"wrote {out_path} (best streaming speedup "
           f"{out['streaming']['best_speedup']:.2f}x)", flush=True)
+    if disk:
+        st = {"scale": scale, "disk_tier": disk_tier_race(scale)}
+        with open(storage_out, "w") as f:
+            json.dump(st, f, indent=1)
+        hit = max(v["hit_rate"] for v in st["disk_tier"]["disk"].values())
+        print(f"wrote {storage_out} (best disk-tier hit rate "
+              f"{hit:.2f})", flush=True)
     return out
 
 
@@ -208,5 +277,12 @@ if __name__ == "__main__":
                     help="machine-readable results (CI uploads this)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config for CI (graph ~800 vertices)")
+    ap.add_argument("--disk", action="store_true",
+                    help="also race the disk tier (tmpdir spill dir, "
+                         "cleaned up even on failure) and write "
+                         "--storage-out")
+    ap.add_argument("--storage-out", default="BENCH_storage.json",
+                    help="disk-tier results (CI uploads this)")
     args = ap.parse_args()
-    main(0.05 if args.smoke else args.scale, args.out)
+    main(0.05 if args.smoke else args.scale, args.out,
+         disk=args.disk, storage_out=args.storage_out)

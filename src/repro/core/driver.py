@@ -45,8 +45,10 @@ class RunResult:
 
 def _resolve_plan(vert, program, plan: PlanArg, *, adaptive: bool,
                   ec: Optional[EngineConfig] = None,
-                  auto_config=None, auto_space=None):
-    """plan="auto" -> (cost-model-chosen plan, AdaptiveController|None)."""
+                  auto_config=None, auto_space=None, graph_stats=None):
+    """plan="auto" -> (cost-model-chosen plan, AdaptiveController|None).
+    `graph_stats` short-circuits the vertex scan (the OOC resume path
+    rebuilds the counts page-at-a-time and never holds a VertexRel)."""
     if isinstance(plan, PhysicalPlan):
         return plan, None
     if plan != "auto":
@@ -64,10 +66,11 @@ def _resolve_plan(vert, program, plan: PlanArg, *, adaptive: bool,
         # hand-tuned K_COMPUTE / K_SCATTER / SORT_PASS_FRAC
         from repro.planner.cost import GraphStats, calibrate_machine
         machine = calibrate_machine(
-            program, GraphStats.from_vertex(vert, program), machine)
+            program, graph_stats or GraphStats.from_vertex(vert, program),
+            machine)
     return resolve_auto_plan(
         vert, program, adaptive=adaptive, config=config,
-        machine=machine, space_kw=auto_space)
+        machine=machine, space_kw=auto_space, g=graph_stats)
 
 
 def default_engine_config(vert: VertexRel, program: VertexProgram,

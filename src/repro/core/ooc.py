@@ -2,11 +2,27 @@
 
 On Hyracks, operators spill to disk through the buffer cache, so the same
 plans run in-memory and out-of-core. The TPU-adapted memory hierarchy is
-HBM <-> host DRAM: the Vertex relation lives on the HOST; each superstep
-streams SUPER-PARTITIONS (groups of partitions sized to a device-memory
-budget) through the jitted partial superstep, collecting outgoing message
-buckets host-side (the "sender-side materializing pipelined" policy) and
-delivering them at the next superstep.
+three tiers: HBM <-> host DRAM <-> DISK. The Vertex relation and the
+run-structured message inbox live in a ``storage.TieredStore`` — a
+page-granular buffer cache (``storage/pager.py``) chunked one page per
+(relation, super-partition) with a configurable DRAM byte budget
+(``memory_budget_bytes``), evicting cold pages to mmap-backed spill files
+(``--disk-dir``; ``storage/spillfile.py``) and faulting them back on
+access. Each superstep streams SUPER-PARTITIONS (groups of partitions
+sized to a device-memory budget) through the jitted partial superstep;
+prefetch is disk -> DRAM -> HBM and commit is HBM -> DRAM with lazy
+write-back to disk, both hidden behind compute by the pipelined executor
+below. With no disk dir and no budget the store degenerates to the pure
+DRAM tier — the previous two-level hierarchy — and results are
+bit-for-bit identical either way (the disk tier only moves bytes).
+
+Eviction is pluggable (``eviction="lru" | "mru"``): the superstep's page
+access pattern is a cyclic sequential scan over super-partitions, which
+floods LRU (hit rate 0 when the working set outgrows the budget); MRU
+retains a stable prefix of the cycle and converges to hit rate
+budget/working-set (the GraphH hot-data-cache observation). In-flight
+pipeline slots PIN their pages so prefetched state cannot be evicted
+under them.
 
 PIPELINED STREAMING (``stream=True``, the default): the executor keeps up
 to ``prefetch_depth`` super-partitions in flight. A DISPATCHER uploads
@@ -37,30 +53,46 @@ synchronous ones.
 The host inbox is RUN-STRUCTURED: the per-super-partition bucket tensors
 coming off the device — ``(sp, P, C)`` with valid entries occupying a
 PREFIX of every ``(src, dst)`` bucket (``connector.bucket_by_owner``'s
-layout contract) — are stacked with one ``np.concatenate`` into
-``(P_src, P_dst, C)``, transposed to ``(P_dst, P_src, C)`` (the host-side
-analogue of the emulated exchange), and trimmed to the widest occupied
-run. No per-message Python iteration anywhere. Because each destination
-partition's message block is therefore exactly ``n_parts`` sender runs of
-equal width — dst-sorted whenever the sender sorts (merging connector, or
-the sender combine's dst-ascending output) — the merging receiver's
-run-capacity assumption holds host-side and ``plan="auto"`` searches the
-FULL join x group-by x connector x sender-combine x storage space here,
-switching any of them with a re-jit at a superstep boundary. Messages
-live host-side between supersteps, so the only in-flight migration that
-can ever be needed is a one-off dst-sort of each run when a switch
-adopts the merging receiver from an unsorted producer
-(``_sort_inbox_runs``, mirroring ``planner.adaptive.migrate_msgs``).
+layout contract) — are restacked destination-major into per-destination
+chunks ``(sp, P_src, C)`` (the host-side analogue of the emulated
+exchange) and trimmed to the widest occupied run. The rebuild runs one
+destination super-partition at a time through the pager, so peak DRAM
+for the exchange is inbox/n_sp, not the full inbox. Because each
+destination partition's message block is exactly ``n_parts`` sender runs
+of equal width — dst-sorted whenever the sender sorts — the merging
+receiver's run-capacity assumption holds host-side and ``plan="auto"``
+searches the FULL join x group-by x connector x sender-combine x storage
+space here, switching any of them with a re-jit at a superstep boundary.
+
+MUTATIONS span super-partitions through a HOST MUTATION INBOX mirroring
+the message one: under ``ec.ooc_collect`` the superstep buckets insert
+proposals by owner over all P partitions and hands them back
+(``superstep.apply_mutations``) instead of exchanging them in-device
+(which only spans the resident super-partition). The collector spills
+the collected ``(sp, P, Cm)`` blocks through the same pager; at the
+superstep barrier the driver applies them host-side with the same
+scatter/resolve semantics the in-memory path uses — so inserting
+programs are exact across super-partition boundaries.
 
 storage="delta" (LSM analogue): only CHANGED vertex values are written
 back to the host store each superstep instead of the full value array —
-the deferred-merge write path, right for sparse-update workloads. Both
-policies' write-back bytes are measured every superstep and feed the cost
-model's storage dimension (``planner/cost.py`` ``storage_writeback``);
-the statistics stream also carries the dispatch / collect-wait / commit
-wall-time split and the ``streaming`` flag, so the planner prices plans
-with the overlap-aware ``max(step, transfer)`` host-link term when the
-pipelined executor is active.
+the deferred-merge write path, right for sparse-update workloads; on the
+disk tier a super-partition with no changed rows never even dirties its
+page, so converged regions cost zero disk write-back. Both policies'
+write-back bytes are measured every superstep and feed the cost model's
+storage dimension (``planner/cost.py`` ``storage_writeback``); the
+statistics stream also carries the pager's hit rate and spill bytes (the
+disk-bandwidth axis), the measured message COMBINABILITY
+(messages/distinct-destination — the signal behind the sender_combine
+replan dimension), the mutation rate, and the dispatch / collect-wait /
+commit wall-time split, so the planner prices plans with the
+overlap-aware ``max(device, host_link, disk)`` rule when the pipelined
+executor is active.
+
+Checkpoints hard-link/copy the spill files at the FILE level
+(``runtime/checkpoint.py`` ``save_ooc_checkpoint``) — no DRAM
+re-serialization — and ``resume_from=`` restarts a job directly from a
+checkpoint directory, faulting pages in on first touch.
 """
 from __future__ import annotations
 
@@ -79,11 +111,18 @@ from repro.core.plan import FRONTIER_FLOOR, STORAGES, PhysicalPlan
 from repro.core.program import VertexProgram
 from repro.core.relations import GlobalState, MsgRel, VertexRel, init_gs
 from repro.core.superstep import EngineConfig, jit_superstep
+from repro.storage import TieredStore
 
 # the OOC planner searches both storage policies on top of the full
 # per-superstep space (in-memory drivers inherit the base plan's storage:
 # they never pay a write-back, so the dimension would only produce ties)
 _OOC_AUTO_SPACE = {"storages": STORAGES}
+
+# host-resident relations (the chunked pages of the TieredStore)
+_RELS = ("vid", "halt", "value", "edge_src", "edge_dst", "edge_val")
+_OUT = ("out_dst", "out_pay", "out_val")     # collected sender buckets
+_MUT = ("mut_dst", "mut_pay", "mut_val")     # collected insert proposals
+_INBOX = ("inbox_dst", "inbox_pay", "inbox_val")
 
 
 @dataclasses.dataclass
@@ -93,24 +132,20 @@ class _InFlight:
     v2: VertexRel
     buckets: MsgRel
     g2: GlobalState
+    mut: Optional[tuple]   # (dst, payload, valid) insert buckets or None
 
 
 @dataclasses.dataclass
 class _Done:
-    """One committed super-partition (host-side results)."""
-    block: tuple          # (dst, payload, valid) sender buckets, np
+    """One committed super-partition (host-side results; the bucket and
+    mutation blocks themselves live as pages in the TieredStore)."""
+    counts: np.ndarray    # (sp, P) per-bucket occupancy of the out block
     halt_ok: bool
     active: int
     agg: np.ndarray
     delta_bytes: int
     full_bytes: int
-
-
-def _empty_inbox(P: int, D: int):
-    """Run-structured empty inbox: one invalid slot per (dst, src) run."""
-    return (np.full((P, P, 1), -1, np.int32),
-            np.zeros((P, P, 1, D), np.float32),
-            np.zeros((P, P, 1), bool))
+    has_mut: bool
 
 
 def _round_run_width(max_count: int, cap: int) -> int:
@@ -125,11 +160,12 @@ def _round_run_width(max_count: int, cap: int) -> int:
 
 
 def _sort_inbox_runs(inbox):
-    """Sort every (dst, src) run of the host inbox by dst — the host-side
-    mirror of ``planner.adaptive.migrate_msgs`` for a mid-run switch onto
-    the merging connector when the previous plan produced UNSORTED runs
-    (plain partitioning without a sender combine). Invalid slots key as
-    int32 max, so the stable sort keeps valid entries a run prefix."""
+    """Sort every (dst, src) run of a host inbox chunk by dst — the
+    host-side mirror of ``planner.adaptive.migrate_msgs`` for a mid-run
+    switch onto the merging connector when the previous plan produced
+    UNSORTED runs (plain partitioning without a sender combine). Invalid
+    slots key as int32 max, so the stable sort keeps valid entries a run
+    prefix."""
     d, p, v = inbox
     key = np.where(v, d, np.iinfo(np.int32).max)
     order = np.argsort(key, axis=2, kind="stable")
@@ -151,7 +187,115 @@ def _pad_run_width(block, C_new: int):
             np.pad(v, ((0, 0), (0, 0), (0, pad))))
 
 
-def run_out_of_core(vert: VertexRel, program: VertexProgram,
+def _host_slot_of(dst, valid, Np: int, P: int, partition: str):
+    """Host-side mirror of superstep._slot_of (the vid -> local slot
+    map), for applying the mutation inbox at the barrier. Slots past
+    the capacity clamp to the drop row Np — the device scatter drops
+    out-of-bounds insert vids, and np.add.at would raise instead."""
+    if partition == "range":
+        owner = np.minimum(dst // Np, P - 1)
+        slot = np.where(valid, dst - owner * Np, Np)
+    else:
+        slot = np.where(valid, dst // P, Np)
+    return np.minimum(slot, Np)
+
+
+def _apply_host_mutations(store: TieredStore, program, plan, P: int,
+                          sp: int, n_sp: int) -> tuple:
+    """Apply the collected insert-proposal buckets to the host store —
+    the barrier half of the host mutation inbox. Mirrors the in-memory
+    ``superstep.apply_mutations`` scatter/resolve exactly: per
+    destination partition, sum conflicting proposals per slot, count
+    them, recover the vid, run ``program.resolve``, and install the
+    result (vid set, value replaced, halt cleared) where any proposal
+    landed. Processes one destination super-partition's columns at a
+    time (like the inbox rebuild), so peak DRAM is mut-inbox / n_sp.
+    Returns (proposal_count, applied_any)."""
+    proposals = 0
+    applied_any = False
+    Np = store.read("vid", 0).shape[1]
+    for q in range(n_sp):
+        d = np.concatenate([store.get_page(("mut_dst", s, q))
+                            for s in range(n_sp)])    # (P, sp, Cm)
+        pv = np.concatenate([store.get_page(("mut_pay", s, q))
+                             for s in range(n_sp)])   # (P, sp, Cm, V)
+        ok = np.concatenate([store.get_page(("mut_val", s, q))
+                             for s in range(n_sp)])   # (P, sp, Cm)
+        proposals += int(ok.sum())
+        V = pv.shape[-1]
+        vid_pg = store.read("vid", q)
+        touched = False
+        val_pg = halt_pg = None
+        for p_local in range(sp):
+            dd = d[:, p_local, :].reshape(-1)
+            oo = ok[:, p_local, :].reshape(-1)
+            if not oo.any():
+                continue
+            vv = pv[:, p_local, :, :].reshape(-1, V)
+            slot = _host_slot_of(dd, oo, Np, P, plan.partition)
+            # same dtypes as the device per_part (float32 sums, int32
+            # counts): a custom resolve must see identical promotion
+            # rules host-side or parity breaks in the last ulp
+            summed = np.zeros((Np + 1, V), np.float32)
+            np.add.at(summed, slot,
+                      np.where(oo[:, None], vv, np.float32(0.0)))
+            cnt = np.zeros((Np + 1,), np.int32)
+            np.add.at(cnt, slot, oo)
+            newvid = np.full((Np + 1,), -1, np.int32)
+            np.maximum.at(newvid, slot,
+                          np.where(oo, dd, -1).astype(np.int32))
+            resolved = np.asarray(program.resolve(
+                newvid[:Np], summed[:Np], cnt[:Np]), np.float32)
+            take = cnt[:Np] > 0
+            if not take.any():
+                continue
+            if not touched:
+                val_pg = store.read("value", q)
+                halt_pg = store.read("halt", q)
+                touched = True
+            vid_pg[p_local][take] = newvid[:Np][take]
+            val_pg[p_local][take] = resolved[take]
+            halt_pg[p_local][take] = False
+            applied_any = True
+        if touched:
+            # pages were mutated in place: re-put to mark them dirty
+            store.write("vid", q, vid_pg)
+            store.write("value", q, val_pg)
+            store.write("halt", q, halt_pg)
+    return proposals, applied_any
+
+
+def _adopt_checkpoint(store: TieredStore, z: dict, src):
+    """Install a spill-directory checkpoint into a fresh store (pages
+    hard-linked/copied at the file level; on the disk tier nothing is
+    read into DRAM until first touch). ``z``/``src`` come from the
+    caller's ``load_ooc_meta``. Returns the restored GlobalState."""
+    for nm in _RELS:
+        for s in range(store.n_sp):
+            store.adopt_page((nm, s), src / f"{nm}_{s}.npy", relation=nm)
+    for nm in _INBOX:
+        for q in range(store.n_sp):
+            store.adopt_page((nm, 0, q), src / f"{nm}_{q}.npy",
+                             immutable=True)
+    return GlobalState(
+        halt=jnp.asarray(bool(z["halt"])),
+        aggregate=jnp.asarray(z["aggregate"]),
+        superstep=jnp.asarray(int(z["superstep"]), jnp.int32),
+        overflow=jnp.asarray(z["overflow"]),
+        active_count=jnp.asarray(int(z["active"]), jnp.int32),
+        msg_count=jnp.asarray(int(z["msgs"]), jnp.int32))
+
+
+class _ShapeVert:
+    """Shape-only stand-in for a VertexRel (resume path: the capacity
+    policies only read ``.vid.shape`` / ``.edge_src.shape``)."""
+
+    def __init__(self, P, Np, Ep):
+        self.vid = np.empty((P, Np), np.bool_)
+        self.edge_src = np.empty((P, Ep), np.bool_)
+
+
+def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                     plan: PlanArg = PhysicalPlan(), *,
                     budget_partitions: int,
                     max_supersteps: int = 50,
@@ -159,7 +303,13 @@ def run_out_of_core(vert: VertexRel, program: VertexProgram,
                     auto_config=None,
                     auto_space: Optional[dict] = None,
                     stream: bool = True,
-                    prefetch_depth: int = 2) -> RunResult:
+                    prefetch_depth: int = 2,
+                    memory_budget_bytes: Optional[int] = None,
+                    disk_dir: Optional[str] = None,
+                    eviction: str = "lru",
+                    checkpoint_every: int = 0,
+                    checkpoint_dir: Optional[str] = None,
+                    resume_from: Optional[str] = None) -> RunResult:
     """budget_partitions = how many partitions fit in device memory at once
     (the HBM budget). P % budget_partitions must be 0. plan="auto" picks
     the plan from the cost model and re-picks it at superstep boundaries —
@@ -171,272 +321,534 @@ def run_out_of_core(vert: VertexRel, program: VertexProgram,
     ``prefetch_depth`` super-partitions are in flight at once, hiding
     host<->device transfer behind compute; stream=False is the
     synchronous loop (a pipeline window of 1). Results are bit-for-bit
-    identical either way."""
+    identical either way.
+
+    DISK TIER: ``memory_budget_bytes`` caps the host-DRAM bytes the
+    run's relations and inbox may occupy at once; cold pages spill to
+    mmap-backed files under ``disk_dir`` (required when a budget is set)
+    and fault back in on access. ``eviction`` picks the page-replacement
+    policy: "lru", or "mru" — which resists the superstep's cyclic
+    sequential scan (see ``storage/pager.py``). Results are bit-for-bit
+    identical to the pure-DRAM tier.
+
+    ``checkpoint_every``/``checkpoint_dir`` snapshot the host store at
+    superstep boundaries by hard-linking/copying its spill files (no
+    DRAM re-serialization); ``resume_from=<checkpoint dir>`` restarts
+    from such a snapshot — ``vert`` may then be None."""
     from repro.planner.stats import StatsCollector
+    from repro.runtime.checkpoint import save_ooc_checkpoint
 
     t0 = time.time()
-    P, Np = vert.vid.shape
-    assert P % budget_partitions == 0
-    n_sp = P // budget_partitions
     sp = budget_partitions
-    window = max(int(prefetch_depth), 1) if stream else 1
-    plan, controller = _resolve_plan(
-        vert, program, plan, adaptive=True, ec=ec, auto_config=auto_config,
-        auto_space=_OOC_AUTO_SPACE if auto_space is None else auto_space)
-    ec = ec or default_engine_config(vert, program, plan)
-    # resolve frontier_cap=0 (the EngineConfig "Np/2" default) to its
-    # concrete value up front: the overflow regrow path doubles it, and
-    # 0 * 2 = 0 would re-jit the identical config forever
-    ec = dataclasses.replace(ec, ooc_collect=True,
-                             frontier_cap=ec.frontier_cap or
-                             max(Np // 2, 1))
-    step = jit_superstep(program, plan, ec, donate_vertex=True)
-    seen_widths = set()   # inbox widths this `step` has already traced
+    if checkpoint_every and not checkpoint_dir:
+        raise ValueError("checkpoint_every needs a checkpoint_dir — "
+                         "otherwise the job would silently run "
+                         "without any checkpoints")
+    store = None
+    try:
+        ck_meta = ck_gs = ck_src = None
+        if resume_from is not None:
+            # shapes come from the checkpoint pages; vert is not needed
+            from repro.runtime.checkpoint import load_ooc_meta
+            ck_meta, ck_gs, ck_src = load_ooc_meta(resume_from)
+            n_sp = ck_meta["n_sp"]
+            P = n_sp * sp
+            if ck_meta.get("sp", sp) != sp:
+                raise ValueError(
+                    f"checkpoint streams {ck_meta.get('sp')} "
+                    f"partitions per super-partition; got "
+                    f"budget_partitions={sp}")
+        else:
+            P = vert.vid.shape[0]
+            assert P % sp == 0
+            n_sp = P // sp
+        store = TieredStore(n_sp=n_sp, budget_bytes=memory_budget_bytes,
+                            disk_dir=disk_dir, policy=eviction)
+        gen = 0            # inbox generation (one per superstep barrier)
+        if resume_from is not None:
+            gs = _adopt_checkpoint(store, ck_gs, ck_src)
+            i = int(ck_meta["superstep"])
+            Np = store.read("vid", 0).shape[1]
+            Ep = store.read("edge_src", 0).shape[1]
+            C_in = store.get_page(("inbox_dst", 0, 0)).shape[2]
+            shape_vert = _ShapeVert(P, Np, Ep)
+            graph_stats = None
+            if plan == "auto":
+                # only the auto-planner needs graph statistics: a static
+                # resume must not stream two whole relations through the
+                # budgeted cache just to discard the counts
+                n_live = sum(int((store.read("vid", s) >= 0).sum())
+                             for s in range(n_sp))
+                n_edges = sum(int((store.read("edge_src", s) >= 0).sum())
+                              for s in range(n_sp))
+                from repro.planner.cost import GraphStats
+                graph_stats = GraphStats(
+                    n_vertices=n_live, n_edges=n_edges, n_partitions=P,
+                    vertex_capacity=Np, edge_capacity=Ep,
+                    value_dims=program.value_dims,
+                    msg_dims=program.msg_dims)
+        else:
+            Np = vert.vid.shape[1]
+            shape_vert = vert
+            i = 0
+            graph_stats = None
+        saved_plan = None
+        if ck_meta is not None and ck_meta.get("plan"):
+            saved_plan = PhysicalPlan(**ck_meta["plan"])
+        wanted_auto = plan == "auto"
+        plan, controller = _resolve_plan(
+            shape_vert if resume_from is None else None, program, plan,
+            adaptive=True, ec=ec, auto_config=auto_config,
+            auto_space=_OOC_AUTO_SPACE if auto_space is None
+            else auto_space, graph_stats=graph_stats)
+        if saved_plan is not None:
+            if wanted_auto:
+                # restart auto jobs from the plan IN EFFECT at the
+                # checkpoint (it produced the restored inbox's layout)
+                # rather than re-choosing blind at superstep-0 stats;
+                # the controller re-plans from live statistics as usual
+                plan = saved_plan
+                if controller is not None:
+                    controller.plan = saved_plan
+            if (plan.connector == "partitioning_merging"
+                    and saved_plan.connector != "partitioning_merging"
+                    and not saved_plan.sender_combine):
+                # the checkpointed inbox's runs are unsorted but the
+                # resumed plan's merging receiver assumes dst order:
+                # one-off sort, the resume analogue of the mid-run
+                # switch guard below
+                for q in range(n_sp):
+                    triple = _sort_inbox_runs(tuple(
+                        store.get_page((nm, 0, q)) for nm in _INBOX))
+                    for nm, a in zip(_INBOX, triple):
+                        store.put_page((nm, 0, q), a, immutable=True)
+        caller_ec = ec is not None
+        ec = ec or default_engine_config(shape_vert, program, plan)
+        if not caller_ec and ck_meta is not None and ck_meta.get("caps"):
+            # restore the checkpointed (possibly overflow-regrown)
+            # capacities instead of replaying the regrow cascade from
+            # the defaults on every restart
+            ec = dataclasses.replace(ec, **ck_meta["caps"])
+        # resolve frontier_cap=0 (the EngineConfig "Np/2" default) to its
+        # concrete value up front: the overflow regrow path doubles it,
+        # and 0 * 2 = 0 would re-jit the identical config forever
+        ec = dataclasses.replace(ec, ooc_collect=True,
+                                 frontier_cap=ec.frontier_cap or
+                                 max(Np // 2, 1))
+        step = jit_superstep(program, plan, ec, donate_vertex=True)
+        seen_widths = set()   # inbox widths this `step` has already traced
 
-    # host-resident state (the "disk")
-    host = {k: np.array(getattr(vert, k)) for k in
-            ("vid", "halt", "value", "edge_src", "edge_dst", "edge_val")}
-    gs = init_gs(program.agg_dims)
-    # init values on device per super-partition (streams once)
-    from repro.core.driver import init_vertex_values
-    for s in range(n_sp):
-        sl = slice(s * sp, (s + 1) * sp)
-        vpart = VertexRel(**{k: jnp.asarray(host[k][sl]) for k in host})
-        vpart = init_vertex_values(vpart, program, gs)
-        host["value"][sl] = np.asarray(vpart.value)
-
-    D = program.msg_dims
-    # run-structured host inbox: dst (P_dst, P_src, C), payload, valid —
-    # row q holds P source runs, exactly the layout the receiver group-by
-    # sees in-memory after the exchange
-    inbox = _empty_inbox(P, D)
-    n_live = (controller.g.n_vertices if controller is not None
-              else int((host["vid"] >= 0).sum()))
-    coll = StatsCollector(n_partitions=P, vertex_capacity=Np, msg_dims=D,
-                          n_vertices=n_live)
-    stats = []
-    i = 0
-    delta_bytes = full_bytes = 0
-    recompiled = True  # first superstep includes the jit compile
-    while i < max_supersteps:
-        ts = time.time()
-        this_recompiled = recompiled
-        recompiled = False
-        in_dst, in_pay, in_val = inbox
-        C_in = in_dst.shape[2]
-        if C_in not in seen_widths:
-            # a new message width retraces inside jit: this superstep's
-            # wall time includes a compile
-            seen_widths.add(C_in)
-            this_recompiled = True
-        ovf0 = np.asarray(gs.overflow)
-        t_io = {"dispatch": 0.0, "wait": 0.0, "commit": 0.0}
-        committed = {}                # s -> _Done
-        todo = deque(range(n_sp))     # dispatch queue (redo re-enters it)
-        pending = []                  # _InFlight, dispatch order
-
-        def dispatch(s):
-            """Non-blocking H2D upload + step enqueue for one
-            super-partition: the device starts (or queues) the work while
-            the host moves on to collect an earlier one."""
-            td = time.time()
-            sl = slice(s * sp, (s + 1) * sp)
-            vpart = VertexRel(**{k: jax.device_put(host[k][sl])
-                                 for k in host})
-            # incoming block: slice the run-structured inbox and flatten
-            # the (P_src, C_in) runs — already the receiver's layout
-            msg = MsgRel(
-                dst=jax.device_put(in_dst[sl].reshape(sp, P * C_in)),
-                payload=jax.device_put(
-                    in_pay[sl].reshape(sp, P * C_in, D)),
-                valid=jax.device_put(in_val[sl].reshape(sp, P * C_in)))
-            v2, buckets, g2 = step(vpart, msg, gs)
-            t_io["dispatch"] += time.time() - td
-            return _InFlight(s, v2, buckets, g2)
-
-        def commit(e):
-            """Drain one clean super-partition D2H and commit its host
-            state (delta vs full write-back policy; both byte counts are
-            measured every superstep to feed the cost model's storage
-            dimension). Blocking on the value pull is the pipeline's
-            compute-wait; everything after is host-side commit time."""
-            tw = time.time()
-            new_value = np.asarray(e.v2.value)   # blocks on e's step
-            t_io["wait"] += time.time() - tw
-            tc = time.time()
-            sl = slice(e.s * sp, (e.s + 1) * sp)
-            changed = np.any(new_value != host["value"][sl], axis=-1)
-            d_b = int(changed.sum()) * new_value.shape[-1] * 4
-            f_b = new_value.size * 4
-            if plan.storage == "delta":
-                host["value"][sl][changed] = new_value[changed]
-            else:
-                host["value"][sl] = new_value
-            host["halt"][sl] = np.asarray(e.v2.halt)
-            host["vid"][sl] = np.asarray(e.v2.vid)
-            host["edge_dst"][sl] = np.asarray(e.v2.edge_dst)
-            host["edge_val"][sl] = np.asarray(e.v2.edge_val)
-            done = _Done(
-                block=(np.asarray(e.buckets.dst),
-                       np.asarray(e.buckets.payload),
-                       np.asarray(e.buckets.valid)),
-                halt_ok=bool(np.all(host["halt"][sl] |
-                                    (host["vid"][sl] < 0))),
-                active=int(e.g2.active_count),
-                agg=np.asarray(e.g2.aggregate),
-                delta_bytes=d_b, full_bytes=f_b)
-            t_io["commit"] += time.time() - tc
-            return done
-
-        while todo or pending:
-            # fill the pipeline window
-            while todo and len(pending) < window:
-                pending.append(dispatch(todo.popleft()))
-            # collect a completed super-partition — out of dispatch order
-            # when a later one is already done — else block on the oldest
-            j = 0
-            if len(pending) > 1:
-                j = next((k for k, e in enumerate(pending)
-                          if e.g2.overflow.is_ready()), 0)
-            e = pending.pop(j)
-            delta = np.asarray(e.g2.overflow) - ovf0    # blocks on e
-            if (delta > 0).any():
-                # DEFERRED OVERFLOW: a bucket / frontier / mutation /
-                # edge capacity overflowed mid-pipeline. Unwind the
-                # in-flight prefetch: drain every pending result,
-                # committing the ones that finished clean and marking
-                # overflowed ones for redo; then double ONLY the
-                # overflowed capacities, re-jit, end-pad the committed
-                # blocks and redo from retained host state (nothing from
-                # a dirty step was committed).
-                redo = {e.s}
-                for other in pending:
-                    od = np.asarray(other.g2.overflow) - ovf0
-                    if (od > 0).any():
-                        delta = delta + od
-                        redo.add(other.s)
-                    else:
-                        committed[other.s] = commit(other)
-                pending = []
-                ec = grow_overflowed(ec, delta)
-                step = jit_superstep(program, plan, ec, donate_vertex=True)
-                seen_widths = {C_in}
-                for s2, done in committed.items():
-                    committed[s2] = dataclasses.replace(
-                        done, block=_pad_run_width(done.block,
-                                                   ec.bucket_cap))
-                todo = deque(sorted(redo | set(todo)))
-                stats.append(coll.event(
-                    i, "regrow", bucket_cap=ec.bucket_cap,
-                    frontier_cap=ec.frontier_cap,
-                    mutation_cap=ec.mutation_cap,
-                    sources=np.flatnonzero(delta > 0).tolist(),
-                    redo=sorted(redo)).as_dict())
+        D = program.msg_dims
+        if resume_from is None:
+            # host-resident state through the buffer cache (DRAM pages
+            # backed by the disk tier when configured)
+            for k in _RELS:
+                store.register(k, np.asarray(getattr(vert, k)))
+            gs = init_gs(program.agg_dims)
+            # init values on device per super-partition (streams once)
+            from repro.core.driver import init_vertex_values
+            for s in range(n_sp):
+                vpart = VertexRel(**{k: jnp.asarray(store.read(k, s))
+                                     for k in _RELS})
+                vpart = init_vertex_values(vpart, program, gs)
+                store.write("value", s, np.asarray(vpart.value))
+            # run-structured empty inbox: one invalid slot per (dst, src)
+            # run, chunked per destination super-partition
+            C_in = 1
+            for q in range(n_sp):
+                store.put_page(("inbox_dst", 0, q),
+                               np.full((sp, P, 1), -1, np.int32),
+                               immutable=True)
+                store.put_page(("inbox_pay", 0, q),
+                               np.zeros((sp, P, 1, D), np.float32),
+                               immutable=True)
+                store.put_page(("inbox_val", 0, q),
+                               np.zeros((sp, P, 1), bool),
+                               immutable=True)
+        n_live = (controller.g.n_vertices if controller is not None
+                  else sum(int((store.read("vid", s) >= 0).sum())
+                           for s in range(n_sp)))
+        coll = StatsCollector(n_partitions=P, vertex_capacity=Np,
+                              msg_dims=D, n_vertices=n_live)
+        stats = []
+        delta_bytes = full_bytes = 0
+        recompiled = True  # first superstep includes the jit compile
+        pool_prev = store.stats()
+        while i < max_supersteps and not bool(gs.halt):
+            ts = time.time()
+            this_recompiled = recompiled
+            recompiled = False
+            if C_in not in seen_widths:
+                # a new message width retraces inside jit: this
+                # superstep's wall time includes a compile
+                seen_widths.add(C_in)
                 this_recompiled = True
-                continue
-            committed[e.s] = commit(e)
+            ovf0 = np.asarray(gs.overflow)
+            t_io = {"dispatch": 0.0, "wait": 0.0, "commit": 0.0}
+            committed = {}                # s -> _Done
+            todo = deque(range(n_sp))     # dispatch queue (redo re-enters)
+            pending = []                  # _InFlight, dispatch order
+            window = max(int(prefetch_depth), 1) if stream else 1
 
-        # superstep barrier: fold the per-super-partition results in
-        # super-partition order (float aggregate order must not depend on
-        # pipeline completion order — bit-for-bit vs the synchronous loop)
-        ordered = [committed[s] for s in range(n_sp)]
-        halt_all = all(d.halt_ok for d in ordered)
-        active = sum(d.active for d in ordered)
-        agg = np.zeros((program.agg_dims,), np.float32)
-        for d in ordered:
-            agg += d.agg
-        step_delta = sum(d.delta_bytes for d in ordered)
-        step_full = sum(d.full_bytes for d in ordered)
-        out_blocks = [d.block for d in ordered]
-        delta_bytes += step_delta
-        full_bytes += step_full
-        # vectorized inbox rebuild: stack the (sp, P, C) blocks into
-        # (P_src, P_dst, C), transpose to destination-major (the host-side
-        # emulated exchange) and trim every run to the widest occupancy —
-        # valid entries are a bucket PREFIX, so the trim drops only
-        # invalid tail slots
-        b_dst = np.concatenate([b[0] for b in out_blocks], axis=0)
-        b_pay = np.concatenate([b[1] for b in out_blocks], axis=0)
-        b_val = np.concatenate([b[2] for b in out_blocks], axis=0)
-        counts = b_val.sum(axis=2)
-        msg_count = int(counts.sum())
-        C_eff = _round_run_width(int(counts.max(initial=0)), ec.bucket_cap)
-        inbox = (
-            np.ascontiguousarray(b_dst.transpose(1, 0, 2)[:, :, :C_eff]),
-            np.ascontiguousarray(
-                b_pay.transpose(1, 0, 2, 3)[:, :, :C_eff]),
-            np.ascontiguousarray(b_val.transpose(1, 0, 2)[:, :, :C_eff]))
-        i += 1
-        gs = GlobalState(halt=jnp.asarray(halt_all and msg_count == 0),
-                         aggregate=jnp.asarray(agg),
-                         superstep=jnp.asarray(i, jnp.int32),
-                         overflow=gs.overflow,
-                         active_count=jnp.asarray(active, jnp.int32),
-                         msg_count=jnp.asarray(msg_count, jnp.int32))
-        rec = coll.record(i, active=active, messages=msg_count,
-                          wall_s=time.time() - ts,
-                          recompiled=this_recompiled,
-                          delta_bytes=delta_bytes, full_bytes=full_bytes,
-                          change_density=step_delta / max(step_full, 1),
-                          storage=plan.storage, ooc=True,
-                          streaming=stream,
-                          dispatch_s=t_io["dispatch"],
-                          collect_wait_s=t_io["wait"],
-                          commit_s=t_io["commit"])
-        stats.append(rec.as_dict())
-        switched = False
-        if controller is not None and not bool(gs.halt):
-            new_plan = controller.observe(rec, bucket_cap=ec.bucket_cap)
-            if new_plan is not None:
-                if (new_plan.connector == "partitioning_merging"
-                        and plan.connector != "partitioning_merging"
-                        and not plan.sender_combine):
-                    # the old plan left runs unsorted; give the merging
-                    # receiver its dst-sorted runs (one-off, host-side —
-                    # the OOC analogue of migrate_msgs)
-                    inbox = _sort_inbox_runs(inbox)
-                plan = new_plan
-                if plan.join == "left_outer":
-                    # refit the frontier to the live set — safe now that
-                    # an outgrown refit regrows instead of aborting
-                    act = active // max(P, 1) + 1
+            def dispatch(s):
+                """Non-blocking disk->DRAM->HBM prefetch + step enqueue
+                for one super-partition: pages fault in from the spill
+                tier if evicted, upload with ``jax.device_put``, and the
+                device starts (or queues) the work while the host moves
+                on to collect an earlier one. The value page stays
+                PINNED until commit (the delta compare needs the
+                pre-step values resident)."""
+                td = time.time()
+                store.pin("value", s)
+                vpart = VertexRel(**{k: jax.device_put(store.read(k, s))
+                                     for k in _RELS})
+                # incoming chunk: the run-structured inbox page for this
+                # destination super-partition, runs flattened — already
+                # the receiver's layout
+                d_in = store.get_page(("inbox_dst", gen, s))
+                p_in = store.get_page(("inbox_pay", gen, s))
+                v_in = store.get_page(("inbox_val", gen, s))
+                msg = MsgRel(
+                    dst=jax.device_put(d_in.reshape(sp, P * C_in)),
+                    payload=jax.device_put(
+                        p_in.reshape(sp, P * C_in, D)),
+                    valid=jax.device_put(v_in.reshape(sp, P * C_in)))
+                # part0 = this block's first GLOBAL partition index, so
+                # resurrect mints correct vids past super-partition 0
+                v2, buckets, g2, mut = step(
+                    vpart, msg, gs, jnp.asarray(s * sp, jnp.int32))
+                t_io["dispatch"] += time.time() - td
+                return _InFlight(s, v2, buckets, g2, mut)
+
+            def commit(e):
+                """Drain one clean super-partition D2H and commit its
+                host state (delta vs full write-back policy; both byte
+                counts are measured every superstep to feed the cost
+                model's storage dimension). Blocking on the value pull
+                is the pipeline's compute-wait; everything after is
+                host-side commit time. Dirty pages write back to disk
+                lazily (on eviction or checkpoint), overlapped by the
+                pipeline like every other page move."""
+                tw = time.time()
+                new_value = np.asarray(e.v2.value)   # blocks on e's step
+                t_io["wait"] += time.time() - tw
+                tc = time.time()
+                old_value = store.read("value", e.s)
+                changed = np.any(new_value != old_value, axis=-1)
+                d_b = int(changed.sum()) * new_value.shape[-1] * 4
+                f_b = new_value.size * 4
+                if plan.storage == "delta":
+                    store.write_rows("value", e.s, changed,
+                                     new_value[changed])
+                else:
+                    store.write("value", e.s, new_value)
+                new_halt = np.asarray(e.v2.halt)
+                new_vid = np.asarray(e.v2.vid)
+                store.write("halt", e.s, new_halt)
+                store.write("vid", e.s, new_vid)
+                store.write("edge_dst", e.s, np.asarray(e.v2.edge_dst))
+                store.write("edge_val", e.s, np.asarray(e.v2.edge_val))
+                store.unpin("value", e.s)
+                # collected sender buckets -> per-destination out pages
+                # (chunking here is what keeps the barrier's inbox
+                # rebuild at inbox/n_sp peak DRAM)
+                b_dst = np.asarray(e.buckets.dst)
+                b_pay = np.asarray(e.buckets.payload)
+                b_val = np.asarray(e.buckets.valid)
+                counts = b_val.sum(axis=2)
+                for q in range(n_sp):
+                    qsl = slice(q * sp, (q + 1) * sp)
+                    store.put_page(("out_dst", e.s, q), b_dst[:, qsl])
+                    store.put_page(("out_pay", e.s, q), b_pay[:, qsl])
+                    store.put_page(("out_val", e.s, q), b_val[:, qsl])
+                has_mut = e.mut is not None
+                if has_mut:
+                    # chunked per destination like the out blocks, so
+                    # the barrier's apply pass runs at mut-inbox / n_sp
+                    # peak DRAM and never re-faults full-width pages
+                    m_dst = np.asarray(e.mut[0])
+                    m_pay = np.asarray(e.mut[1])
+                    m_ok = np.asarray(e.mut[2])
+                    for q in range(n_sp):
+                        qsl = slice(q * sp, (q + 1) * sp)
+                        store.put_page(("mut_dst", e.s, q), m_dst[:, qsl])
+                        store.put_page(("mut_pay", e.s, q), m_pay[:, qsl])
+                        store.put_page(("mut_val", e.s, q), m_ok[:, qsl])
+                done = _Done(
+                    counts=counts,
+                    halt_ok=bool(np.all(new_halt | (new_vid < 0))),
+                    active=int(e.g2.active_count),
+                    agg=np.asarray(e.g2.aggregate),
+                    delta_bytes=d_b, full_bytes=f_b, has_mut=has_mut)
+                t_io["commit"] += time.time() - tc
+                return done
+
+            while todo or pending:
+                # fill the pipeline window
+                while todo and len(pending) < window:
+                    pending.append(dispatch(todo.popleft()))
+                # collect a completed super-partition — out of dispatch
+                # order when a later one is already done — else block on
+                # the oldest
+                j = 0
+                if len(pending) > 1:
+                    j = next((k for k, e in enumerate(pending)
+                              if e.g2.overflow.is_ready()), 0)
+                e = pending.pop(j)
+                delta = np.asarray(e.g2.overflow) - ovf0   # blocks on e
+                if (delta > 0).any():
+                    # DEFERRED OVERFLOW: a bucket / frontier / mutation /
+                    # edge capacity overflowed mid-pipeline. Unwind the
+                    # in-flight prefetch: drain every pending result,
+                    # committing the ones that finished clean and marking
+                    # overflowed ones for redo; then double ONLY the
+                    # overflowed capacities, re-jit, end-pad the
+                    # committed blocks and redo from retained host state
+                    # (nothing from a dirty step was committed).
+                    redo = {e.s}
+                    store.unpin("value", e.s)
+                    for other in pending:
+                        od = np.asarray(other.g2.overflow) - ovf0
+                        if (od > 0).any():
+                            delta = delta + od
+                            redo.add(other.s)
+                            store.unpin("value", other.s)
+                        else:
+                            committed[other.s] = commit(other)
+                    pending = []
+                    ec = grow_overflowed(ec, delta)
+                    step = jit_superstep(program, plan, ec,
+                                         donate_vertex=True)
+                    seen_widths = {C_in}
+                    for s2, done in committed.items():
+                        for q in range(n_sp):
+                            old = tuple(store.get_page((nm, s2, q))
+                                        for nm in _OUT)
+                            new = _pad_run_width(old, ec.bucket_cap)
+                            if new[0] is not old[0]:
+                                for nm, a in zip(_OUT, new):
+                                    store.put_page((nm, s2, q), a)
+                        if done.has_mut:
+                            for q in range(n_sp):
+                                old = tuple(store.get_page((nm, s2, q))
+                                            for nm in _MUT)
+                                new = _pad_run_width(old,
+                                                     ec.mutation_cap)
+                                if new[0] is not old[0]:
+                                    for nm, a in zip(_MUT, new):
+                                        store.put_page((nm, s2, q), a)
+                    todo = deque(sorted(redo | set(todo)))
+                    stats.append(coll.event(
+                        i, "regrow", bucket_cap=ec.bucket_cap,
+                        frontier_cap=ec.frontier_cap,
+                        mutation_cap=ec.mutation_cap,
+                        sources=np.flatnonzero(delta > 0).tolist(),
+                        redo=sorted(redo)).as_dict())
+                    this_recompiled = True
+                    continue
+                committed[e.s] = commit(e)
+
+            # superstep barrier: fold the per-super-partition results in
+            # super-partition order (float aggregate order must not depend
+            # on pipeline completion order — bit-for-bit vs the
+            # synchronous loop)
+            ordered = [committed[s] for s in range(n_sp)]
+            halt_all = all(d.halt_ok for d in ordered)
+            active = sum(d.active for d in ordered)
+            agg = np.zeros((program.agg_dims,), np.float32)
+            for d in ordered:
+                agg += d.agg
+            step_delta = sum(d.delta_bytes for d in ordered)
+            step_full = sum(d.full_bytes for d in ordered)
+            delta_bytes += step_delta
+            full_bytes += step_full
+            msg_count = int(sum(int(d.counts.sum()) for d in ordered))
+            C_eff = _round_run_width(
+                int(max((int(d.counts.max(initial=0)) for d in ordered),
+                        default=0)), ec.bucket_cap)
+            # vectorized inbox rebuild, one destination super-partition
+            # at a time (peak DRAM = inbox / n_sp): stack each
+            # destination chunk's (sp, sp, C) out pages source-major,
+            # transpose to destination-major (the host-side emulated
+            # exchange) and trim every run to the widest occupancy —
+            # valid entries are a bucket PREFIX, so the trim drops only
+            # invalid tail slots. Distinct destinations are counted here
+            # for the combinability signal (owners never collide across
+            # partitions, so per-chunk uniques sum exactly).
+            new_gen = gen + 1
+            distinct_dst = 0
+            for q in range(n_sp):
+                d_q = np.concatenate([store.get_page(("out_dst", s, q))
+                                      for s in range(n_sp)], axis=0)
+                p_q = np.concatenate([store.get_page(("out_pay", s, q))
+                                      for s in range(n_sp)], axis=0)
+                v_q = np.concatenate([store.get_page(("out_val", s, q))
+                                      for s in range(n_sp)], axis=0)
+                dst_c = np.ascontiguousarray(
+                    d_q.transpose(1, 0, 2)[:, :, :C_eff])
+                pay_c = np.ascontiguousarray(
+                    p_q.transpose(1, 0, 2, 3)[:, :, :C_eff])
+                val_c = np.ascontiguousarray(
+                    v_q.transpose(1, 0, 2)[:, :, :C_eff])
+                if controller is not None:
+                    # distinct destinations PER (dst-partition, source)
+                    # RUN — the duplicates a SENDER-side combine could
+                    # actually collapse (global distinct would also
+                    # count cross-source fan-in, which no sender can
+                    # remove). Sort each run and count value boundaries;
+                    # invalid slots key as int max. Only the adaptive
+                    # controller consumes the signal, so fixed-plan runs
+                    # skip the O(M log C) pass. Caveat: when the
+                    # producing plan already combined, every run is
+                    # duplicate-free and the measured ratio is ~1 — the
+                    # model then prices the inbox leg neutrally and the
+                    # sender-combine decision falls to the sort-cost
+                    # terms, which is the honest post-combine view.
+                    key = np.where(val_c, dst_c, np.iinfo(np.int32).max)
+                    srt = np.sort(key, axis=2)
+                    new_run = np.ones(srt.shape, bool)
+                    new_run[:, :, 1:] = srt[:, :, 1:] != srt[:, :, :-1]
+                    distinct_dst += int(
+                        (new_run & (srt != np.iinfo(np.int32).max)).sum())
+                store.put_page(("inbox_dst", new_gen, q), dst_c,
+                               immutable=True)
+                store.put_page(("inbox_pay", new_gen, q), pay_c,
+                               immutable=True)
+                store.put_page(("inbox_val", new_gen, q), val_c,
+                               immutable=True)
+                for s in range(n_sp):
+                    for nm in _OUT:
+                        store.delete_page((nm, s, q))
+            for q in range(n_sp):
+                for nm in _INBOX:
+                    store.delete_page((nm, gen, q))
+            gen = new_gen
+            C_in = C_eff
+            combinability = (msg_count / distinct_dst if distinct_dst
+                             else 1.0)
+            # host mutation inbox: apply collected cross-super-partition
+            # insert proposals to the host store with the in-memory
+            # scatter/resolve semantics; an applied insert clears halt on
+            # its slot, exactly as the in-device path would have
+            mutation_rate = 0.0
+            if any(d.has_mut for d in ordered):
+                proposals, applied = _apply_host_mutations(
+                    store, program, plan, P, sp, n_sp)
+                mutation_rate = proposals / max(n_live, 1)
+                if applied:
+                    halt_all = False
+                for s in range(n_sp):
+                    for q in range(n_sp):
+                        for nm in _MUT:
+                            store.delete_page((nm, s, q))
+            i += 1
+            gs = GlobalState(halt=jnp.asarray(halt_all and msg_count == 0),
+                             aggregate=jnp.asarray(agg),
+                             superstep=jnp.asarray(i, jnp.int32),
+                             overflow=gs.overflow,
+                             active_count=jnp.asarray(active, jnp.int32),
+                             msg_count=jnp.asarray(msg_count, jnp.int32))
+            pool_now = store.stats()
+            faults = (pool_now["misses"] - pool_prev["misses"])
+            looks = faults + (pool_now["hits"] - pool_prev["hits"])
+            spill_rd = (pool_now["spill_read_bytes"] -
+                        pool_prev["spill_read_bytes"])
+            spill_wr = (pool_now["spill_write_bytes"] -
+                        pool_prev["spill_write_bytes"])
+            rec = coll.record(
+                i, active=active, messages=msg_count,
+                wall_s=time.time() - ts, recompiled=this_recompiled,
+                delta_bytes=delta_bytes, full_bytes=full_bytes,
+                change_density=step_delta / max(step_full, 1),
+                storage=plan.storage, ooc=True, streaming=stream,
+                dispatch_s=t_io["dispatch"], collect_wait_s=t_io["wait"],
+                commit_s=t_io["commit"],
+                combinability=combinability,
+                mutation_rate=mutation_rate,
+                # MEASURED paging, not configuration: a disk_dir whose
+                # budget never forces an eviction must not make the cost
+                # model price phantom disk traffic
+                spill=bool(spill_rd or spill_wr),
+                cache_hit_rate=(1.0 - faults / looks) if looks else 1.0,
+                spill_read_bytes=spill_rd,
+                spill_write_bytes=spill_wr,
+                pager_resident_bytes=pool_now["resident_bytes"],
+                pager_peak_bytes=pool_now["peak_resident_bytes"])
+            pool_prev = pool_now
+            stats.append(rec.as_dict())
+            switched = False
+            if controller is not None and not bool(gs.halt):
+                new_plan = controller.observe(rec, bucket_cap=ec.bucket_cap)
+                if new_plan is not None:
+                    if (new_plan.connector == "partitioning_merging"
+                            and plan.connector != "partitioning_merging"
+                            and not plan.sender_combine):
+                        # the old plan left runs unsorted; give the
+                        # merging receiver its dst-sorted runs (one-off,
+                        # host-side, chunk at a time — the OOC analogue
+                        # of migrate_msgs)
+                        for q in range(n_sp):
+                            triple = _sort_inbox_runs(tuple(
+                                store.get_page((nm, gen, q))
+                                for nm in _INBOX))
+                            for nm, a in zip(_INBOX, triple):
+                                store.put_page((nm, gen, q), a,
+                                               immutable=True)
+                    plan = new_plan
+                    if plan.join == "left_outer":
+                        # refit the frontier to the live set — safe now
+                        # that an outgrown refit regrows instead of
+                        # aborting
+                        act = active // max(P, 1) + 1
+                        ec = dataclasses.replace(
+                            ec, frontier_cap=min(
+                                max(FRONTIER_FLOOR, act * 4), Np + 8))
+                    # dropping the sender combine needs room for
+                    # uncombined sends: grow the buckets now instead of
+                    # paying an overflow-redo on the next superstep
+                    need = default_engine_config(shape_vert, program, plan)
+                    if need.bucket_cap > ec.bucket_cap:
+                        ec = dataclasses.replace(
+                            ec, bucket_cap=need.bucket_cap)
+                    step = jit_superstep(program, plan, ec,
+                                         donate_vertex=True)
+                    seen_widths = set()
+                    stats.append(coll.event(
+                        i, "plan-switch", join=plan.join,
+                        groupby=plan.groupby, connector=plan.connector,
+                        sender_combine=plan.sender_combine,
+                        storage=plan.storage,
+                        frontier_cap=ec.frontier_cap).as_dict())
+                    recompiled = True
+                    switched = True
+            # adaptive frontier refit (left-outer plan), mirroring
+            # run_host: when the live set collapses, shrink the frontier
+            # capacity so each super-partition only pays O(|frontier|)
+            if plan.join == "left_outer" and not switched \
+                    and not bool(gs.halt):
+                act = active // max(P, 1) + 1
+                if act * 4 < ec.frontier_cap and ec.frontier_cap > \
+                        FRONTIER_FLOOR:
                     ec = dataclasses.replace(
-                        ec, frontier_cap=min(max(FRONTIER_FLOOR, act * 4),
-                                             Np + 8))
-                # dropping the sender combine needs room for uncombined
-                # sends: grow the buckets now instead of paying an
-                # overflow-redo on the next superstep
-                need = default_engine_config(vert, program, plan)
-                if need.bucket_cap > ec.bucket_cap:
-                    ec = dataclasses.replace(ec,
-                                             bucket_cap=need.bucket_cap)
-                step = jit_superstep(program, plan, ec, donate_vertex=True)
-                seen_widths = set()
-                stats.append(coll.event(
-                    i, "plan-switch", join=plan.join,
-                    groupby=plan.groupby, connector=plan.connector,
-                    sender_combine=plan.sender_combine,
-                    storage=plan.storage,
-                    frontier_cap=ec.frontier_cap).as_dict())
-                recompiled = True
-                switched = True
-        # adaptive frontier refit (left-outer plan), mirroring run_host:
-        # when the live set collapses, shrink the frontier capacity so
-        # each super-partition only pays O(|frontier|)
-        if plan.join == "left_outer" and not switched and not bool(gs.halt):
-            act = active // max(P, 1) + 1
-            if act * 4 < ec.frontier_cap and ec.frontier_cap > \
-                    FRONTIER_FLOOR:
-                ec = dataclasses.replace(
-                    ec, frontier_cap=max(FRONTIER_FLOOR, act * 2))
-                step = jit_superstep(program, plan, ec, donate_vertex=True)
-                seen_widths = set()
-                stats.append(coll.event(
-                    i, "frontier-refit",
-                    frontier_cap=ec.frontier_cap).as_dict())
-                recompiled = True
-        if bool(gs.halt):
-            break
-    final = VertexRel(**{k: jnp.asarray(host[k]) for k in host})
-    return RunResult(vertex=final, gs=gs, supersteps=i, stats=stats,
-                     wall_s=time.time() - t0, plan=plan)
+                        ec, frontier_cap=max(FRONTIER_FLOOR, act * 2))
+                    step = jit_superstep(program, plan, ec,
+                                         donate_vertex=True)
+                    seen_widths = set()
+                    stats.append(coll.event(
+                        i, "frontier-refit",
+                        frontier_cap=ec.frontier_cap).as_dict())
+                    recompiled = True
+            if checkpoint_every and checkpoint_dir \
+                    and i % checkpoint_every == 0:
+                save_ooc_checkpoint(checkpoint_dir, i, store, gs,
+                                    inbox_gen=gen, inbox_width=C_in,
+                                    sp=sp, plan=plan, ec=ec)
+            if bool(gs.halt):
+                break
+        final = VertexRel(**{k: jnp.asarray(store.gather(k))
+                             for k in _RELS})
+        return RunResult(vertex=final, gs=gs, supersteps=i, stats=stats,
+                         wall_s=time.time() - t0, plan=plan)
+    finally:
+        if store is not None:
+            store.close()

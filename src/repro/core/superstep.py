@@ -96,15 +96,20 @@ def make_superstep(program: VertexProgram, plan: PhysicalPlan,
                 s, p, v, Np, program.combine_op)
         return jax.vmap(f)(slot, msg.payload, msg.valid)
 
-    def _part_ids(P_local: int):
+    def _part_ids(P_local: int, part0=None):
         if ec.axis_name is None:
-            return jnp.arange(P_local, dtype=jnp.int32)[:, None]
+            ids = jnp.arange(P_local, dtype=jnp.int32)
+            if part0 is not None:
+                # out-of-core: the resident block holds GLOBAL partitions
+                # part0..part0+P_local-1, not 0..P_local-1
+                ids = ids + part0
+            return ids[:, None]
         idx = jnp.zeros((), jnp.int32)
         for a in ec.axis_name:
             idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
         return jnp.broadcast_to(idx, (P_local, 1))
 
-    def resurrect(vert: VertexRel, has_msg):
+    def resurrect(vert: VertexRel, has_msg, part0):
         """Paper Fig. 2 left-outer case: a message to a non-existent vid
         CREATES the vertex (fields NULL). Slot s of partition p holds vid
         s * n_parts + p, so the vid is recoverable from the address."""
@@ -112,10 +117,10 @@ def make_superstep(program: VertexProgram, plan: PhysicalPlan,
         make = has_msg & (vert.vid < 0)
         if plan.partition == "range":
             slot_vid = (jnp.arange(Np, dtype=jnp.int32)[None, :] +
-                        _part_ids(P_local) * Np)
+                        _part_ids(P_local, part0) * Np)
         else:
             slot_vid = (jnp.arange(Np, dtype=jnp.int32)[None, :] * n_parts +
-                        _part_ids(P_local))
+                        _part_ids(P_local, part0))
         vid = jnp.where(make, slot_vid, vert.vid)
         halt = jnp.where(make, False, vert.halt)
         value = jnp.where(make[..., None], 0.0, vert.value)
@@ -225,7 +230,15 @@ def make_superstep(program: VertexProgram, plan: PhysicalPlan,
 
     def apply_mutations(vert, value, halt, out: ComputeOut, gs):
         """Dataflow D6 (Figure 5): deletions before insertions, conflicts
-        via resolve."""
+        via resolve. Out-of-core (``ec.ooc_collect``) the insert
+        proposals are BUCKETED BY OWNER over all n_parts partitions and
+        handed back to the host instead of being exchanged: the in-device
+        exchange only spans the resident super-partition, so a
+        cross-super-partition insert must travel through the HOST
+        MUTATION INBOX (core/ooc.py applies the buckets — with the same
+        scatter/resolve semantics — at the superstep barrier). Deletions
+        and own-edge rewrites stay in-device: they are local to the
+        owning partition by construction."""
         P, Np = vert.vid.shape
         vid = vert.vid
         if out.delete_self is not None:
@@ -233,7 +246,15 @@ def make_superstep(program: VertexProgram, plan: PhysicalPlan,
             vid = jnp.where(dele, -1, vid)
             halt = jnp.where(dele, True, halt)
         ovf = jnp.zeros((), jnp.int32)
-        if out.insert_vid is not None:
+        mut_buckets = None
+        if out.insert_vid is not None and ec.ooc_collect:
+            ins_dst = out.insert_vid.reshape(P, -1)
+            ins_val = out.insert_value.reshape(P, Np, -1)
+            mb_dst, mb_val, mb_ok, ovf = route(
+                ins_dst, ins_val, ins_dst >= 0, ec.mutation_cap, Np,
+                collect=True)
+            mut_buckets = (mb_dst, mb_val, mb_ok)
+        elif out.insert_vid is not None:
             ins_dst = out.insert_vid.reshape(P, -1)
             ins_val = out.insert_value.reshape(P, Np, -1)
             r_dst, r_val, r_valid, ovf = route(
@@ -263,14 +284,19 @@ def make_superstep(program: VertexProgram, plan: PhysicalPlan,
         if out.new_edge_val is not None:
             edge_val = jnp.where(jnp.isnan(out.new_edge_val), edge_val,
                                  out.new_edge_val)
-        return vid, value, halt, edge_dst, edge_val, ovf
+        return vid, value, halt, edge_dst, edge_val, ovf, mut_buckets
 
-    def superstep(vert: VertexRel, msg: MsgRel, gs: GlobalState):
+    def superstep(vert: VertexRel, msg: MsgRel, gs: GlobalState,
+                  part0=None):
+        """``part0`` (out-of-core only): global index of the resident
+        block's first partition, so resurrect derives correct vids for
+        super-partitions past the first. Traced as a scalar — the jitted
+        step is shared across super-partitions without re-tracing."""
         P, Np = vert.vid.shape
         # 1-2. receiver group-by + join + select (D1)
         combined, has_msg = receiver_groupby(msg, Np)
         if getattr(program, "mutates", False):
-            vert = resurrect(vert, has_msg)
+            vert = resurrect(vert, has_msg, part0)
         out, active, frontier = run_compute(vert, combined, has_msg, gs)
         # 3. vertex updates (D2)
         value, halt, gate, agg = apply_updates(vert, out, active, frontier)
@@ -286,12 +312,13 @@ def make_superstep(program: VertexProgram, plan: PhysicalPlan,
         ovf_f = frontier[2].sum() if frontier is not None else 0
         # 5. mutations (D6)
         m_ovf = jnp.zeros((), jnp.int32)
+        mut_buckets = None
         vid, edge_dst, edge_val = vert.vid, vert.edge_dst, vert.edge_val
         if (out.insert_vid is not None or out.delete_self is not None
                 or out.new_edge_dst is not None
                 or out.new_edge_val is not None):
-            vid, value, halt, edge_dst, edge_val, m_ovf = apply_mutations(
-                vert, value, halt, out, gs)
+            (vid, value, halt, edge_dst, edge_val, m_ovf,
+             mut_buckets) = apply_mutations(vert, value, halt, out, gs)
         # 6. global state (D4/D5/D8/D9). Overflow is counted PER SOURCE
         # (bucket / frontier / mutation / edge) so the drivers' regrow
         # paths double only the capacity that actually overflowed.
@@ -327,6 +354,11 @@ def make_superstep(program: VertexProgram, plan: PhysicalPlan,
             overflow=gs.overflow + overflow,
             active_count=active_count,
             msg_count=msg_count)
+        if ec.ooc_collect:
+            # 4th output: collected insert-proposal buckets (sp, P, Cm)
+            # for the host mutation inbox; None when the program never
+            # proposes inserts (the pytree stays static per program)
+            return new_vert, new_msg, new_gs, mut_buckets
         return new_vert, new_msg, new_gs
 
     return superstep

@@ -186,6 +186,18 @@ def main():
     ap.add_argument("--no-stream", dest="stream", action="store_false",
                     help="synchronous --ooc loop: upload, step, block, "
                          "collect per super-partition")
+    ap.add_argument("--disk-dir", default=None,
+                    help="--ooc disk tier: spill directory for the "
+                         "buffer cache's page files (enables the "
+                         "HBM <-> DRAM <-> disk hierarchy)")
+    ap.add_argument("--memory-budget-bytes", type=int, default=None,
+                    help="--ooc disk tier: host-DRAM byte budget for "
+                         "the page cache (requires --disk-dir); cold "
+                         "pages spill to disk and fault back on access")
+    ap.add_argument("--eviction", default="lru", choices=["lru", "mru"],
+                    help="--ooc disk tier page-replacement policy: lru, "
+                         "or mru (resists the superstep's cyclic "
+                         "sequential scan)")
     args = ap.parse_args()
 
     plan = "auto" if args.auto_plan else PhysicalPlan(
@@ -235,17 +247,33 @@ def main():
         if not budget:   # largest divisor of parts that is <= parts // 2
             budget = next(b for b in range(max(args.parts // 2, 1), 0, -1)
                           if args.parts % b == 0)
+        if args.memory_budget_bytes and not args.disk_dir:
+            ap.error("--memory-budget-bytes requires --disk-dir "
+                     "(a budget needs somewhere to spill)")
         res = run_out_of_core(vert, program, plan,
                               budget_partitions=budget, max_supersteps=40,
-                              stream=args.stream)
+                              stream=args.stream,
+                              memory_budget_bytes=args.memory_budget_bytes,
+                              disk_dir=args.disk_dir,
+                              eviction=args.eviction)
+        tier = (f", disk tier at {args.disk_dir} "
+                f"[{args.eviction}]" if args.disk_dir else "")
         mode = (f"out-of-core (budget={budget}/{args.parts} partitions, "
-                f"{'streaming' if args.stream else 'synchronous'})")
+                f"{'streaming' if args.stream else 'synchronous'}{tier})")
     else:
         res = run_host(vert, program, plan, max_supersteps=40)
         mode = "in-memory"
     vals = gather_values(res.vertex, n)
     print(f"{args.algo} on {args.dataset} [{mode}]: "
           f"{res.supersteps} supersteps, {res.wall_s:.2f}s wall")
+    if args.ooc and args.disk_dir:
+        recs = [s for s in res.stats if "cache_hit_rate" in s]
+        if recs:
+            hr = sum(s["cache_hit_rate"] for s in recs) / len(recs)
+            sb = sum(s["spill_read_bytes"] + s["spill_write_bytes"]
+                     for s in recs)
+            print(f"disk tier: mean page hit rate {hr:.2f}, "
+                  f"{sb / 2**20:.1f} MiB spilled")
     if args.auto_plan:
         switches = [s for s in res.stats
                     if s.get("event") == "plan-switch"]

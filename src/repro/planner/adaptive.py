@@ -63,9 +63,13 @@ class AdaptiveController:
         `bucket_cap` = the engine's live bucket capacity, flooring every
         candidate's modeled message capacity (buckets only grow)."""
         cfg = self.config
-        # OOC drivers annotate their records with ooc=True and the
+        # OOC drivers annotate their records with ooc=True plus the
         # measured per-superstep change density (delta/full write-back
-        # byte ratio) — that is what prices the storage dimension
+        # byte ratio — prices the storage dimension), message
+        # COMBINABILITY (messages per distinct destination — prices the
+        # sender_combine dimension), mutation rate (host mutation-inbox
+        # traffic) and the disk tier's hit rate / spill flag (prices the
+        # disk-bandwidth axis)
         obs = Observation(frontier_density=rec.frontier_density,
                           messages=rec.messages, superstep=rec.superstep,
                           bucket_cap=bucket_cap,
@@ -73,7 +77,15 @@ class AdaptiveController:
                               "change_density", 1.0),
                           ooc=bool(rec.extra.get("ooc", False)),
                           streaming=bool(rec.extra.get("streaming",
-                                                       False)))
+                                                       False)),
+                          combinability=max(
+                              float(rec.extra.get("combinability", 1.0)),
+                              1.0),
+                          mutation_rate=float(
+                              rec.extra.get("mutation_rate", 0.0)),
+                          spilling=bool(rec.extra.get("spill", False)),
+                          hit_rate=float(rec.extra.get("cache_hit_rate",
+                                                       1.0)))
         best, best_cost = choose(self.program, self.g, obs,
                                  base=self.plan, machine=self.machine,
                                  **self.space_kw)
@@ -137,14 +149,18 @@ def resolve_auto_plan(vert, program, *,
                       config: AdaptiveConfig = AdaptiveConfig(),
                       machine: MachineModel = DEFAULT_MACHINE,
                       space_kw: Optional[dict] = None,
+                      g: Optional[GraphStats] = None,
                       ) -> Tuple[PhysicalPlan, Optional[AdaptiveController]]:
     """Entry point for drivers' ``plan="auto"``: pick the initial plan for
     superstep 0 (Pregel activates EVERY vertex, so density starts at 1.0)
-    and, when `adaptive`, the controller that re-chooses mid-run."""
+    and, when `adaptive`, the controller that re-chooses mid-run.
+    ``g`` supplies pre-computed graph statistics when no VertexRel exists
+    (the OOC resume-from-spill-directory path)."""
     if base is not None and base.frontier_capacity != 1.0:
         # superstep 0 must cover all vertices under left-outer
         base = dataclasses.replace(base, frontier_capacity=1.0)
-    g = GraphStats.from_vertex(vert, program)
+    if g is None:
+        g = GraphStats.from_vertex(vert, program)
     plan, _ = choose(program, g, Observation(frontier_density=1.0),
                      base=base, machine=machine, **(space_kw or {}))
     if not adaptive:

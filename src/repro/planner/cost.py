@@ -71,6 +71,11 @@ class MachineModel:
     host_bw: float = 32e9        # bytes/s device<->host (PCIe-class); the
                                  # OOC streaming traffic and storage
                                  # write-back cross this link
+    disk_bw: float = 3e9         # bytes/s host DRAM<->local SSD (NVMe,
+                                 # sequential); the spill tier's page
+                                 # faults and dirty write-backs cross it
+                                 # when the buffer cache overflows its
+                                 # memory_budget_bytes
     k_compute: float = K_COMPUTE
     k_scatter: float = K_SCATTER
     sort_pass_frac: float = SORT_PASS_FRAC
@@ -80,7 +85,8 @@ DEFAULT_MACHINE = MachineModel()
 # emulated transport (single host): the "exchange" is a transpose through
 # memory and the "host link" is a memcpy, not an ICI/PCIe hop — the host
 # drivers plan with this model (the delta-vs-inplace distinction survives:
-# scatter amplification vs streaming is a memory-system property)
+# scatter amplification vs streaming is a memory-system property). The
+# DISK is a real disk either way, so disk_bw keeps its default.
 EMULATED_MACHINE = MachineModel(link_bw=DEFAULT_MACHINE.hbm_bw,
                                 host_bw=DEFAULT_MACHINE.hbm_bw)
 
@@ -132,6 +138,23 @@ class Observation:
     # compute, so the model prices the superstep as max(step, transfer)
     # instead of step + transfer (PlanCost.overlap_host).
     streaming: bool = False
+    # messages per DISTINCT destination, measured from the run-structured
+    # host inbox (>= 1). High combinability means a sender combine
+    # collapses the inbox that crosses the host link; ~1 means the
+    # sort+fold buys nothing — this is what makes the sender_combine
+    # dimension replannable from observed statistics.
+    combinability: float = 1.0
+    # insert proposals per live vertex last superstep: the host mutation
+    # inbox's device->host + scatter-merge traffic.
+    mutation_rate: float = 0.0
+    # True when the OOC store runs the DISK TIER (a memory_budget_bytes
+    # smaller than the working set, spilling through storage/pager): page
+    # faults and dirty write-backs then cross the disk axis.
+    spilling: bool = False
+    # pager hit rate (fraction of page lookups served from DRAM) from the
+    # statistics stream; 1 - hit_rate of the streamed bytes fault from
+    # disk.
+    hit_rate: float = 1.0
 
 
 @dataclass
@@ -140,22 +163,27 @@ class PlanCost:
     bytes: float = 0.0            # HBM traffic per partition
     exchange_bytes: float = 0.0   # cross-partition link bytes
     host_bytes: float = 0.0       # device<->host link bytes (OOC only)
+    disk_bytes: float = 0.0       # DRAM<->disk spill-tier bytes (OOC
+                                  # under a memory budget only)
     terms: dict = field(default_factory=dict)   # per-operator seconds
-    # pipelined OOC streaming: the host link runs concurrently with the
-    # device, so total seconds = max(device, host) instead of their sum
+    # pipelined OOC streaming: the host link and the disk both run
+    # concurrently with the device, so total seconds =
+    # max(device, host, disk) instead of their sum
     overlap_host: bool = False
 
     def add(self, term: str, machine: MachineModel, *, flops: float = 0.0,
             bytes: float = 0.0, exchange_bytes: float = 0.0,
-            host_bytes: float = 0.0):
+            host_bytes: float = 0.0, disk_bytes: float = 0.0):
         self.flops += flops
         self.bytes += bytes
         self.exchange_bytes += exchange_bytes
         self.host_bytes += host_bytes
+        self.disk_bytes += disk_bytes
         self.terms[term] = self.terms.get(term, 0.0) + (
             flops / machine.peak_flops + bytes / machine.hbm_bw +
             exchange_bytes / machine.link_bw +
-            host_bytes / machine.host_bw)
+            host_bytes / machine.host_bw +
+            disk_bytes / machine.disk_bw)
 
     def device_seconds(self, machine: MachineModel = DEFAULT_MACHINE) \
             -> float:
@@ -167,17 +195,23 @@ class PlanCost:
             -> float:
         return self.host_bytes / machine.host_bw
 
+    def disk_seconds(self, machine: MachineModel = DEFAULT_MACHINE) \
+            -> float:
+        return self.disk_bytes / machine.disk_bw
+
     def seconds(self, machine: MachineModel = DEFAULT_MACHINE) -> float:
         dev = self.device_seconds(machine)
         hst = self.host_seconds(machine)
+        dsk = self.disk_seconds(machine)
         if self.overlap_host:
-            # the streaming executor hides the slower of the two behind
-            # the other; steady state settles at their max. The small
-            # residual breaks ties among transfer-bound plans toward the
-            # one doing less total work (overlap is never quite perfect,
-            # and less hidden work frees the pipeline sooner).
-            return max(dev, hst) + 1e-3 * (dev + hst)
-        return dev + hst
+            # the streaming executor hides the slower legs behind the
+            # slowest; steady state settles at max(device, host_link,
+            # disk). The small residual breaks ties among transfer-bound
+            # plans toward the one doing less total work (overlap is
+            # never quite perfect, and less hidden work frees the
+            # pipeline sooner).
+            return max(dev, hst, dsk) + 1e-3 * (dev + hst + dsk)
+        return dev + hst + dsk
 
 
 def bucket_cap(plan: PhysicalPlan, g: GraphStats, slack: float = 1.5) -> int:
@@ -281,9 +315,20 @@ def estimate(plan: PhysicalPlan, g: GraphStats, obs: Observation,
         # (vid/halt/value/edges) and its inbox runs go H2D, and the
         # vid/halt/edge updates plus collected sender buckets come back
         # D2H (the value write-back is priced separately below, by
-        # storage policy). Plan-dependent through M: a sender combine
-        # shrinks the bucket capacity that crosses the link.
-        up = Np * ((1 + V) * WORD + 1) + 3 * Ep * WORD + M * msg_w
+        # storage policy). The inbox that goes UP is run-trimmed to its
+        # occupancy, so it is priced from live messages — and a sender
+        # combine divides it by the measured COMBINABILITY (messages per
+        # distinct destination): that is the term that lets observed
+        # combinability drive the sender_combine replan dimension. The
+        # collected buckets coming DOWN are capacity-sized (M).
+        if obs.messages > 0:
+            mpp = obs.messages / max(P, 1)
+            if plan.sender_combine:
+                mpp = mpp / max(obs.combinability, 1.0)
+            inbox_up = min(float(M), mpp + P) * msg_w
+        else:
+            inbox_up = M * msg_w    # superstep 0: no measurement yet
+        up = Np * ((1 + V) * WORD + 1) + 3 * Ep * WORD + inbox_up
         down = Np * (WORD + 1) + 2 * Ep * WORD + M * msg_w
         c.add("stream_io", machine, host_bytes=up + down)
         # storage write-back: a streamed super-partition must push its
@@ -292,8 +337,8 @@ def estimate(plan: PhysicalPlan, g: GraphStats, obs: Observation,
         # measured delta_bytes/full_bytes ratio from the OOC statistics
         # stream.
         vblock = Np * V * WORD
+        cd = min(max(obs.change_density, 0.0), 1.0)
         if plan.storage == "delta":
-            cd = min(max(obs.change_density, 0.0), 1.0)
             # changed (slot, value) records cross the link; the compare
             # streams the store once and the merge scatters the survivors
             c.add("storage_writeback", machine,
@@ -303,8 +348,30 @@ def estimate(plan: PhysicalPlan, g: GraphStats, obs: Observation,
             # the full value block streams across the link and the store
             c.add("storage_writeback", machine,
                   host_bytes=vblock, bytes=vblock)
-        # the pipelined executor overlaps the host link with compute:
-        # rank plans by max(device, host) instead of their sum
+        # host mutation inbox: insert proposals cross the link D2H and
+        # scatter-merge into the host store at the barrier
+        if obs.mutation_rate > 0.0:
+            mut = obs.mutation_rate * Np
+            c.add("mutation_io", machine,
+                  host_bytes=mut * ((1 + V) * WORD + 1),
+                  bytes=ks * mut * (1 + V) * WORD)
+        # DISK TIER: when the buffer cache spills (memory budget smaller
+        # than the working set), the missed fraction of every streamed
+        # page faults in from disk and the dirty write-back goes out to
+        # it. Reads miss at (1 - hit_rate); writes are storage-policy
+        # shaped — `inplace` rewrites the value pages every superstep,
+        # `delta` only dirties pages with changed rows (≈ change
+        # density), and the inbox generation is rewritten either way.
+        if obs.spilling:
+            miss = min(max(1.0 - obs.hit_rate, 0.0), 1.0)
+            rel_pages = Np * ((1 + V) * WORD + 1) + 3 * Ep * WORD
+            reads = miss * (rel_pages + inbox_up)
+            writes = inbox_up + (cd * vblock if plan.storage == "delta"
+                                 else vblock)
+            c.add("disk_io", machine, disk_bytes=reads + writes)
+        # the pipelined executor overlaps the host link and the disk
+        # with compute: rank plans by max(device, host, disk) instead of
+        # their sum
         c.overlap_host = bool(obs.streaming)
     return c
 

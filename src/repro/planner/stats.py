@@ -19,8 +19,18 @@ the executor mode (``streaming``) and the pipeline's wall-time split:
 on device results — the compute-bound share) and ``commit_s`` (host-side
 write-back), so benchmarks can report how close a superstep runs to the
 ``max(compute, transfer)`` streaming bound (``benchmarks/out_of_core.py``
-aggregates them into ``BENCH_ooc.json``). ``AdaptiveController.observe``
-lifts ``ooc`` / ``change_density`` / ``streaming`` into the cost model's
+aggregates them into ``BENCH_ooc.json``).
+
+The disk tier (storage/ buffer cache) adds ``spill`` (True when a memory
+budget forces paging), the per-superstep pager ``cache_hit_rate`` and
+``spill_read_bytes`` / ``spill_write_bytes`` (the disk-bandwidth axis of
+the cost model, archived per run in ``BENCH_storage.json``), plus
+``pager_resident_bytes`` / ``pager_peak_bytes`` (what the budget test
+asserts against). ``combinability`` (messages per distinct destination,
+measured from the run-structured inbox) and ``mutation_rate`` (host
+mutation-inbox proposals per live vertex) close the remaining replan
+loops: they price the sender_combine dimension and the mutation traffic.
+``AdaptiveController.observe`` lifts all of these into the cost model's
 ``Observation``.
 """
 from __future__ import annotations

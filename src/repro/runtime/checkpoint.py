@@ -5,12 +5,21 @@ stand-in). Restore can re-partition onto a DIFFERENT partition count P'
 (the paper's "newly selected set of failure-free worker machines"): vids
 are re-hashed vid % P' and edges re-bucketed — this is what makes recovery
 elastic after blacklisting failed nodes.
+
+OUT-OF-CORE checkpoints (``save_ooc_checkpoint``) snapshot the disk tier
+at the FILE level: the TieredStore's spill pages are hard-linked (the
+atomic page write-back makes links immutable-safe) or kernel-copied into
+the checkpoint directory instead of being re-serialized through DRAM —
+a disk-resident job checkpoints without ever materializing its relations
+in memory. ``run_out_of_core(resume_from=<dir>)`` restarts a job
+directly from such a directory, faulting pages in on first touch.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
+import shutil
 import time
 from pathlib import Path
 
@@ -19,6 +28,12 @@ import numpy as np
 
 from repro.core.relations import (N_OVERFLOW, GlobalState, MsgRel,
                                   VertexRel)
+
+# the host-resident relations an OOC checkpoint carries (one spill page
+# per super-partition each) plus the run-structured inbox chunks
+OOC_RELATIONS = ("vid", "halt", "value", "edge_src", "edge_dst",
+                 "edge_val")
+OOC_INBOX = ("inbox_dst", "inbox_pay", "inbox_val")
 
 
 def save_checkpoint(ckpt_dir: str, superstep: int, vert: VertexRel,
@@ -43,6 +58,79 @@ def save_checkpoint(ckpt_dir: str, superstep: int, vert: VertexRel,
     os.replace(tmp, path)  # atomic publish
     (d / "LATEST").write_text(path.name)
     return str(path)
+
+
+def save_ooc_checkpoint(ckpt_dir: str, superstep: int, store, gs, *,
+                        inbox_gen: int, inbox_width: int,
+                        sp: int, plan=None, ec=None) -> str:
+    """Snapshot an out-of-core job at a superstep boundary. Pages move at
+    the file level (hard-link for immutable inbox generations, kernel
+    copy otherwise — no DRAM round-trip on the disk tier; the pure-DRAM
+    tier falls back to ``np.save`` per page). The checkpoint directory is
+    published atomically via ``os.replace``."""
+    d = Path(ckpt_dir)
+    d.mkdir(parents=True, exist_ok=True)
+    name = f"ooc_{superstep:06d}"
+    tmp = d / f".tmp_{name}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    for nm in OOC_RELATIONS:
+        for s in range(store.n_sp):
+            store.export_page((nm, s), tmp / f"{nm}_{s}.npy")
+    for nm in OOC_INBOX:
+        for q in range(store.n_sp):
+            store.export_page((nm, inbox_gen, q), tmp / f"{nm}_{q}.npy")
+    np.savez(tmp / "gs.npz",
+             halt=np.asarray(gs.halt), aggregate=np.asarray(gs.aggregate),
+             superstep=np.asarray(gs.superstep),
+             overflow=np.asarray(gs.overflow),
+             active=np.asarray(gs.active_count),
+             msgs=np.asarray(gs.msg_count))
+    (tmp / "meta.json").write_text(json.dumps(
+        {"format": 1, "superstep": int(superstep), "n_sp": store.n_sp,
+         "sp": int(sp), "inbox_width": int(inbox_width),
+         # the plan IN EFFECT — it produced the checkpointed inbox's run
+         # layout, and resume restarts plan="auto" jobs from it instead
+         # of re-choosing blind over a foreign inbox
+         "plan": dataclasses.asdict(plan) if plan is not None else None,
+         # the (possibly overflow-regrown) capacities, so a resume does
+         # not replay the whole regrow cascade from the defaults
+         "caps": ({"bucket_cap": ec.bucket_cap,
+                   "frontier_cap": ec.frontier_cap,
+                   "mutation_cap": ec.mutation_cap}
+                  if ec is not None else None),
+         "saved_at": time.time()}))
+    final = d / name
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    (d / "LATEST_OOC").write_text(name)
+    return str(final)
+
+
+def latest_ooc_checkpoint(ckpt_dir: str):
+    d = Path(ckpt_dir)
+    marker = d / "LATEST_OOC"
+    if not marker.exists():
+        return None
+    p = d / marker.read_text().strip()
+    return str(p) if p.exists() else None
+
+
+def load_ooc_meta(path: str):
+    """Resolve an OOC checkpoint path (either a checkpoint directory or
+    a parent directory with a LATEST_OOC marker) and load its metadata.
+    Returns (meta dict, gs npz mapping, checkpoint Path)."""
+    p = Path(path)
+    if (p / "LATEST_OOC").exists():
+        p = p / (p / "LATEST_OOC").read_text().strip()
+    if not (p / "meta.json").exists():
+        raise FileNotFoundError(
+            f"{path!r} is not an out-of-core checkpoint (no meta.json)")
+    meta = json.loads((p / "meta.json").read_text())
+    gs = dict(np.load(p / "gs.npz"))
+    return meta, gs, p
 
 
 def latest_checkpoint(ckpt_dir: str):

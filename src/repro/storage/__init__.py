@@ -1,0 +1,24 @@
+"""Buffer-cache storage subsystem: the HBM ↔ host DRAM ↔ disk tier.
+
+The paper's out-of-core execution spills every operator through the
+Hyracks buffer cache (Sections 2.3/5.4); this package is that layer for
+the TPU-adapted runtime:
+
+* ``pager``     — page-granular buffer cache: DRAM byte budget, LRU and
+                  cyclic-scan-resistant (MRU) eviction, pin/unpin for
+                  in-flight pipeline slots, lazy dirty-page write-back
+* ``spillfile`` — mmap-backed ``.npy`` page files with atomic writes
+                  (sequential I/O; hard-link-safe for checkpoints)
+* ``tiered``    — ``TieredStore``, the facade ``core/ooc.py``'s
+                  dispatcher/collector runs on instead of raw host arrays
+
+Entry points: ``run_out_of_core(..., memory_budget_bytes=...,
+disk_dir=..., eviction=...)`` and the CLI flags ``--disk-dir`` /
+``--memory-budget-bytes`` / ``--eviction``.
+"""
+from repro.storage.pager import EVICTION_POLICIES, BufferPool, Page
+from repro.storage.spillfile import SpillDir, SpillSlot
+from repro.storage.tiered import TieredStore
+
+__all__ = ["EVICTION_POLICIES", "BufferPool", "Page", "SpillDir",
+           "SpillSlot", "TieredStore"]

@@ -1,0 +1,283 @@
+"""Page-granular buffer cache (the Hyracks buffer-cache analogue).
+
+Pregelix's graceful out-of-core story rests on every operator reading and
+writing relations THROUGH a buffer cache, so the same physical plans run
+whether the working set fits in memory or not (paper Sections 2.3/5.4).
+This module is that layer for the TPU-adapted hierarchy: a ``BufferPool``
+holds fixed-key ``Page`` objects (one page = one super-partition slice of
+one relation, or one run-structured inbox chunk) under a configurable
+DRAM byte budget, evicting to mmap-backed spill files
+(``storage.spillfile``) when the budget is exceeded and faulting pages
+back in on access.
+
+Eviction policies (``policy=``):
+
+* ``"lru"``   — classic least-recently-used. Right when the working set
+  fits or accesses have temporal locality.
+* ``"mru"``   — evict the MOST recently used unpinned page. The OOC
+  driver's access pattern is a CYCLIC SEQUENTIAL SCAN (super-partitions
+  0..n_sp-1, every superstep): under LRU a cache smaller than the scan
+  re-faults every page every cycle (hit rate 0), while MRU pins down a
+  stable prefix of the cycle and converges to a hit rate of
+  budget/working-set — the classic sequential-flooding fix, tuned to the
+  superstep's cyclic pattern (GraphH's hot-data cache makes the same
+  observation, arXiv 1705.05595).
+
+Pages are PINNED while a pipeline slot is in flight (the dispatcher pins
+a super-partition's pages at upload, the collector unpins at commit);
+pinned pages are never eviction victims, so the budget must cover the
+pinned working set — the pool raises with the shortfall when it cannot.
+Dirty pages write back lazily: only on eviction, ``flush()`` (checkpoint
+barrier) or shape-changing replacement, and clean pages are dropped
+without any I/O.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Optional
+
+import numpy as np
+
+from repro.storage.spillfile import SpillDir
+
+EVICTION_POLICIES = ("lru", "mru")
+
+
+class Page:
+    """One cached block: resident numpy data or a spill-file residue."""
+
+    __slots__ = ("key", "data", "nbytes", "dirty", "pins", "immutable",
+                 "slot")
+
+    def __init__(self, key, data: Optional[np.ndarray], *,
+                 dirty: bool, immutable: bool = False, slot=None):
+        self.key = key
+        self.data = data
+        self.nbytes = int(data.nbytes) if data is not None else 0
+        self.dirty = dirty
+        self.pins = 0
+        self.immutable = immutable
+        self.slot = slot
+
+    @property
+    def resident(self) -> bool:
+        return self.data is not None
+
+
+def _own(arr: np.ndarray) -> np.ndarray:
+    """Contiguous array that OWNS its buffer: a page must not keep a view
+    alive into a larger caller array (that would defeat eviction)."""
+    a = np.ascontiguousarray(arr)
+    if a.base is not None:
+        a = a.copy()
+    return a
+
+
+class BufferPool:
+    """Budgeted page cache with pluggable eviction and lazy write-back.
+
+    ``budget_bytes=None`` disables eviction (pure-DRAM tier: every page
+    stays resident; hit/miss statistics still flow). A byte budget
+    requires a ``spill`` directory to evict into.
+    """
+
+    def __init__(self, budget_bytes: Optional[int] = None, *,
+                 policy: str = "lru", spill: Optional[SpillDir] = None):
+        if policy not in EVICTION_POLICIES:
+            raise ValueError(f"policy must be one of {EVICTION_POLICIES}, "
+                             f"got {policy!r}")
+        if budget_bytes is not None and spill is None:
+            raise ValueError(
+                "a DRAM byte budget needs a spill directory to evict into "
+                "(pass disk_dir=...)")
+        self.budget = int(budget_bytes) if budget_bytes is not None else None
+        self.policy = policy
+        self.spill = spill
+        self._pages: dict = {}
+        self._order: OrderedDict = OrderedDict()   # residency, LRU->MRU
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.resident_bytes = 0
+        self.peak_resident_bytes = 0
+        self.spill_read_bytes = 0
+        self.spill_write_bytes = 0
+
+    # ---- internals ---------------------------------------------------
+    def _account(self, delta: int):
+        self.resident_bytes += delta
+        if self.resident_bytes > self.peak_resident_bytes:
+            self.peak_resident_bytes = self.resident_bytes
+
+    def _touch(self, key):
+        if key in self._order:
+            self._order.move_to_end(key)
+
+    def _victim(self) -> Optional[Page]:
+        keys = (self._order if self.policy == "lru"
+                else reversed(self._order))
+        for k in keys:
+            page = self._pages[k]
+            if page.pins == 0:
+                return page
+        return None
+
+    def _evict(self, page: Page):
+        if page.dirty:
+            self._writeback(page)
+        self._order.pop(page.key, None)
+        self._account(-page.nbytes)
+        page.data = None
+        self.evictions += 1
+
+    def _writeback(self, page: Page):
+        if page.slot is None:
+            page.slot = self.spill.slot_for(page.key)
+        page.slot.store(page.data)
+        self.spill_write_bytes += page.nbytes
+        page.dirty = False
+
+    def _ensure_room(self, nbytes: int):
+        if self.budget is None:
+            return
+        while self.resident_bytes + nbytes > self.budget:
+            victim = self._victim()
+            if victim is None:
+                pinned = sum(p.nbytes for p in self._pages.values()
+                             if p.resident and p.pins > 0)
+                if nbytes > self.budget:
+                    raise RuntimeError(
+                        f"buffer-cache budget of {self.budget} bytes is "
+                        f"smaller than a single page ({nbytes} bytes — "
+                        f"one super-partition slice of one relation); "
+                        f"raise memory_budget_bytes at least that far")
+                raise RuntimeError(
+                    f"buffer-cache budget of {self.budget} bytes cannot "
+                    f"hold the pinned working set ({pinned} bytes pinned, "
+                    f"{nbytes} more requested); raise "
+                    f"memory_budget_bytes or lower prefetch_depth")
+            self._evict(victim)
+
+    def _insert_resident(self, page: Page):
+        self._ensure_room(page.nbytes)
+        self._account(page.nbytes)
+        self._order[page.key] = None
+        self._order.move_to_end(page.key)
+
+    # ---- public API --------------------------------------------------
+    def put(self, key, arr: np.ndarray, *, dirty: bool = True,
+            immutable: bool = False):
+        """Insert or replace a page. ``dirty=True`` (default) defers the
+        spill write until eviction/flush; ``immutable=True`` marks the
+        page's spill file safe to hard-link (checkpoints)."""
+        arr = _own(np.asarray(arr))
+        old = self._pages.get(key)
+        pins = 0
+        if old is not None:
+            if old.resident:
+                self._order.pop(key, None)
+                self._account(-old.nbytes)
+            slot = old.slot
+            pins = old.pins    # replacement keeps the caller's pins
+        else:
+            slot = None
+        page = Page(key, arr, dirty=dirty, immutable=immutable, slot=slot)
+        page.pins = pins
+        if not dirty and slot is None and self.spill is not None:
+            # caller asserts the data is already durable; without a file
+            # backing it an eviction would lose it, so keep it dirty
+            page.dirty = True
+        self._pages[key] = page
+        self._insert_resident(page)
+        return page
+
+    def adopt(self, key, slot, nbytes: int, *, immutable: bool = False):
+        """Install a NON-RESIDENT page backed by an existing spill file
+        (the resume-from-checkpoint path): no bytes enter DRAM until the
+        first ``get`` faults it in."""
+        page = Page(key, None, dirty=False, immutable=immutable,
+                    slot=slot)
+        page.nbytes = int(nbytes)
+        self._pages[key] = page
+        return page
+
+    def get(self, key) -> np.ndarray:
+        """Fetch a page's data, faulting it in from its spill file if it
+        was evicted. The returned array is the CACHED buffer — callers
+        that mutate it must call ``mark_dirty``."""
+        page = self._pages[key]
+        if page.resident:
+            self.hits += 1
+            self._touch(key)
+            return page.data
+        self.misses += 1
+        self._ensure_room(page.nbytes)
+        page.data = page.slot.load()
+        page.nbytes = int(page.data.nbytes)
+        self.spill_read_bytes += page.nbytes
+        self._insert_resident(page)
+        return page.data
+
+    def __contains__(self, key) -> bool:
+        return key in self._pages
+
+    def keys(self):
+        return list(self._pages.keys())
+
+    def page(self, key) -> Page:
+        return self._pages[key]
+
+    def mark_dirty(self, key):
+        self._pages[key].dirty = True
+
+    def pin(self, key):
+        """Pin (faulting in if needed): the page cannot be evicted until
+        the matching ``unpin``. Pins nest."""
+        self.get(key)
+        self._pages[key].pins += 1
+
+    def unpin(self, key):
+        page = self._pages[key]
+        if page.pins <= 0:
+            raise RuntimeError(f"unpin of unpinned page {key!r}")
+        page.pins -= 1
+
+    def delete(self, key):
+        page = self._pages.pop(key, None)
+        if page is None:
+            return
+        if page.resident:
+            self._order.pop(key, None)
+            self._account(-page.nbytes)
+        if page.slot is not None:
+            page.slot.delete()
+
+    def flush(self):
+        """Write back every dirty page (no evictions). The pool must have
+        a spill directory; this is the checkpoint barrier."""
+        if self.spill is None:
+            return
+        for page in self._pages.values():
+            if page.resident and page.dirty:
+                self._writeback(page)
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {
+            "hits": self.hits, "misses": self.misses,
+            "hit_rate": self.hits / total if total else 1.0,
+            "evictions": self.evictions,
+            "resident_bytes": self.resident_bytes,
+            "peak_resident_bytes": self.peak_resident_bytes,
+            "spill_read_bytes": self.spill_read_bytes,
+            "spill_write_bytes": self.spill_write_bytes,
+        }
+
+    def close(self, *, delete_files: bool = True):
+        for key in list(self._pages):
+            page = self._pages.pop(key)
+            if page.resident:
+                self._order.pop(key, None)
+                self._account(-page.nbytes)
+            if delete_files and page.slot is not None:
+                page.slot.delete()

@@ -1,0 +1,103 @@
+"""mmap-backed on-disk page layouts (the spill tier under the pager).
+
+Each page spills to its own ``.npy`` file written through
+``numpy.lib.format.open_memmap`` — the array bytes land contiguously
+after the npy header, so a page write-back or fault-in is one sequential
+I/O pass (GraphD's discipline: out-of-core graph state must stream, not
+seek; arXiv 1601.05590). The Vertex relation slices and the
+run-structured host inbox (the ``(P_dst, P_src, C)`` run buffers of
+``core/ooc.py``) both serialize contiguously, which is what makes inbox
+spill and reload sequential.
+
+Writes are ATOMIC: data goes to a temp file in the same directory and is
+``os.replace``d over the page file. That makes hard links safe in both
+directions — a checkpoint can ``os.link`` a page file instead of copying
+it (``export_to``) and a resume can ``os.link`` checkpoint pages into a
+new spill directory (``adopt``): a later write-back replaces the
+directory entry rather than scribbling on the shared inode, so the
+checkpoint stays immutable for free.
+"""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+from pathlib import Path
+
+import numpy as np
+
+_SAFE = re.compile(r"[^A-Za-z0-9_.-]+")
+
+
+def _key_filename(key) -> str:
+    parts = key if isinstance(key, tuple) else (key,)
+    return _SAFE.sub("-", "_".join(str(p) for p in parts)) + ".npy"
+
+
+class SpillSlot:
+    """One page's on-disk home: a single ``.npy`` file."""
+
+    def __init__(self, path):
+        self.path = Path(path)
+
+    def exists(self) -> bool:
+        return self.path.exists()
+
+    def store(self, arr: np.ndarray):
+        """Sequential, atomic write-back of the whole page."""
+        tmp = self.path.with_name("." + self.path.name + ".tmp")
+        mm = np.lib.format.open_memmap(tmp, mode="w+", dtype=arr.dtype,
+                                       shape=arr.shape)
+        mm[...] = arr
+        mm.flush()
+        del mm
+        os.replace(tmp, self.path)
+
+    def load(self) -> np.ndarray:
+        """Fault the page back in (one sequential read of the mmap)."""
+        mm = np.load(self.path, mmap_mode="r")
+        out = np.array(mm)
+        del mm
+        return out
+
+    def delete(self):
+        try:
+            self.path.unlink()
+        except FileNotFoundError:
+            pass
+
+    def export_to(self, dst, *, allow_link: bool = True):
+        """Publish this page file at ``dst`` without a DRAM round-trip:
+        hard-link when the filesystem allows it, else a kernel-side file
+        copy. Atomic write-backs make the link safe (see module doc)."""
+        dst = Path(dst)
+        if allow_link:
+            try:
+                os.link(self.path, dst)
+                return
+            except OSError:
+                pass
+        shutil.copyfile(self.path, dst)
+
+    def adopt(self, src, *, allow_link: bool = True):
+        """Populate this slot from an existing page file (resume path)."""
+        src = Path(src)
+        self.delete()
+        if allow_link:
+            try:
+                os.link(src, self.path)
+                return
+            except OSError:
+                pass
+        shutil.copyfile(src, self.path)
+
+
+class SpillDir:
+    """A directory of page files, one slot per page key."""
+
+    def __init__(self, root):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    def slot_for(self, key) -> SpillSlot:
+        return SpillSlot(self.root / _key_filename(key))

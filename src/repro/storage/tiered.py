@@ -1,0 +1,151 @@
+"""TieredStore — the HBM ↔ DRAM ↔ disk facade the OOC driver runs on.
+
+``core/ooc.py``'s dispatcher/collector used to read and write raw NumPy
+host arrays; this facade puts the buffer cache (``storage.pager``)
+between them and the spill tier (``storage.spillfile``), extending the
+memory hierarchy by one level:
+
+    prefetch:  disk ──(page fault)──▶ DRAM ──(jax.device_put)──▶ HBM
+    commit:    HBM ──(np.asarray)──▶ DRAM ──(lazy write-back)──▶ disk
+
+Relations are chunked one page per (relation, super-partition) — exactly
+the granularity the streaming executor touches — so the pipeline's
+existing overlap discipline hides the disk leg the same way it hides the
+host link. Dynamic pages (run-structured inbox generations, collected
+out-blocks, mutation blocks) share the same pool and budget via the raw
+``put_page``/``get_page`` API.
+
+With ``disk_dir=None`` and no budget the store degenerates to the pure
+DRAM tier (every page stays resident; zero I/O) — the disk tier is a
+strictly additive layer, which is what makes the disk-vs-DRAM parity
+suite bit-for-bit (``tests/test_storage.py``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.storage.pager import BufferPool
+from repro.storage.spillfile import SpillDir
+
+
+class TieredStore:
+    """Named, super-partition-chunked relations over a ``BufferPool``."""
+
+    def __init__(self, *, n_sp: int, budget_bytes: Optional[int] = None,
+                 disk_dir: Optional[str] = None, policy: str = "lru"):
+        self.n_sp = int(n_sp)
+        self.spill = SpillDir(disk_dir) if disk_dir else None
+        self.pool = BufferPool(budget_bytes, policy=policy,
+                               spill=self.spill)
+        self._relations: dict = {}   # name -> per-chunk row counts
+
+    @property
+    def spilling(self) -> bool:
+        return self.spill is not None
+
+    # ---- relations (chunked on the leading partition axis) -----------
+    def register(self, name: str, arr: np.ndarray):
+        """Split a (P, ...) relation into n_sp pages. The chunks copy out
+        of ``arr`` so the source can be freed immediately."""
+        arr = np.asarray(arr)
+        P = arr.shape[0]
+        assert P % self.n_sp == 0, (name, P, self.n_sp)
+        sp = P // self.n_sp
+        self._relations[name] = sp
+        for s in range(self.n_sp):
+            self.pool.put((name, s), arr[s * sp:(s + 1) * sp])
+
+    def read(self, name: str, s: int) -> np.ndarray:
+        """Chunk ``s`` of a relation (page fault from disk on a miss).
+        The array is the cached buffer — treat it as read-only."""
+        return self.pool.get((name, s))
+
+    def write(self, name: str, s: int, arr: np.ndarray):
+        """Full-chunk replacement (the ``inplace`` write-back policy):
+        dirties the page; the disk write happens lazily on eviction."""
+        self.pool.put((name, s), arr)
+
+    def write_rows(self, name: str, s: int, mask: np.ndarray,
+                   rows: np.ndarray):
+        """Scatter-merge changed rows into a chunk (the ``delta`` /
+        LSM-deferred-merge policy). A chunk with no changed rows is not
+        even dirtied — a converged super-partition costs zero disk
+        write-back."""
+        if not mask.any():
+            return
+        page = self.pool.get((name, s))
+        page[mask] = rows
+        self.pool.mark_dirty((name, s))
+
+    def pin(self, name: str, s: int):
+        self.pool.pin((name, s))
+
+    def unpin(self, name: str, s: int):
+        self.pool.unpin((name, s))
+
+    def gather(self, name: str) -> np.ndarray:
+        """Reassemble a full relation (the final HDFS-write analogue)."""
+        return np.concatenate([self.read(name, s)
+                               for s in range(self.n_sp)], axis=0)
+
+    # ---- raw page KV (inbox generations, out/mutation blocks) --------
+    def put_page(self, key, arr: np.ndarray, *, immutable: bool = False):
+        self.pool.put(key, arr, immutable=immutable)
+
+    def get_page(self, key) -> np.ndarray:
+        return self.pool.get(key)
+
+    def delete_page(self, key):
+        self.pool.delete(key)
+
+    # ---- statistics / checkpoint surface -----------------------------
+    def stats(self) -> dict:
+        return self.pool.stats()
+
+    def page_keys(self):
+        return self.pool.keys()
+
+    def flush(self):
+        self.pool.flush()
+
+    def export_page(self, key, dst_path):
+        """Publish one page at ``dst_path`` for a checkpoint. Disk-tier
+        pages move at the FILE level (hard-link for immutable pages such
+        as inbox generations, kernel copy otherwise) — no DRAM
+        re-serialization; DRAM-tier pages fall back to ``np.save``."""
+        page = self.pool.page(key)
+        if self.spilling:
+            if page.dirty or page.slot is None or not page.slot.exists():
+                if page.slot is None:
+                    page.slot = self.spill.slot_for(key)
+                page.slot.store(self.pool.get(key))
+                self.pool.spill_write_bytes += page.nbytes
+                page.dirty = False
+            page.slot.export_to(dst_path, allow_link=page.immutable)
+        else:
+            np.save(dst_path, self.pool.get(key))
+
+    def adopt_page(self, key, src_path, *, relation: Optional[str] = None,
+                   immutable: bool = False):
+        """Install a checkpointed page file as page ``key`` (resume
+        path). Disk tier: hard-link/copy the file and leave the page
+        non-resident (the run faults it in on first touch — resuming
+        never streams the whole job through DRAM); DRAM tier: load it."""
+        if self.spilling:
+            slot = self.spill.slot_for(key)
+            slot.adopt(src_path)
+            mm = np.load(slot.path, mmap_mode="r")
+            nbytes, rows = int(mm.nbytes), mm.shape[0]
+            del mm
+            self.pool.adopt(key, slot, nbytes, immutable=immutable)
+        else:
+            arr = np.load(src_path)
+            rows = arr.shape[0]
+            self.pool.put(key, arr)
+        if relation is not None:
+            self._relations[relation] = rows
+
+    def close(self, *, delete_files: bool = True):
+        self.pool.close(delete_files=delete_files)

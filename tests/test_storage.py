@@ -1,0 +1,519 @@
+"""Disk-tier storage subsystem suite.
+
+Holds the new HBM ↔ DRAM ↔ disk hierarchy to the same standard as the
+rest of the OOC path: the buffer cache (``storage/pager``) must provably
+respect its DRAM byte budget, disk-tier runs must match the DRAM-only
+path BIT-FOR-BIT (PageRank / SSSP / CC × eviction policy × streaming
+on/off), regrows must work under memory pressure, the host mutation
+inbox must route inserts across super-partitions exactly like the
+in-memory exchange, and spill-file checkpoints must resume to identical
+results.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ComputeOut, EngineConfig, PhysicalPlan,
+                        VertexProgram, gather_values, load_graph,
+                        run_host)
+from repro.core.ooc import run_out_of_core
+from repro.graph import SSSP, ConnectedComponents, PageRank, PathMerge, \
+    chain_graph, rmat_graph
+from repro.planner.cost import GraphStats, Observation, estimate
+from repro.storage import BufferPool, SpillDir, TieredStore
+
+N = 220
+EDGES = rmat_graph(N, 1200, seed=7)
+ALGOS = {
+    "pagerank": (lambda: PageRank(N, iterations=6), 2),
+    "sssp": (lambda: SSSP(source=3), 1),
+    "cc": (lambda: ConnectedComponents(), 1),
+}
+_DRAM_REF = {}   # algo -> gathered values of the DRAM-only OOC run
+
+
+# a DRAM budget well under the ~18 KiB test working set (relations +
+# inbox generations): every spilling test below must actually page
+_BUDGET = 16 * 1024
+
+
+def _dram_ref(algo: str) -> np.ndarray:
+    if algo not in _DRAM_REF:
+        mk, vd = ALGOS[algo]
+        prog = mk()
+        vert = load_graph(EDGES, N, P=4, value_dims=vd)
+        res = run_out_of_core(vert, prog, prog.suggested_plan,
+                              budget_partitions=2, max_supersteps=30)
+        _DRAM_REF[algo] = gather_values(res.vertex, N)
+    return _DRAM_REF[algo]
+
+
+# ---------------------------------------------------------------- pager
+
+def _pg(i, kb=4):
+    return np.full((kb * 256,), i, np.float32)   # kb KiB per page
+
+
+def test_pool_budget_evicts_and_faults_back(tmp_path):
+    pool = BufferPool(2 * _pg(0).nbytes, policy="lru",
+                      spill=SpillDir(tmp_path))
+    for i in range(3):
+        pool.put(i, _pg(i))
+    st = pool.stats()
+    assert st["evictions"] >= 1
+    assert st["resident_bytes"] <= pool.budget
+    assert st["peak_resident_bytes"] <= pool.budget
+    # evicted page faults back in, bit-for-bit
+    assert np.array_equal(pool.get(0), _pg(0))
+    assert pool.stats()["misses"] >= 1
+    assert pool.stats()["spill_read_bytes"] > 0
+
+
+def test_pool_lru_evicts_cold_mru_evicts_hot(tmp_path):
+    for policy, victim in (("lru", 0), ("mru", 1)):
+        pool = BufferPool(2 * _pg(0).nbytes, policy=policy,
+                          spill=SpillDir(tmp_path / policy))
+        pool.put(0, _pg(0))
+        pool.put(1, _pg(1))
+        pool.get(0), pool.get(1)       # recency order: 0 older than 1
+        pool.put(2, _pg(2))
+        assert not pool.page(victim).resident, policy
+        assert pool.page(1 - victim).resident, policy
+
+
+def test_mru_survives_cyclic_scan_lru_floods(tmp_path):
+    """The superstep access pattern: cyclic sequential scan over a
+    working set larger than the budget. LRU's hit rate collapses to 0;
+    MRU retains a stable prefix and keeps hitting."""
+    hits = {}
+    for policy in ("lru", "mru"):
+        pool = BufferPool(2 * _pg(0).nbytes, policy=policy,
+                          spill=SpillDir(tmp_path / policy))
+        for i in range(4):
+            pool.put(i, _pg(i), dirty=True)
+        pool.hits = pool.misses = 0
+        for _ in range(3):
+            for i in range(4):
+                pool.get(i)
+        hits[policy] = pool.hits
+    assert hits["lru"] == 0
+    assert hits["mru"] > 0
+
+
+def test_pool_pinned_pages_never_evicted(tmp_path):
+    pool = BufferPool(2 * _pg(0).nbytes, policy="lru",
+                      spill=SpillDir(tmp_path))
+    pool.put(0, _pg(0))
+    pool.put(1, _pg(1))
+    pool.pin(0)
+    pool.put(2, _pg(2))          # must evict 1, not pinned 0
+    assert pool.page(0).resident
+    pool.pin(1)                  # faults 1 back, evicting 2
+    with pytest.raises(RuntimeError, match="pinned working set"):
+        pool.pin(2)              # both budgeted slots are pinned
+    pool.unpin(0)
+    pool.unpin(1)
+
+
+def test_pool_budget_requires_spill_dir():
+    with pytest.raises(ValueError, match="spill"):
+        BufferPool(1024, policy="lru", spill=None)
+    with pytest.raises(ValueError, match="policy"):
+        BufferPool(None, policy="fifo")
+
+
+def test_dirty_writeback_roundtrip_and_replacement_keeps_pins(tmp_path):
+    pool = BufferPool(None, policy="lru", spill=SpillDir(tmp_path))
+    pool.put("a", _pg(1))
+    pool.pin("a")
+    pool.put("a", _pg(2))        # full replacement under a pin
+    pool.unpin("a")              # must not raise: pins survive put()
+    pool.flush()
+    pool.page("a").data = None   # simulate eviction
+    assert np.array_equal(pool.get("a"), _pg(2))
+
+
+def test_spillslot_hardlink_export_is_immutable(tmp_path):
+    """Atomic page write-back (tmp + os.replace) makes hard-linked
+    checkpoint exports safe: rewriting the page must not change the
+    exported file."""
+    sd = SpillDir(tmp_path / "run")
+    slot = sd.slot_for(("page", 0))
+    slot.store(_pg(1))
+    out = tmp_path / "ckpt.npy"
+    slot.export_to(out, allow_link=True)
+    slot.store(_pg(9))           # atomic replace breaks the link
+    assert np.array_equal(np.load(out), _pg(1))
+    assert np.array_equal(slot.load(), _pg(9))
+
+
+def test_tiered_store_roundtrip_under_pressure(tmp_path):
+    rng = np.random.default_rng(0)
+    arrs = {k: rng.random((8, 64)).astype(np.float32) for k in "abc"}
+    store = TieredStore(n_sp=4, budget_bytes=3000, disk_dir=tmp_path,
+                        policy="mru")
+    for k, a in arrs.items():
+        store.register(k, a)
+    # full-chunk write + row-level delta write
+    store.write("a", 1, np.ones((2, 64), np.float32))
+    arrs["a"][2:4] = np.ones((2, 64))
+    mask = np.zeros((2,), bool)
+    mask[0] = True
+    store.write_rows("b", 0, mask, np.full((1, 64), 7, np.float32))
+    arrs["b"][0] = 7
+    for k in arrs:
+        assert np.array_equal(store.gather(k), arrs[k]), k
+    assert store.stats()["spill_write_bytes"] > 0
+    assert store.stats()["peak_resident_bytes"] <= 3000
+    store.close()
+
+
+# -------------------------------------------- disk-vs-DRAM parity suite
+
+@pytest.mark.parametrize("algo", list(ALGOS))
+@pytest.mark.parametrize("policy", ["lru", "mru"])
+@pytest.mark.parametrize("streaming", [False, True])
+def test_disk_tier_parity_bit_for_bit(algo, policy, streaming, tmp_path):
+    """The disk tier only moves bytes: spilling through the buffer cache
+    under a budget that forces page-outs must reproduce the DRAM-only
+    run exactly, for every eviction policy and both executors."""
+    mk, vd = ALGOS[algo]
+    prog = mk()
+    vert = load_graph(EDGES, N, P=4, value_dims=vd)
+    budget = _BUDGET
+    res = run_out_of_core(vert, prog, prog.suggested_plan,
+                          budget_partitions=2, max_supersteps=30,
+                          stream=streaming, memory_budget_bytes=budget,
+                          disk_dir=tmp_path, eviction=policy)
+    assert np.array_equal(gather_values(res.vertex, N), _dram_ref(algo))
+    recs = [s for s in res.stats if "wall_s" in s]
+    assert recs and all(s["spill"] for s in recs)
+    # the budget actually bit: pages spilled and faulted back
+    assert sum(s["spill_write_bytes"] for s in recs) > 0
+    assert all(0.0 <= s["cache_hit_rate"] <= 1.0 for s in recs)
+
+
+def test_pager_respects_memory_budget():
+    """The acceptance bar: the pager's peak resident bytes never exceed
+    memory_budget_bytes, asserted across every superstep of a spilling
+    run."""
+    import tempfile
+    prog = PageRank(N, iterations=6)
+    vert = load_graph(EDGES, N, P=4, value_dims=2)
+    budget = _BUDGET
+    with tempfile.TemporaryDirectory() as td:
+        res = run_out_of_core(vert, prog, prog.suggested_plan,
+                              budget_partitions=2, max_supersteps=10,
+                              memory_budget_bytes=budget, disk_dir=td)
+    recs = [s for s in res.stats if "pager_peak_bytes" in s]
+    assert recs
+    assert all(s["pager_peak_bytes"] <= budget for s in recs)
+    assert any(s["spill_read_bytes"] > 0 for s in recs)
+
+
+def test_regrow_with_spill_mid_run(tmp_path):
+    """A bucket overflow while the store is spilling: the deferred
+    regrow must end-pad the already-collected out pages THROUGH the
+    pager and still match the in-memory reference exactly."""
+    prog = SSSP(source=3)
+    vert = load_graph(EDGES, N, P=4, value_dims=1)
+    budget = _BUDGET
+    ec = EngineConfig(n_parts=4, bucket_cap=2,
+                      frontier_cap=vert.capacity + 8)
+    res = run_out_of_core(vert, prog, prog.suggested_plan,
+                          budget_partitions=2, max_supersteps=30, ec=ec,
+                          memory_budget_bytes=budget, disk_dir=tmp_path,
+                          eviction="mru")
+    regrows = [s for s in res.stats if s.get("event") == "regrow"]
+    assert regrows and regrows[-1]["bucket_cap"] > 2
+    ref = run_host(load_graph(EDGES, N, P=4, value_dims=1), prog,
+                   prog.suggested_plan, max_supersteps=30)
+    assert np.array_equal(gather_values(res.vertex, N),
+                          gather_values(ref.vertex, N))
+    assert any(s.get("spill_write_bytes", 0) > 0 for s in res.stats)
+
+
+# ------------------------------------------------- host mutation inbox
+
+class CrossInsert(VertexProgram):
+    """Every vertex proposes, at superstep 0, an insert targeting
+    (vid + shift) mod n — under hash partitioning always a DIFFERENT
+    partition, and (for shift >= budget) frequently a different
+    SUPER-partition. Values are small integers, so the resolve sum is
+    float-exact and parity can be bit-for-bit."""
+
+    value_dims = 1
+    msg_dims = 1
+    agg_dims = 1
+    combine_op = "sum"
+    mutates = True
+    suggested_plan = PhysicalPlan(join="full_outer", groupby="scatter")
+
+    def __init__(self, n: int, shift: int = 1):
+        self.n = n
+        self.shift = shift
+
+    def init_value(self, vid, out_degree, gs):
+        return jnp.where(vid >= 0, vid, 0).astype(jnp.float32)[..., None]
+
+    def compute(self, vid, value, msg, has_msg, active, gs):
+        first = gs.superstep == 0
+        tgt = jnp.where(first & (vid >= 0),
+                        (vid + self.shift) % self.n, -1)
+        done = gs.superstep >= 1
+        return ComputeOut(
+            value=value,
+            halt=jnp.broadcast_to(done | ~first, vid.shape),
+            send_gate=jnp.zeros(vid.shape, bool),
+            aggregate=jnp.zeros(vid.shape + (1,)),
+            insert_vid=tgt,
+            insert_value=jnp.where(vid >= 0, vid, 0)
+            .astype(jnp.float32)[..., None] + 1000.0)
+
+    def send(self, src_vid, src_value, edge_val, dst_vid, gs):
+        return jnp.zeros_like(src_value[..., 0:1])
+
+
+def _cross_insert_ref(n, shift):
+    prog = CrossInsert(n, shift)
+    vert = load_graph(EDGES, n, P=4, value_dims=1)
+    res = run_host(vert, prog, prog.suggested_plan, max_supersteps=5)
+    return gather_values(res.vertex, n)
+
+
+@pytest.mark.parametrize("streaming", [False, True])
+def test_mutation_inbox_spans_super_partitions(streaming):
+    """Inserts proposed in one super-partition must land in another:
+    the host mutation inbox must reproduce the in-memory exchange +
+    resolve exactly (the seed's in-device route only spanned the
+    resident super-partition)."""
+    n, shift = N, 3
+    ref = _cross_insert_ref(n, shift)
+    # sanity: the insert really overwrote values cross-partition
+    assert not np.array_equal(ref[:, 0], np.arange(n, dtype=np.float32))
+    prog = CrossInsert(n, shift)
+    vert = load_graph(EDGES, n, P=4, value_dims=1)
+    res = run_out_of_core(vert, prog, prog.suggested_plan,
+                          budget_partitions=2, max_supersteps=5,
+                          stream=streaming)
+    assert np.array_equal(gather_values(res.vertex, n), ref)
+    recs = [s for s in res.stats if "mutation_rate" in s]
+    assert recs and recs[0]["mutation_rate"] > 0
+
+
+def test_mutation_inbox_spills_through_pager(tmp_path):
+    n, shift = N, 3
+    ref = _cross_insert_ref(n, shift)
+    prog = CrossInsert(n, shift)
+    vert = load_graph(EDGES, n, P=4, value_dims=1)
+    budget = _BUDGET
+    res = run_out_of_core(vert, prog, prog.suggested_plan,
+                          budget_partitions=2, max_supersteps=5,
+                          memory_budget_bytes=budget, disk_dir=tmp_path)
+    assert np.array_equal(gather_values(res.vertex, n), ref)
+
+
+class Lazarus(VertexProgram):
+    """Deletes every odd vertex at superstep 0, then messages the dead:
+    Pregel semantics re-CREATE a vertex that receives a message
+    (superstep.resurrect), deriving its vid from the slot address —
+    which out-of-core needs the block's GLOBAL partition offset for
+    (under hash partitioning with P=2 every odd vid lives in partition
+    1, i.e. entirely inside the second super-partition)."""
+
+    value_dims = 1
+    msg_dims = 1
+    agg_dims = 1
+    combine_op = "sum"
+    mutates = True
+    suggested_plan = PhysicalPlan(join="full_outer", groupby="scatter")
+
+    def compute(self, vid, value, msg, has_msg, active, gs):
+        first = gs.superstep == 0
+        second = gs.superstep == 1
+        new_val = jnp.where(has_msg, msg[..., 0], value[..., 0])
+        return ComputeOut(
+            value=new_val[..., None],
+            halt=jnp.broadcast_to(gs.superstep >= 2, vid.shape),
+            send_gate=second & (vid % 2 == 0) & (vid >= 0),
+            aggregate=jnp.zeros(vid.shape + (1,)),
+            delete_self=first & (vid % 2 == 1))
+
+    def send(self, src_vid, src_value, edge_val, dst_vid, gs):
+        return (src_vid + 100.0)[..., None]
+
+
+@pytest.mark.parametrize("streaming", [False, True])
+def test_resurrect_in_later_super_partition_gets_global_vid(streaming):
+    """A message to a deleted vid in super-partition 1 must re-create it
+    with the GLOBAL vid (slot * P + global_partition), identical to the
+    in-memory run — the resident block's partitions are not 0..sp-1."""
+    n = 16
+    edges = chain_graph(n)
+    prog = Lazarus()
+    ref = run_host(load_graph(edges, n, P=2, value_dims=1), prog,
+                   prog.suggested_plan, max_supersteps=6)
+    res = run_out_of_core(load_graph(edges, n, P=2, value_dims=1), prog,
+                          prog.suggested_plan, budget_partitions=1,
+                          max_supersteps=6, stream=streaming)
+    assert np.array_equal(np.asarray(res.vertex.vid),
+                          np.asarray(ref.vertex.vid))
+    assert np.array_equal(gather_values(res.vertex, n),
+                          gather_values(ref.vertex, n))
+    # the resurrected odd vertices carry their sender's tag: i -> i+1
+    vals = gather_values(res.vertex, n)[:, 0]
+    assert vals[3] == 2 + 100 and vals[7] == 6 + 100
+
+
+def test_delete_only_mutations_match_in_memory():
+    """PathMerge (delete + resolve, no inserts) out-of-core vs
+    run_host: deletions are partition-local and must stay exact."""
+    n = 32
+    edges = chain_graph(n)
+    pm = PathMerge(rounds=10)
+    ref = run_host(load_graph(edges, n, P=2, value_dims=2), pm,
+                   pm.suggested_plan, max_supersteps=12)
+    res = run_out_of_core(load_graph(edges, n, P=2, value_dims=2), pm,
+                          pm.suggested_plan, budget_partitions=1,
+                          max_supersteps=12)
+    assert np.array_equal(gather_values(res.vertex, n),
+                          gather_values(ref.vertex, n))
+    assert np.array_equal(np.asarray(res.vertex.vid),
+                          np.asarray(ref.vertex.vid))
+
+
+# ------------------------------------------------- spill checkpoints
+
+@pytest.mark.parametrize("disk", [False, True])
+def test_ooc_checkpoint_resume_matches_uninterrupted(disk, tmp_path):
+    """Checkpoint at a superstep boundary (file-level page export) and
+    resume directly from the spill directory — no VertexRel needed —
+    landing on the same final state bit-for-bit."""
+    prog = SSSP(source=3)
+    plan = prog.suggested_plan
+    kw = {}
+    if disk:
+        kw = dict(disk_dir=str(tmp_path / "spill1"))
+    vert = load_graph(EDGES, N, P=4, value_dims=1)
+    full = run_out_of_core(vert, prog, plan, budget_partitions=2,
+                           max_supersteps=30,
+                           checkpoint_every=2,
+                           checkpoint_dir=str(tmp_path / "ckpt"), **kw)
+    assert full.supersteps > 2
+    ck = tmp_path / "ckpt" / "ooc_000002"
+    assert (ck / "meta.json").exists()
+    assert (ck / "vid_0.npy").exists() and (ck / "inbox_dst_1.npy").exists()
+    kw2 = {}
+    if disk:
+        kw2 = dict(disk_dir=str(tmp_path / "spill2"))
+    res = run_out_of_core(None, prog, plan, budget_partitions=2,
+                          max_supersteps=30, resume_from=str(ck), **kw2)
+    assert res.supersteps == full.supersteps
+    assert np.array_equal(gather_values(res.vertex, N),
+                          gather_values(full.vertex, N))
+
+
+def test_resume_from_latest_marker(tmp_path):
+    prog = ConnectedComponents()
+    vert = load_graph(EDGES, N, P=4, value_dims=1)
+    full = run_out_of_core(vert, prog, prog.suggested_plan,
+                           budget_partitions=2, max_supersteps=30,
+                           checkpoint_every=1,
+                           checkpoint_dir=str(tmp_path))
+    # LATEST_OOC resolves to the final checkpoint: resuming is a no-op
+    # (the job halted) and returns the converged state
+    res = run_out_of_core(None, prog, prog.suggested_plan,
+                          budget_partitions=2, max_supersteps=30,
+                          resume_from=str(tmp_path))
+    assert res.supersteps == full.supersteps
+    assert np.array_equal(gather_values(res.vertex, N),
+                          gather_values(full.vertex, N))
+
+
+def test_resume_with_auto_plan_restores_checkpointed_plan(tmp_path):
+    """The checkpoint records the plan IN EFFECT (it produced the saved
+    inbox's run layout); a plan='auto' resume must restart from it —
+    not re-choose blind over a foreign inbox — and still converge to
+    the same answer (min-combine: exact regardless of later switches)."""
+    import json
+    prog = SSSP(source=3)
+    vert = load_graph(EDGES, N, P=4, value_dims=1)
+    full = run_out_of_core(vert, prog, "auto", budget_partitions=2,
+                           max_supersteps=30, checkpoint_every=2,
+                           checkpoint_dir=str(tmp_path))
+    ck = tmp_path / "ooc_000002"
+    meta = json.loads((ck / "meta.json").read_text())
+    assert meta["plan"] is not None and "connector" in meta["plan"]
+    res = run_out_of_core(None, prog, "auto", budget_partitions=2,
+                          max_supersteps=30, resume_from=str(ck))
+    assert np.array_equal(gather_values(res.vertex, N),
+                          gather_values(full.vertex, N))
+
+
+def test_resume_budget_partition_mismatch_raises(tmp_path):
+    prog = SSSP(source=3)
+    vert = load_graph(EDGES, N, P=4, value_dims=1)
+    run_out_of_core(vert, prog, prog.suggested_plan,
+                    budget_partitions=2, max_supersteps=4,
+                    checkpoint_every=2, checkpoint_dir=str(tmp_path))
+    with pytest.raises(ValueError, match="super-partition"):
+        run_out_of_core(None, prog, prog.suggested_plan,
+                        budget_partitions=1, max_supersteps=10,
+                        resume_from=str(tmp_path))
+
+
+# --------------------------------------------- planner: new cost axes
+
+_G = GraphStats(n_vertices=4096, n_edges=40960, n_partitions=8,
+                vertex_capacity=680, edge_capacity=6200)
+
+
+def test_combinability_drives_sender_combine_ranking():
+    """High measured combinability (many messages per distinct dst) must
+    improve sender-combine plans RELATIVE to uncombined ones — the
+    signal the adaptive controller now conditions the sender_combine
+    replan dimension on."""
+    sc = PhysicalPlan(sender_combine=True)
+    nosc = PhysicalPlan(sender_combine=False)
+    msgs = _G.n_edges
+
+    def ratio(comb):
+        obs = Observation(frontier_density=1.0, messages=msgs, ooc=True,
+                          combinability=comb)
+        return (estimate(sc, _G, obs).seconds() /
+                estimate(nosc, _G, obs).seconds())
+
+    assert ratio(16.0) < ratio(1.0)
+
+
+def test_mutation_rate_prices_host_inbox_traffic():
+    prog_plan = PhysicalPlan()
+    base = Observation(frontier_density=1.0, messages=100, ooc=True)
+    mut = dataclasses.replace(base, mutation_rate=0.5)
+    c0 = estimate(prog_plan, _G, base)
+    c1 = estimate(prog_plan, _G, mut)
+    assert "mutation_io" in c1.terms and "mutation_io" not in c0.terms
+    assert c1.seconds() > c0.seconds()
+
+
+def test_disk_axis_prices_spilling_and_storage_policy():
+    """Spilling adds a disk term scaled by the miss rate, and a
+    low-change-density delta plan writes fewer disk bytes than inplace —
+    what lets plan='auto' choose the storage policy per run on the disk
+    tier."""
+    plan_in = PhysicalPlan(storage="inplace")
+    plan_dl = PhysicalPlan(storage="delta")
+    dram = Observation(frontier_density=1.0, messages=100, ooc=True)
+    spill = dataclasses.replace(dram, spilling=True, hit_rate=0.3,
+                                change_density=0.05)
+    assert estimate(plan_in, _G, dram).disk_bytes == 0
+    c_in = estimate(plan_in, _G, spill)
+    c_dl = estimate(plan_dl, _G, spill)
+    assert c_in.disk_bytes > 0 and "disk_io" in c_in.terms
+    assert c_dl.disk_bytes < c_in.disk_bytes
+    # a worse hit rate means more disk seconds
+    worse = dataclasses.replace(spill, hit_rate=0.0)
+    assert estimate(plan_in, _G, worse).disk_seconds() > \
+        c_in.disk_seconds()
