@@ -208,6 +208,8 @@ def run_host(vert: VertexRel, program: VertexProgram,
                 mutation_cap=ec.mutation_cap,
                 sources=np.flatnonzero(ovf_delta > 0).tolist()).as_dict())
             recompiled = True
+            if controller is not None:
+                controller.note_shape_change()
             continue
         vert, msg, gs = vert2, msg2, gs2
         i += 1
@@ -248,6 +250,7 @@ def run_host(vert: VertexRel, program: VertexProgram,
                     frontier_cap=ec.frontier_cap).as_dict())
                 recompiled = True
                 switched = True
+                controller.note_shape_change()
         # adaptive frontier refit (left-outer plan): when the live set
         # collapses, shrink the frontier capacity so each superstep only
         # pays O(|frontier|) — one recompile, amortized across supersteps
@@ -262,6 +265,16 @@ def run_host(vert: VertexRel, program: VertexProgram,
                     i, "frontier-refit",
                     frontier_cap=ec.frontier_cap).as_dict())
                 recompiled = True
+                if controller is not None:
+                    controller.note_shape_change()
+        if controller is not None and not bool(gs.halt):
+            # periodic cost-model re-calibration (opt-in): refit the
+            # analytic constants after lowered shapes changed, at most
+            # once per AdaptiveConfig.recalibrate_every supersteps
+            recal = controller.maybe_recalibrate(program, i)
+            if recal is not None:
+                stats.append(coll.event(i, "recalibrate",
+                                        **recal).as_dict())
         if failure_injector is not None:
             failure_injector(i, vert, msg, gs)
         if checkpoint_every and i % checkpoint_every == 0 \

@@ -38,6 +38,45 @@ updated output (``superstep.jit_superstep``), so a pipeline slot costs
 one resident vertex block, not two. ``stream=False`` degenerates to the
 synchronous upload -> step -> block -> collect loop (a window of 1).
 
+BARRIER-FREE SUPERSTEP PIPELINE (``barrier_free=True``, the default with
+``stream=True``): PR 3/4 still paid two global stalls per superstep —
+the whole-inbox rebuild + mutation apply + GS fold ran serially between
+supersteps with the device idle, and (on the disk tier) page faults and
+dirty write-backs ran synchronously on the dispatcher/collector thread.
+Both are gone:
+
+* **Per-destination inbox-run readiness.** A destination super-partition
+  of superstep i+1 is dispatchable the moment all P source partitions of
+  superstep i have LANDED THEIR RUNS for it (their collected out-blocks)
+  — the run-width trim and the GS chain pin that moment to the last
+  collect, so what used to be a global barrier of serial work collapses
+  into a per-destination ``prepare`` step: rebuild ONLY destination q's
+  inbox chunk, apply ONLY q's mutation-inbox columns, then dispatch q —
+  while the device is already computing earlier destinations, the host
+  rolls the frontier forward by preparing the later ones. Per-superstep
+  serial work drops from O(inbox) to O(inbox / n_sp).
+* **Rolling fold.** The GS fold, vote-to-halt, write-back/combinability/
+  mutation measurements all commit per-destination at collect time (in
+  super-partition order for the float aggregate — bit-for-bit with the
+  synchronous loop); the executor only SYNCHRONIZES the frontier for
+  plan switches (the one-off run sort a merging switch needs is folded
+  into the next chunk builds), regrows (the deferred-overflow drain),
+  and checkpoints (which eagerly prepare the full generation so the
+  saved inbox is complete).
+* **Background page I/O** (``storage/io_engine.py``): with a disk tier,
+  ``io_threads`` worker threads own the disk legs — the dispatcher
+  announces the next dispatchable destination's pages (``readahead``,
+  bounded by ``readahead_pages``) so they fault in off the critical
+  path, and cold dirty pages drain in eviction order (coalesced) so
+  evictions find clean victims and never block on a synchronous write.
+
+The statistics stream records the per-superstep ``readiness_stall_s``
+(device-idle gap between a superstep's last collect and the next
+superstep's first dispatch — the quantity this mode minimizes) and the
+I/O engine's queue depth; ``benchmarks/out_of_core.py`` races
+barrier-free against the PR-4 barrier executor into
+``BENCH_pipeline.json``.
+
 Because results land asynchronously, the overflow/regrow protocol is
 DEFERRED: host state for a super-partition commits only when its result
 is collected clean. When a collected result reports overflow, the
@@ -47,7 +86,7 @@ ONLY the overflowed capacities (per-source ``GlobalState.overflow``
 counters), re-jits, end-pads the already-committed bucket blocks, and
 re-dispatches the redo set from retained host state. Float-sensitive
 reductions (the user aggregate) are folded in super-partition order at
-the superstep barrier, so streaming runs are bit-for-bit identical to
+the rolling fold, so streaming runs are bit-for-bit identical to
 synchronous ones.
 
 The host inbox is RUN-STRUCTURED: the per-super-partition bucket tensors
@@ -69,10 +108,12 @@ the message one: under ``ec.ooc_collect`` the superstep buckets insert
 proposals by owner over all P partitions and hands them back
 (``superstep.apply_mutations``) instead of exchanging them in-device
 (which only spans the resident super-partition). The collector spills
-the collected ``(sp, P, Cm)`` blocks through the same pager; at the
-superstep barrier the driver applies them host-side with the same
+the collected ``(sp, P, Cm)`` blocks through the same pager; the
+per-destination prepare applies them host-side with the same
 scatter/resolve semantics the in-memory path uses — so inserting
-programs are exact across super-partition boundaries.
+programs are exact across super-partition boundaries. (Whether any
+proposal will land — the vote-to-halt input — is decided from the
+collected blocks at commit time, so the fold never waits for the apply.)
 
 storage="delta" (LSM analogue): only CHANGED vertex values are written
 back to the host store each superstep instead of the full value array —
@@ -81,18 +122,22 @@ disk tier a super-partition with no changed rows never even dirties its
 page, so converged regions cost zero disk write-back. Both policies'
 write-back bytes are measured every superstep and feed the cost model's
 storage dimension (``planner/cost.py`` ``storage_writeback``); the
-statistics stream also carries the pager's hit rate and spill bytes (the
-disk-bandwidth axis), the measured message COMBINABILITY
-(messages/distinct-destination — the signal behind the sender_combine
-replan dimension), the mutation rate, and the dispatch / collect-wait /
-commit wall-time split, so the planner prices plans with the
-overlap-aware ``max(device, host_link, disk)`` rule when the pipelined
-executor is active.
+statistics stream also carries the pager's PER-SUPERSTEP hit rate and
+spill bytes (interval counters, reset each superstep — the planner
+observes current paging behavior, not cumulative), the measured message
+COMBINABILITY (messages/distinct-destination — the signal behind the
+sender_combine replan dimension), the mutation rate, and the dispatch /
+collect-wait / commit wall-time split, so the planner prices plans with
+the critical-path rule (``max(device, host_link, disk)`` plus the serial
+readiness leg) when the pipelined executor is active.
 
 Checkpoints hard-link/copy the spill files at the FILE level
 (``runtime/checkpoint.py`` ``save_ooc_checkpoint``) — no DRAM
 re-serialization — and ``resume_from=`` restarts a job directly from a
-checkpoint directory, faulting pages in on first touch.
+checkpoint directory, faulting pages in on first touch. The checkpoint
+meta also persists the AdaptiveController's hysteresis state
+(window/streak/cooldown), so a resume right before a pending plan switch
+does not re-pay the patience window.
 """
 from __future__ import annotations
 
@@ -132,6 +177,7 @@ class _InFlight:
     v2: VertexRel
     buckets: MsgRel
     g2: GlobalState
+    counts: jax.Array      # (sp, P) per-bucket occupancy, device-computed
     mut: Optional[tuple]   # (dst, payload, valid) insert buckets or None
 
 
@@ -200,69 +246,85 @@ def _host_slot_of(dst, valid, Np: int, P: int, partition: str):
     return np.minimum(slot, Np)
 
 
-def _apply_host_mutations(store: TieredStore, program, plan, P: int,
-                          sp: int, n_sp: int) -> tuple:
-    """Apply the collected insert-proposal buckets to the host store —
-    the barrier half of the host mutation inbox. Mirrors the in-memory
-    ``superstep.apply_mutations`` scatter/resolve exactly: per
-    destination partition, sum conflicting proposals per slot, count
-    them, recover the vid, run ``program.resolve``, and install the
-    result (vid set, value replaced, halt cleared) where any proposal
-    landed. Processes one destination super-partition's columns at a
-    time (like the inbox rebuild), so peak DRAM is mut-inbox / n_sp.
-    Returns (proposal_count, applied_any)."""
-    proposals = 0
-    applied_any = False
-    Np = store.read("vid", 0).shape[1]
-    for q in range(n_sp):
-        d = np.concatenate([store.get_page(("mut_dst", s, q))
-                            for s in range(n_sp)])    # (P, sp, Cm)
-        pv = np.concatenate([store.get_page(("mut_pay", s, q))
-                             for s in range(n_sp)])   # (P, sp, Cm, V)
-        ok = np.concatenate([store.get_page(("mut_val", s, q))
-                             for s in range(n_sp)])   # (P, sp, Cm)
-        proposals += int(ok.sum())
-        V = pv.shape[-1]
-        vid_pg = store.read("vid", q)
-        touched = False
-        val_pg = halt_pg = None
-        for p_local in range(sp):
-            dd = d[:, p_local, :].reshape(-1)
-            oo = ok[:, p_local, :].reshape(-1)
-            if not oo.any():
-                continue
-            vv = pv[:, p_local, :, :].reshape(-1, V)
-            slot = _host_slot_of(dd, oo, Np, P, plan.partition)
-            # same dtypes as the device per_part (float32 sums, int32
-            # counts): a custom resolve must see identical promotion
-            # rules host-side or parity breaks in the last ulp
-            summed = np.zeros((Np + 1, V), np.float32)
-            np.add.at(summed, slot,
-                      np.where(oo[:, None], vv, np.float32(0.0)))
-            cnt = np.zeros((Np + 1,), np.int32)
-            np.add.at(cnt, slot, oo)
-            newvid = np.full((Np + 1,), -1, np.int32)
-            np.maximum.at(newvid, slot,
-                          np.where(oo, dd, -1).astype(np.int32))
-            resolved = np.asarray(program.resolve(
-                newvid[:Np], summed[:Np], cnt[:Np]), np.float32)
-            take = cnt[:Np] > 0
-            if not take.any():
-                continue
-            if not touched:
-                val_pg = store.read("value", q)
-                halt_pg = store.read("halt", q)
-                touched = True
-            vid_pg[p_local][take] = newvid[:Np][take]
-            val_pg[p_local][take] = resolved[take]
-            halt_pg[p_local][take] = False
-            applied_any = True
-        if touched:
-            # pages were mutated in place: re-put to mark them dirty
-            store.write("vid", q, vid_pg)
-            store.write("value", q, val_pg)
-            store.write("halt", q, halt_pg)
-    return proposals, applied_any
+def _distinct_run_dsts(b_dst: np.ndarray, b_val: np.ndarray) -> int:
+    """Distinct destinations PER (source, dst-partition) RUN of one
+    collected bucket block — the duplicates a SENDER-side combine could
+    actually collapse (global distinct would also count cross-source
+    fan-in, which no sender can remove). Sort each run and count value
+    boundaries; invalid slots key as int max. Measured at COMMIT time —
+    overlapped by the pipeline — instead of during the serial inbox
+    rebuild, so the barrier-free fold has the combinability signal the
+    moment the last result lands. The trim only drops invalid slots, so
+    this equals the old rebuild-time measurement exactly. Caveat: when
+    the producing plan already combined, every run is duplicate-free and
+    the measured ratio is ~1 — the model then prices the inbox leg
+    neutrally and the sender-combine decision falls to the sort-cost
+    terms, which is the honest post-combine view."""
+    key = np.where(b_val, b_dst, np.iinfo(np.int32).max)
+    srt = np.sort(key, axis=2)
+    new_run = np.ones(srt.shape, bool)
+    new_run[:, :, 1:] = srt[:, :, 1:] != srt[:, :, :-1]
+    return int((new_run & (srt != np.iinfo(np.int32).max)).sum())
+
+
+def _apply_mutation_chunk(store: TieredStore, program, plan, P: int,
+                          sp: int, n_sp: int, gen: int, q: int):
+    """Apply destination super-partition ``q``'s collected insert
+    proposals to the host store — the per-destination half of the host
+    mutation inbox (the barrier-free prepare calls it right before
+    dispatching ``q``; the barrier path calls it for every q at the
+    fold). Mirrors the in-memory ``superstep.apply_mutations``
+    scatter/resolve exactly: per destination partition, sum conflicting
+    proposals per slot, count them, recover the vid, run
+    ``program.resolve``, and install the result (vid set, value replaced,
+    halt cleared) where any proposal landed. Touches one destination
+    super-partition's columns, so peak DRAM is mut-inbox / n_sp."""
+    d = np.concatenate([store.get_page(("mut_dst", gen, s, q))
+                        for s in range(n_sp)])    # (P, sp, Cm)
+    pv = np.concatenate([store.get_page(("mut_pay", gen, s, q))
+                         for s in range(n_sp)])   # (P, sp, Cm, V)
+    ok = np.concatenate([store.get_page(("mut_val", gen, s, q))
+                         for s in range(n_sp)])   # (P, sp, Cm)
+    V = pv.shape[-1]
+    vid_pg = store.read("vid", q)
+    Np = vid_pg.shape[1]
+    touched = False
+    val_pg = halt_pg = None
+    for p_local in range(sp):
+        dd = d[:, p_local, :].reshape(-1)
+        oo = ok[:, p_local, :].reshape(-1)
+        if not oo.any():
+            continue
+        vv = pv[:, p_local, :, :].reshape(-1, V)
+        slot = _host_slot_of(dd, oo, Np, P, plan.partition)
+        # same dtypes as the device per_part (float32 sums, int32
+        # counts): a custom resolve must see identical promotion
+        # rules host-side or parity breaks in the last ulp
+        summed = np.zeros((Np + 1, V), np.float32)
+        np.add.at(summed, slot,
+                  np.where(oo[:, None], vv, np.float32(0.0)))
+        cnt = np.zeros((Np + 1,), np.int32)
+        np.add.at(cnt, slot, oo)
+        newvid = np.full((Np + 1,), -1, np.int32)
+        np.maximum.at(newvid, slot,
+                      np.where(oo, dd, -1).astype(np.int32))
+        resolved = np.asarray(program.resolve(
+            newvid[:Np], summed[:Np], cnt[:Np]), np.float32)
+        take = cnt[:Np] > 0
+        if not take.any():
+            continue
+        if not touched:
+            val_pg = store.read("value", q)
+            halt_pg = store.read("halt", q)
+            touched = True
+        vid_pg[p_local][take] = newvid[:Np][take]
+        val_pg[p_local][take] = resolved[take]
+        halt_pg[p_local][take] = False
+    if touched:
+        # pages were mutated in place: re-put to mark them dirty
+        store.write("vid", q, vid_pg)
+        store.write("value", q, val_pg)
+        store.write("halt", q, halt_pg)
 
 
 def _adopt_checkpoint(store: TieredStore, z: dict, src):
@@ -304,9 +366,12 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                     auto_space: Optional[dict] = None,
                     stream: bool = True,
                     prefetch_depth: int = 2,
+                    barrier_free: bool = True,
                     memory_budget_bytes: Optional[int] = None,
                     disk_dir: Optional[str] = None,
                     eviction: str = "lru",
+                    io_threads: Optional[int] = None,
+                    readahead_pages: int = 8,
                     checkpoint_every: int = 0,
                     checkpoint_dir: Optional[str] = None,
                     resume_from: Optional[str] = None) -> RunResult:
@@ -323,13 +388,25 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
     synchronous loop (a pipeline window of 1). Results are bit-for-bit
     identical either way.
 
+    barrier_free=True (default; requires stream=True) removes the global
+    inter-superstep barrier: the inbox rebuild and mutation apply run
+    per destination, interleaved with the next superstep's dispatches
+    (per-destination readiness), and the executor only synchronizes for
+    plan switches, regrows and checkpoints. Results are bit-for-bit
+    identical to the barrier executor and the synchronous loop.
+
     DISK TIER: ``memory_budget_bytes`` caps the host-DRAM bytes the
     run's relations and inbox may occupy at once; cold pages spill to
     mmap-backed files under ``disk_dir`` (required when a budget is set)
     and fault back in on access. ``eviction`` picks the page-replacement
     policy: "lru", or "mru" — which resists the superstep's cyclic
-    sequential scan (see ``storage/pager.py``). Results are bit-for-bit
-    identical to the pure-DRAM tier.
+    sequential scan (see ``storage/pager.py``). ``io_threads`` (default:
+    1 whenever a disk dir is configured, else 0) moves the disk legs to
+    a background page-I/O engine — readahead of the next dispatchable
+    destination's pages (at most ``readahead_pages`` per tick) plus a
+    coalesced dirty-page drain — so the dispatcher/collector never touch
+    disk on the critical path. Results are bit-for-bit identical to the
+    pure-DRAM tier.
 
     ``checkpoint_every``/``checkpoint_dir`` snapshot the host store at
     superstep boundaries by hard-linking/copying its spill files (no
@@ -344,6 +421,9 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
         raise ValueError("checkpoint_every needs a checkpoint_dir — "
                          "otherwise the job would silently run "
                          "without any checkpoints")
+    barrier_free = bool(barrier_free and stream)
+    if io_threads is None:
+        io_threads = 1 if disk_dir else 0
     store = None
     try:
         ck_meta = ck_gs = ck_src = None
@@ -363,8 +443,10 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
             assert P % sp == 0
             n_sp = P // sp
         store = TieredStore(n_sp=n_sp, budget_bytes=memory_budget_bytes,
-                            disk_dir=disk_dir, policy=eviction)
-        gen = 0            # inbox generation (one per superstep barrier)
+                            disk_dir=disk_dir, policy=eviction,
+                            io_threads=io_threads,
+                            readahead_pages=readahead_pages)
+        gen = 0            # inbox generation (one per superstep fold)
         if resume_from is not None:
             gs = _adopt_checkpoint(store, ck_gs, ck_src)
             i = int(ck_meta["superstep"])
@@ -422,6 +504,12 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                         store.get_page((nm, 0, q)) for nm in _INBOX))
                     for nm, a in zip(_INBOX, triple):
                         store.put_page((nm, 0, q), a, immutable=True)
+        if controller is not None and ck_meta is not None \
+                and ck_meta.get("controller"):
+            # restore the hysteresis window/streak/cooldown, so a resume
+            # right before a pending switch does not re-pay the patience
+            # window
+            controller.load_state(ck_meta["controller"])
         caller_ec = ec is not None
         ec = ec or default_engine_config(shape_vert, program, plan)
         if not caller_ec and ck_meta is not None and ck_meta.get("caps"):
@@ -473,7 +561,219 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
         stats = []
         delta_bytes = full_bytes = 0
         recompiled = True  # first superstep includes the jit compile
-        pool_prev = store.stats()
+        window = max(int(prefetch_depth), 1) if stream else 1
+        store.take_interval()    # reset per-superstep pager counters
+        # ---- rolling-frontier state (reassigned at every fold; the
+        # closures below read the CURRENT binding at call time) ---------
+        prepared = set(range(n_sp))   # gen-0 chunks exist (init / resume)
+        cur_has_mut = False           # no mutation pages precede gen 0
+        sort_on_build = False         # one-off run sort on a merging switch
+        todo = deque()
+        committed = {}
+        t_io = {"dispatch": 0.0, "wait": 0.0, "commit": 0.0}
+        acc = {"distinct": 0, "proposals": 0, "applied": False}
+        stall_cell = [None]
+        t_ready0 = time.time()
+
+        def prepare(q):
+            """Per-destination readiness work for generation ``gen``:
+            restack destination q's inbox chunk from the runs all n_sp
+            sources landed for it (the host-side emulated exchange —
+            source-major stack, destination-major transpose, trim every
+            run to the fold's C_in; valid entries are a bucket PREFIX,
+            so the trim drops only invalid tail slots), then apply q's
+            mutation-inbox columns. Under barrier_free this runs
+            interleaved with dispatches — the device computes earlier
+            destinations while the host prepares later ones; the barrier
+            path calls it for every q at the fold."""
+            if q in prepared:
+                return
+            d_q = np.concatenate([store.get_page(("out_dst", gen, s, q))
+                                  for s in range(n_sp)], axis=0)
+            p_q = np.concatenate([store.get_page(("out_pay", gen, s, q))
+                                  for s in range(n_sp)], axis=0)
+            v_q = np.concatenate([store.get_page(("out_val", gen, s, q))
+                                  for s in range(n_sp)], axis=0)
+            triple = (np.ascontiguousarray(
+                          d_q.transpose(1, 0, 2)[:, :, :C_in]),
+                      np.ascontiguousarray(
+                          p_q.transpose(1, 0, 2, 3)[:, :, :C_in]),
+                      np.ascontiguousarray(
+                          v_q.transpose(1, 0, 2)[:, :, :C_in]))
+            if sort_on_build:
+                # a plan switch onto the merging receiver landed at the
+                # fold before this chunk was built: give it dst-sorted
+                # runs at build time (the rolling analogue of the
+                # post-switch inbox sort)
+                triple = _sort_inbox_runs(triple)
+            for nm, a in zip(_INBOX, triple):
+                store.put_page((nm, gen, q), a, immutable=True)
+            for s in range(n_sp):
+                for nm in _OUT:
+                    store.delete_page((nm, gen, s, q))
+            if gen > 0:
+                for nm in _INBOX:
+                    store.delete_page((nm, gen - 1, q))
+            if cur_has_mut:
+                _apply_mutation_chunk(store, program, plan, P, sp, n_sp,
+                                      gen, q)
+                for s in range(n_sp):
+                    for nm in _MUT:
+                        store.delete_page((nm, gen, s, q))
+            prepared.add(q)
+
+        def dispatch(q):
+            """Non-blocking disk->DRAM->HBM prefetch + step enqueue
+            for one super-partition: pages fault in from the spill
+            tier if evicted, upload with ``jax.device_put``, and the
+            device starts (or queues) the work while the host moves
+            on to prepare or collect another one. The value page stays
+            PINNED until commit (the delta compare needs the
+            pre-step values resident)."""
+            td = time.time()
+            if store.engine is not None:
+                # announce the NEXT destination's pages to the I/O
+                # engine so its faults happen off the critical path.
+                # When this superstep's queue has drained, warm the
+                # NEXT superstep's first destination instead — its
+                # relation pages are the coldest (touched first after
+                # the fold) and would otherwise fault inside the
+                # readiness stall.
+                if todo:
+                    qn = todo[0]
+                    keys = [(nm, qn) for nm in _RELS]
+                    if qn in prepared:
+                        keys += [(nm, gen, qn) for nm in _INBOX]
+                    else:
+                        keys += [(nm, gen, s2, qn)
+                                 for s2 in range(n_sp) for nm in _OUT]
+                        if cur_has_mut:
+                            keys += [(nm, gen, s2, qn)
+                                     for s2 in range(n_sp)
+                                     for nm in _MUT]
+                else:
+                    keys = [(nm, 0) for nm in _RELS]
+                    keys += [(nm, gen + 1, s2, 0)
+                             for s2 in range(n_sp) for nm in _OUT]
+                store.readahead(keys)
+            store.pin("value", q)
+            vpart = VertexRel(**{k: jax.device_put(store.read(k, q))
+                                 for k in _RELS})
+            # incoming chunk: the run-structured inbox page for this
+            # destination super-partition, runs flattened — already
+            # the receiver's layout
+            d_in = store.get_page(("inbox_dst", gen, q))
+            p_in = store.get_page(("inbox_pay", gen, q))
+            v_in = store.get_page(("inbox_val", gen, q))
+            msg = MsgRel(
+                dst=jax.device_put(d_in.reshape(sp, P * C_in)),
+                payload=jax.device_put(
+                    p_in.reshape(sp, P * C_in, D)),
+                valid=jax.device_put(v_in.reshape(sp, P * C_in)))
+            # part0 = this block's first GLOBAL partition index, so
+            # resurrect mints correct vids past super-partition 0
+            v2, buckets, g2, cnts, mut = step(
+                vpart, msg, gs, jnp.asarray(q * sp, jnp.int32))
+            t_io["dispatch"] += time.time() - td
+            if stall_cell[0] is None:
+                # device-idle gap: from the previous superstep's last
+                # collect to this superstep's first step enqueue — the
+                # readiness stall the barrier-free pipeline minimizes
+                stall_cell[0] = time.time() - t_ready0
+            return _InFlight(q, v2, buckets, g2, cnts, mut)
+
+        def commit(e):
+            """Drain one clean super-partition D2H and commit its
+            host state (delta vs full write-back policy; both byte
+            counts are measured every superstep to feed the cost
+            model's storage dimension). Blocking on the value pull
+            is the pipeline's compute-wait; everything after is
+            host-side commit time. Dirty pages write back to disk
+            lazily (on eviction, background drain or checkpoint),
+            overlapped by the pipeline like every other page move.
+            The fold-time signals — combinability, mutation proposal
+            count, will-any-insert-land — are measured HERE, on the
+            full-width collected blocks, so the rolling fold never
+            waits for the inbox rebuild to learn them."""
+            tw = time.time()
+            new_value = np.asarray(e.v2.value)   # blocks on e's step
+            t_io["wait"] += time.time() - tw
+            tc = time.time()
+            old_value = store.read("value", e.s)
+            changed = np.any(new_value != old_value, axis=-1)
+            d_b = int(changed.sum()) * new_value.shape[-1] * 4
+            f_b = new_value.size * 4
+            if plan.storage == "delta":
+                store.write_rows("value", e.s, changed,
+                                 new_value[changed])
+            else:
+                store.write("value", e.s, new_value)
+            new_halt = np.asarray(e.v2.halt)
+            new_vid = np.asarray(e.v2.vid)
+            store.write("halt", e.s, new_halt)
+            store.write("vid", e.s, new_vid)
+            store.write("edge_dst", e.s, np.asarray(e.v2.edge_dst))
+            store.write("edge_val", e.s, np.asarray(e.v2.edge_val))
+            store.unpin("value", e.s)
+            # collected sender buckets -> per-destination out pages of
+            # the NEXT generation (chunking here is what keeps the
+            # prepare's inbox rebuild at inbox/n_sp peak DRAM). Once
+            # every source has landed its runs for destination q, q is
+            # dispatchable — per-destination readiness.
+            b_dst = np.asarray(e.buckets.dst)
+            b_pay = np.asarray(e.buckets.payload)
+            b_val = np.asarray(e.buckets.valid)
+            counts = np.asarray(e.counts)
+            if controller is not None:
+                # only the adaptive controller consumes the signal, so
+                # fixed-plan runs skip the O(M log C) pass; trim the
+                # sort to the block's occupancy (valid entries are a
+                # bucket prefix) — bucket_cap carries slack the sort
+                # must not pay for
+                w = max(int(counts.max(initial=0)), 1)
+                acc["distinct"] += _distinct_run_dsts(
+                    b_dst[:, :, :w], b_val[:, :, :w])
+            for q in range(n_sp):
+                qsl = slice(q * sp, (q + 1) * sp)
+                store.put_page(("out_dst", gen + 1, e.s, q),
+                               b_dst[:, qsl])
+                store.put_page(("out_pay", gen + 1, e.s, q),
+                               b_pay[:, qsl])
+                store.put_page(("out_val", gen + 1, e.s, q),
+                               b_val[:, qsl])
+            has_mut = e.mut is not None
+            if has_mut:
+                # chunked per destination like the out blocks, so the
+                # prepare's apply pass runs at mut-inbox / n_sp peak
+                # DRAM and never re-faults full-width pages. The
+                # vote-to-halt input ("will any proposal land?") is
+                # decided here from the same slot math the apply uses.
+                m_dst = np.asarray(e.mut[0])
+                m_pay = np.asarray(e.mut[1])
+                m_ok = np.asarray(e.mut[2])
+                acc["proposals"] += int(m_ok.sum())
+                if not acc["applied"]:
+                    lands = _host_slot_of(m_dst, m_ok, Np, P,
+                                          plan.partition) < Np
+                    if bool((m_ok & lands).any()):
+                        acc["applied"] = True
+                for q in range(n_sp):
+                    qsl = slice(q * sp, (q + 1) * sp)
+                    store.put_page(("mut_dst", gen + 1, e.s, q),
+                                   m_dst[:, qsl])
+                    store.put_page(("mut_pay", gen + 1, e.s, q),
+                                   m_pay[:, qsl])
+                    store.put_page(("mut_val", gen + 1, e.s, q),
+                                   m_ok[:, qsl])
+            done = _Done(
+                counts=counts,
+                halt_ok=bool(np.all(new_halt | (new_vid < 0))),
+                active=int(e.g2.active_count),
+                agg=np.asarray(e.g2.aggregate),
+                delta_bytes=d_b, full_bytes=f_b, has_mut=has_mut)
+            t_io["commit"] += time.time() - tc
+            return done
+
         while i < max_supersteps and not bool(gs.halt):
             ts = time.time()
             this_recompiled = recompiled
@@ -485,108 +785,21 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                 this_recompiled = True
             ovf0 = np.asarray(gs.overflow)
             t_io = {"dispatch": 0.0, "wait": 0.0, "commit": 0.0}
+            acc = {"distinct": 0, "proposals": 0, "applied": False}
+            stall_cell = [None]
             committed = {}                # s -> _Done
             todo = deque(range(n_sp))     # dispatch queue (redo re-enters)
             pending = []                  # _InFlight, dispatch order
-            window = max(int(prefetch_depth), 1) if stream else 1
-
-            def dispatch(s):
-                """Non-blocking disk->DRAM->HBM prefetch + step enqueue
-                for one super-partition: pages fault in from the spill
-                tier if evicted, upload with ``jax.device_put``, and the
-                device starts (or queues) the work while the host moves
-                on to collect an earlier one. The value page stays
-                PINNED until commit (the delta compare needs the
-                pre-step values resident)."""
-                td = time.time()
-                store.pin("value", s)
-                vpart = VertexRel(**{k: jax.device_put(store.read(k, s))
-                                     for k in _RELS})
-                # incoming chunk: the run-structured inbox page for this
-                # destination super-partition, runs flattened — already
-                # the receiver's layout
-                d_in = store.get_page(("inbox_dst", gen, s))
-                p_in = store.get_page(("inbox_pay", gen, s))
-                v_in = store.get_page(("inbox_val", gen, s))
-                msg = MsgRel(
-                    dst=jax.device_put(d_in.reshape(sp, P * C_in)),
-                    payload=jax.device_put(
-                        p_in.reshape(sp, P * C_in, D)),
-                    valid=jax.device_put(v_in.reshape(sp, P * C_in)))
-                # part0 = this block's first GLOBAL partition index, so
-                # resurrect mints correct vids past super-partition 0
-                v2, buckets, g2, mut = step(
-                    vpart, msg, gs, jnp.asarray(s * sp, jnp.int32))
-                t_io["dispatch"] += time.time() - td
-                return _InFlight(s, v2, buckets, g2, mut)
-
-            def commit(e):
-                """Drain one clean super-partition D2H and commit its
-                host state (delta vs full write-back policy; both byte
-                counts are measured every superstep to feed the cost
-                model's storage dimension). Blocking on the value pull
-                is the pipeline's compute-wait; everything after is
-                host-side commit time. Dirty pages write back to disk
-                lazily (on eviction or checkpoint), overlapped by the
-                pipeline like every other page move."""
-                tw = time.time()
-                new_value = np.asarray(e.v2.value)   # blocks on e's step
-                t_io["wait"] += time.time() - tw
-                tc = time.time()
-                old_value = store.read("value", e.s)
-                changed = np.any(new_value != old_value, axis=-1)
-                d_b = int(changed.sum()) * new_value.shape[-1] * 4
-                f_b = new_value.size * 4
-                if plan.storage == "delta":
-                    store.write_rows("value", e.s, changed,
-                                     new_value[changed])
-                else:
-                    store.write("value", e.s, new_value)
-                new_halt = np.asarray(e.v2.halt)
-                new_vid = np.asarray(e.v2.vid)
-                store.write("halt", e.s, new_halt)
-                store.write("vid", e.s, new_vid)
-                store.write("edge_dst", e.s, np.asarray(e.v2.edge_dst))
-                store.write("edge_val", e.s, np.asarray(e.v2.edge_val))
-                store.unpin("value", e.s)
-                # collected sender buckets -> per-destination out pages
-                # (chunking here is what keeps the barrier's inbox
-                # rebuild at inbox/n_sp peak DRAM)
-                b_dst = np.asarray(e.buckets.dst)
-                b_pay = np.asarray(e.buckets.payload)
-                b_val = np.asarray(e.buckets.valid)
-                counts = b_val.sum(axis=2)
-                for q in range(n_sp):
-                    qsl = slice(q * sp, (q + 1) * sp)
-                    store.put_page(("out_dst", e.s, q), b_dst[:, qsl])
-                    store.put_page(("out_pay", e.s, q), b_pay[:, qsl])
-                    store.put_page(("out_val", e.s, q), b_val[:, qsl])
-                has_mut = e.mut is not None
-                if has_mut:
-                    # chunked per destination like the out blocks, so
-                    # the barrier's apply pass runs at mut-inbox / n_sp
-                    # peak DRAM and never re-faults full-width pages
-                    m_dst = np.asarray(e.mut[0])
-                    m_pay = np.asarray(e.mut[1])
-                    m_ok = np.asarray(e.mut[2])
-                    for q in range(n_sp):
-                        qsl = slice(q * sp, (q + 1) * sp)
-                        store.put_page(("mut_dst", e.s, q), m_dst[:, qsl])
-                        store.put_page(("mut_pay", e.s, q), m_pay[:, qsl])
-                        store.put_page(("mut_val", e.s, q), m_ok[:, qsl])
-                done = _Done(
-                    counts=counts,
-                    halt_ok=bool(np.all(new_halt | (new_vid < 0))),
-                    active=int(e.g2.active_count),
-                    agg=np.asarray(e.g2.aggregate),
-                    delta_bytes=d_b, full_bytes=f_b, has_mut=has_mut)
-                t_io["commit"] += time.time() - tc
-                return done
 
             while todo or pending:
-                # fill the pipeline window
+                # fill the pipeline window, preparing each destination
+                # (chunk rebuild + mutation apply) just before its
+                # dispatch — under barrier_free this is where the old
+                # barrier's serial work overlaps the device
                 while todo and len(pending) < window:
-                    pending.append(dispatch(todo.popleft()))
+                    q = todo.popleft()
+                    prepare(q)
+                    pending.append(dispatch(q))
                 # collect a completed super-partition — out of dispatch
                 # order when a later one is already done — else block on
                 # the oldest
@@ -604,7 +817,9 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                     # overflowed ones for redo; then double ONLY the
                     # overflowed capacities, re-jit, end-pad the
                     # committed blocks and redo from retained host state
-                    # (nothing from a dirty step was committed).
+                    # (nothing from a dirty step was committed). This is
+                    # one of the three events the barrier-free frontier
+                    # synchronizes on.
                     redo = {e.s}
                     store.unpin("value", e.s)
                     for other in pending:
@@ -622,21 +837,25 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                     seen_widths = {C_in}
                     for s2, done in committed.items():
                         for q in range(n_sp):
-                            old = tuple(store.get_page((nm, s2, q))
-                                        for nm in _OUT)
+                            old = tuple(
+                                store.get_page((nm, gen + 1, s2, q))
+                                for nm in _OUT)
                             new = _pad_run_width(old, ec.bucket_cap)
                             if new[0] is not old[0]:
                                 for nm, a in zip(_OUT, new):
-                                    store.put_page((nm, s2, q), a)
+                                    store.put_page((nm, gen + 1, s2, q),
+                                                   a)
                         if done.has_mut:
                             for q in range(n_sp):
-                                old = tuple(store.get_page((nm, s2, q))
-                                            for nm in _MUT)
+                                old = tuple(
+                                    store.get_page((nm, gen + 1, s2, q))
+                                    for nm in _MUT)
                                 new = _pad_run_width(old,
                                                      ec.mutation_cap)
                                 if new[0] is not old[0]:
                                     for nm, a in zip(_MUT, new):
-                                        store.put_page((nm, s2, q), a)
+                                        store.put_page(
+                                            (nm, gen + 1, s2, q), a)
                     todo = deque(sorted(redo | set(todo)))
                     stats.append(coll.event(
                         i, "regrow", bucket_cap=ec.bucket_cap,
@@ -645,13 +864,19 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                         sources=np.flatnonzero(delta > 0).tolist(),
                         redo=sorted(redo)).as_dict())
                     this_recompiled = True
+                    if controller is not None:
+                        controller.note_shape_change()
                     continue
                 committed[e.s] = commit(e)
+            t_ready0 = time.time()
 
-            # superstep barrier: fold the per-super-partition results in
-            # super-partition order (float aggregate order must not depend
-            # on pipeline completion order — bit-for-bit vs the
-            # synchronous loop)
+            # ROLLING FOLD: every input was measured at collect time, so
+            # this is scalar work — the per-super-partition results fold
+            # in super-partition order (float aggregate order must not
+            # depend on pipeline completion order — bit-for-bit vs the
+            # synchronous loop), and the next superstep's first
+            # destination dispatches right after, without waiting for
+            # any inbox rebuild or mutation apply.
             ordered = [committed[s] for s in range(n_sp)]
             halt_all = all(d.halt_ok for d in ordered)
             active = sum(d.active for d in ordered)
@@ -666,81 +891,22 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
             C_eff = _round_run_width(
                 int(max((int(d.counts.max(initial=0)) for d in ordered),
                         default=0)), ec.bucket_cap)
-            # vectorized inbox rebuild, one destination super-partition
-            # at a time (peak DRAM = inbox / n_sp): stack each
-            # destination chunk's (sp, sp, C) out pages source-major,
-            # transpose to destination-major (the host-side emulated
-            # exchange) and trim every run to the widest occupancy —
-            # valid entries are a bucket PREFIX, so the trim drops only
-            # invalid tail slots. Distinct destinations are counted here
-            # for the combinability signal (owners never collide across
-            # partitions, so per-chunk uniques sum exactly).
-            new_gen = gen + 1
-            distinct_dst = 0
-            for q in range(n_sp):
-                d_q = np.concatenate([store.get_page(("out_dst", s, q))
-                                      for s in range(n_sp)], axis=0)
-                p_q = np.concatenate([store.get_page(("out_pay", s, q))
-                                      for s in range(n_sp)], axis=0)
-                v_q = np.concatenate([store.get_page(("out_val", s, q))
-                                      for s in range(n_sp)], axis=0)
-                dst_c = np.ascontiguousarray(
-                    d_q.transpose(1, 0, 2)[:, :, :C_eff])
-                pay_c = np.ascontiguousarray(
-                    p_q.transpose(1, 0, 2, 3)[:, :, :C_eff])
-                val_c = np.ascontiguousarray(
-                    v_q.transpose(1, 0, 2)[:, :, :C_eff])
-                if controller is not None:
-                    # distinct destinations PER (dst-partition, source)
-                    # RUN — the duplicates a SENDER-side combine could
-                    # actually collapse (global distinct would also
-                    # count cross-source fan-in, which no sender can
-                    # remove). Sort each run and count value boundaries;
-                    # invalid slots key as int max. Only the adaptive
-                    # controller consumes the signal, so fixed-plan runs
-                    # skip the O(M log C) pass. Caveat: when the
-                    # producing plan already combined, every run is
-                    # duplicate-free and the measured ratio is ~1 — the
-                    # model then prices the inbox leg neutrally and the
-                    # sender-combine decision falls to the sort-cost
-                    # terms, which is the honest post-combine view.
-                    key = np.where(val_c, dst_c, np.iinfo(np.int32).max)
-                    srt = np.sort(key, axis=2)
-                    new_run = np.ones(srt.shape, bool)
-                    new_run[:, :, 1:] = srt[:, :, 1:] != srt[:, :, :-1]
-                    distinct_dst += int(
-                        (new_run & (srt != np.iinfo(np.int32).max)).sum())
-                store.put_page(("inbox_dst", new_gen, q), dst_c,
-                               immutable=True)
-                store.put_page(("inbox_pay", new_gen, q), pay_c,
-                               immutable=True)
-                store.put_page(("inbox_val", new_gen, q), val_c,
-                               immutable=True)
-                for s in range(n_sp):
-                    for nm in _OUT:
-                        store.delete_page((nm, s, q))
-            for q in range(n_sp):
-                for nm in _INBOX:
-                    store.delete_page((nm, gen, q))
-            gen = new_gen
-            C_in = C_eff
-            combinability = (msg_count / distinct_dst if distinct_dst
-                             else 1.0)
-            # host mutation inbox: apply collected cross-super-partition
-            # insert proposals to the host store with the in-memory
-            # scatter/resolve semantics; an applied insert clears halt on
-            # its slot, exactly as the in-device path would have
+            combinability = (msg_count / acc["distinct"]
+                             if acc["distinct"] else 1.0)
+            # host mutation inbox vote: an insert that WILL land (decided
+            # at commit time from the collected blocks) clears halt on
+            # its slot, exactly as the in-device path would have; the
+            # apply itself happens per destination in prepare()
             mutation_rate = 0.0
             if any(d.has_mut for d in ordered):
-                proposals, applied = _apply_host_mutations(
-                    store, program, plan, P, sp, n_sp)
-                mutation_rate = proposals / max(n_live, 1)
-                if applied:
+                mutation_rate = acc["proposals"] / max(n_live, 1)
+                if acc["applied"]:
                     halt_all = False
-                for s in range(n_sp):
-                    for q in range(n_sp):
-                        for nm in _MUT:
-                            store.delete_page((nm, s, q))
+            gen += 1
+            C_in = C_eff
+            prepared = set()
+            cur_has_mut = any(d.has_mut for d in ordered)
+            sort_on_build = False
             i += 1
             gs = GlobalState(halt=jnp.asarray(halt_all and msg_count == 0),
                              aggregate=jnp.asarray(agg),
@@ -748,33 +914,45 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                              overflow=gs.overflow,
                              active_count=jnp.asarray(active, jnp.int32),
                              msg_count=jnp.asarray(msg_count, jnp.int32))
+            if not barrier_free:
+                # the PR-4 barrier: rebuild the whole generation and
+                # apply every destination's mutations before anything
+                # else dispatches
+                for q in range(n_sp):
+                    prepare(q)
+            interval = store.take_interval()
             pool_now = store.stats()
-            faults = (pool_now["misses"] - pool_prev["misses"])
-            looks = faults + (pool_now["hits"] - pool_prev["hits"])
-            spill_rd = (pool_now["spill_read_bytes"] -
-                        pool_prev["spill_read_bytes"])
-            spill_wr = (pool_now["spill_write_bytes"] -
-                        pool_prev["spill_write_bytes"])
+            faults = interval["misses"]
+            looks = faults + interval["hits"]
+            spill_rd = interval["spill_read_bytes"]
+            spill_wr = interval["spill_write_bytes"]
             rec = coll.record(
                 i, active=active, messages=msg_count,
                 wall_s=time.time() - ts, recompiled=this_recompiled,
                 delta_bytes=delta_bytes, full_bytes=full_bytes,
                 change_density=step_delta / max(step_full, 1),
                 storage=plan.storage, ooc=True, streaming=stream,
+                barrier_free=barrier_free,
+                super_partitions=n_sp,
+                readiness_stall_s=stall_cell[0] or 0.0,
                 dispatch_s=t_io["dispatch"], collect_wait_s=t_io["wait"],
                 commit_s=t_io["commit"],
                 combinability=combinability,
                 mutation_rate=mutation_rate,
                 # MEASURED paging, not configuration: a disk_dir whose
                 # budget never forces an eviction must not make the cost
-                # model price phantom disk traffic
+                # model price phantom disk traffic. All pager counters
+                # are PER-SUPERSTEP (interval counters, reset each
+                # record), so the planner sees current behavior.
                 spill=bool(spill_rd or spill_wr),
                 cache_hit_rate=(1.0 - faults / looks) if looks else 1.0,
                 spill_read_bytes=spill_rd,
                 spill_write_bytes=spill_wr,
+                io_queue_depth=interval.get("io_queue_depth_peak", 0),
+                io_queue_depth_mean=interval.get("io_queue_depth_mean",
+                                                 0.0),
                 pager_resident_bytes=pool_now["resident_bytes"],
                 pager_peak_bytes=pool_now["peak_resident_bytes"])
-            pool_prev = pool_now
             stats.append(rec.as_dict())
             switched = False
             if controller is not None and not bool(gs.halt):
@@ -784,16 +962,20 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                             and plan.connector != "partitioning_merging"
                             and not plan.sender_combine):
                         # the old plan left runs unsorted; give the
-                        # merging receiver its dst-sorted runs (one-off,
-                        # host-side, chunk at a time — the OOC analogue
-                        # of migrate_msgs)
-                        for q in range(n_sp):
+                        # merging receiver its dst-sorted runs. Chunks
+                        # already built get a one-off host-side sort;
+                        # chunks the rolling frontier has not built yet
+                        # are sorted at build time (sort_on_build) — the
+                        # plan switch is a synchronization event only
+                        # for the re-jit, never a full-inbox stall.
+                        for q in sorted(prepared):
                             triple = _sort_inbox_runs(tuple(
                                 store.get_page((nm, gen, q))
                                 for nm in _INBOX))
                             for nm, a in zip(_INBOX, triple):
                                 store.put_page((nm, gen, q), a,
                                                immutable=True)
+                        sort_on_build = True
                     plan = new_plan
                     if plan.join == "left_outer":
                         # refit the frontier to the live set — safe now
@@ -821,6 +1003,7 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                         frontier_cap=ec.frontier_cap).as_dict())
                     recompiled = True
                     switched = True
+                    controller.note_shape_change()
             # adaptive frontier refit (left-outer plan), mirroring
             # run_host: when the live set collapses, shrink the frontier
             # capacity so each super-partition only pays O(|frontier|)
@@ -838,13 +1021,44 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                         i, "frontier-refit",
                         frontier_cap=ec.frontier_cap).as_dict())
                     recompiled = True
+                    if controller is not None:
+                        controller.note_shape_change()
+            if controller is not None and not bool(gs.halt):
+                # periodic cost-model re-calibration: after a regrow /
+                # refit / switch changed the lowered shapes, refit the
+                # analytic constants against the HLO analyzer — at most
+                # once per recalibrate_every supersteps (amortizes the
+                # probe compiles)
+                recal = controller.maybe_recalibrate(program, i)
+                if recal is not None:
+                    stats.append(coll.event(
+                        i, "recalibrate", **recal).as_dict())
             if checkpoint_every and checkpoint_dir \
                     and i % checkpoint_every == 0:
-                save_ooc_checkpoint(checkpoint_dir, i, store, gs,
-                                    inbox_gen=gen, inbox_width=C_in,
-                                    sp=sp, plan=plan, ec=ec)
+                # checkpoints synchronize the rolling frontier: the
+                # saved inbox generation must be complete and every
+                # pending mutation applied before the pages export
+                for q in range(n_sp):
+                    prepare(q)
+                if store.engine is not None:
+                    store.engine.drain()
+                save_ooc_checkpoint(
+                    checkpoint_dir, i, store, gs, inbox_gen=gen,
+                    inbox_width=C_in, sp=sp, plan=plan, ec=ec,
+                    controller_state=(controller.state_dict()
+                                      if controller is not None else None))
             if bool(gs.halt):
                 break
+        # the rolling frontier defers mutation application to each
+        # destination's prepare; a run that stops here (max_supersteps,
+        # or a halt vote — where the pending applies are no-ops by
+        # construction, else the vote would have failed) must land them
+        # before the final gather, exactly like run_host's in-step apply
+        if cur_has_mut:
+            for q in range(n_sp):
+                if q not in prepared:
+                    _apply_mutation_chunk(store, program, plan, P, sp,
+                                          n_sp, gen, q)
         final = VertexRel(**{k: jnp.asarray(store.gather(k))
                              for k in _RELS})
         return RunResult(vertex=final, gs=gs, supersteps=i, stats=stats,

@@ -355,10 +355,15 @@ def make_superstep(program: VertexProgram, plan: PhysicalPlan,
             active_count=active_count,
             msg_count=msg_count)
         if ec.ooc_collect:
-            # 4th output: collected insert-proposal buckets (sp, P, Cm)
-            # for the host mutation inbox; None when the program never
-            # proposes inserts (the pytree stays static per program)
-            return new_vert, new_msg, new_gs, mut_buckets
+            # extra outputs for the OOC collector: per-(src, dst) bucket
+            # occupancy counts (computed on-device so the host never has
+            # to scan the bucket tensors for the inbox run-width trim /
+            # readiness bookkeeping of the barrier-free pipeline), and
+            # the collected insert-proposal buckets (sp, P, Cm) for the
+            # host mutation inbox — None when the program never proposes
+            # inserts (the pytree stays static per program)
+            counts = jnp.sum(r_val, axis=2, dtype=jnp.int32)
+            return new_vert, new_msg, new_gs, counts, mut_buckets
         return new_vert, new_msg, new_gs
 
     return superstep

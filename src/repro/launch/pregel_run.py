@@ -186,6 +186,27 @@ def main():
     ap.add_argument("--no-stream", dest="stream", action="store_false",
                     help="synchronous --ooc loop: upload, step, block, "
                          "collect per super-partition")
+    ap.add_argument("--barrier-free", dest="barrier_free",
+                    action="store_true", default=True,
+                    help="barrier-free superstep pipeline (default): "
+                         "rebuild each destination's inbox chunk and "
+                         "apply its mutations per-destination, "
+                         "overlapped with the next superstep's compute "
+                         "— no global inter-superstep barrier")
+    ap.add_argument("--no-barrier-free", dest="barrier_free",
+                    action="store_false",
+                    help="keep the global superstep barrier (the PR-4 "
+                         "executor): full inbox rebuild + mutation "
+                         "apply between supersteps")
+    ap.add_argument("--io-threads", type=int, default=None,
+                    help="background page-I/O engine worker threads for "
+                         "the --ooc disk tier (default: 1 when "
+                         "--disk-dir is set, else 0); readahead of the "
+                         "next destination's pages + coalesced "
+                         "dirty-page drain off the critical path")
+    ap.add_argument("--readahead-pages", type=int, default=8,
+                    help="max pages the I/O engine prefetches per "
+                         "dispatch tick (disk tier only)")
     ap.add_argument("--disk-dir", default=None,
                     help="--ooc disk tier: spill directory for the "
                          "buffer cache's page files (enables the "
@@ -253,13 +274,18 @@ def main():
         res = run_out_of_core(vert, program, plan,
                               budget_partitions=budget, max_supersteps=40,
                               stream=args.stream,
+                              barrier_free=args.barrier_free,
                               memory_budget_bytes=args.memory_budget_bytes,
                               disk_dir=args.disk_dir,
-                              eviction=args.eviction)
+                              eviction=args.eviction,
+                              io_threads=args.io_threads,
+                              readahead_pages=args.readahead_pages)
         tier = (f", disk tier at {args.disk_dir} "
                 f"[{args.eviction}]" if args.disk_dir else "")
+        exe = ("synchronous" if not args.stream else
+               "barrier-free" if args.barrier_free else "streaming")
         mode = (f"out-of-core (budget={budget}/{args.parts} partitions, "
-                f"{'streaming' if args.stream else 'synchronous'}{tier})")
+                f"{exe}{tier})")
     else:
         res = run_host(vert, program, plan, max_supersteps=40)
         mode = "in-memory"
@@ -272,8 +298,18 @@ def main():
             hr = sum(s["cache_hit_rate"] for s in recs) / len(recs)
             sb = sum(s["spill_read_bytes"] + s["spill_write_bytes"]
                      for s in recs)
+            qd = max((s.get("io_queue_depth", 0) for s in recs),
+                     default=0)
             print(f"disk tier: mean page hit rate {hr:.2f}, "
-                  f"{sb / 2**20:.1f} MiB spilled")
+                  f"{sb / 2**20:.1f} MiB spilled, "
+                  f"io queue depth peak {qd}")
+    if args.ooc:
+        recs = [s for s in res.stats if "readiness_stall_s" in s]
+        if recs:
+            stall = sum(s["readiness_stall_s"] for s in recs)
+            print(f"readiness stall: {stall:.3f}s total over "
+                  f"{len(recs)} supersteps "
+                  f"({'barrier-free' if args.barrier_free and args.stream else 'barrier'})")
     if args.auto_plan:
         switches = [s for s in res.stats
                     if s.get("event") == "plan-switch"]

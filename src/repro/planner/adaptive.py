@@ -36,6 +36,12 @@ class AdaptiveConfig:
     # HLO analyzer before picking the initial plan (cost.calibrate_machine;
     # compile-time heavy, cached per backend)
     calibrate: bool = False
+    # periodic re-calibration (requires calibrate=True): after a regrow /
+    # frontier refit / plan switch changed the lowered shapes
+    # (drivers call note_shape_change), refit K_COMPUTE / K_SCATTER /
+    # SORT_PASS_FRAC against freshly lowered probes — at most once per
+    # this many supersteps, so the probe compiles amortize. 0 = off.
+    recalibrate_every: int = 0
 
 
 class AdaptiveController:
@@ -55,6 +61,64 @@ class AdaptiveController:
         self._want: Optional[PhysicalPlan] = None
         self._streak = 0
         self._last_switch = -10 ** 9
+        self._shapes_dirty = False   # a regrow/refit/switch re-lowered
+        self._last_recal = -10 ** 9  # superstep of the last refit
+
+    # ---- hysteresis persistence (OOC checkpoint meta.json) -----------
+    def state_dict(self) -> dict:
+        """The mutable decision state a checkpoint must carry so a
+        resume right before a pending switch does not re-pay the
+        patience window: the candidate plan under consideration, its
+        consecutive-superstep streak, and the cooldown clock."""
+        return {
+            "want": dataclasses.asdict(self._want)
+            if self._want is not None else None,
+            "streak": int(self._streak),
+            "last_switch": int(self._last_switch),
+            "last_recal": int(self._last_recal),
+            "shapes_dirty": bool(self._shapes_dirty),
+        }
+
+    def load_state(self, state: dict):
+        if not state:
+            return
+        want = state.get("want")
+        self._want = PhysicalPlan(**want) if want else None
+        self._streak = int(state.get("streak", 0))
+        self._last_switch = int(state.get("last_switch", -10 ** 9))
+        self._last_recal = int(state.get("last_recal", -10 ** 9))
+        # a pending recalibration (shapes changed, window not yet
+        # elapsed at checkpoint time) must survive the resume, or the
+        # controller prices plans with stale constants forever
+        self._shapes_dirty = bool(state.get("shapes_dirty", False))
+
+    # ---- periodic re-calibration -------------------------------------
+    def note_shape_change(self):
+        """Drivers call this on regrow / frontier refit / plan switch:
+        the lowered superstep's shapes changed, so the fitted analytic
+        constants may be stale."""
+        self._shapes_dirty = True
+
+    def maybe_recalibrate(self, program, superstep: int):
+        """Re-run ``cost.calibrate_machine`` when (a) calibration is on,
+        (b) ``recalibrate_every`` is set, (c) a shape change was noted
+        since the last fit, and (d) at least ``recalibrate_every``
+        supersteps passed since then — amortizing the probe compiles.
+        Updates ``self.machine`` in place and returns the refit
+        constants (for the drivers' event stream), else None."""
+        cfg = self.config
+        if not (cfg.calibrate and cfg.recalibrate_every > 0
+                and self._shapes_dirty
+                and superstep - self._last_recal >= cfg.recalibrate_every):
+            return None
+        from repro.planner.cost import calibrate_machine
+        self.machine = calibrate_machine(program, self.g, self.machine,
+                                         refresh=True)
+        self._shapes_dirty = False
+        self._last_recal = superstep
+        return {"k_compute": self.machine.k_compute,
+                "k_scatter": self.machine.k_scatter,
+                "sort_pass_frac": self.machine.sort_pass_frac}
 
     def observe(self, rec: SuperstepStats, *,
                 bucket_cap: int = 0) -> Optional[PhysicalPlan]:
@@ -78,6 +142,14 @@ class AdaptiveController:
                           ooc=bool(rec.extra.get("ooc", False)),
                           streaming=bool(rec.extra.get("streaming",
                                                        False)),
+                          barrier_free=bool(rec.extra.get("barrier_free",
+                                                          False)),
+                          super_partitions=int(rec.extra.get(
+                              "super_partitions", 1)),
+                          readiness_stall_s=float(rec.extra.get(
+                              "readiness_stall_s", 0.0)),
+                          io_queue_depth=float(rec.extra.get(
+                              "io_queue_depth", 0.0)),
                           combinability=max(
                               float(rec.extra.get("combinability", 1.0)),
                               1.0),

@@ -76,6 +76,11 @@ class MachineModel:
                                  # faults and dirty write-backs cross it
                                  # when the buffer cache overflows its
                                  # memory_budget_bytes
+    host_mem_bw: float = 100e9   # bytes/s host DRAM (DDR-class); the
+                                 # serial inter-superstep inbox restack
+                                 # is a host-memory pass, not a PCIe or
+                                 # HBM one, and must be priced at host
+                                 # memory speed
     k_compute: float = K_COMPUTE
     k_scatter: float = K_SCATTER
     sort_pass_frac: float = SORT_PASS_FRAC
@@ -86,9 +91,11 @@ DEFAULT_MACHINE = MachineModel()
 # memory and the "host link" is a memcpy, not an ICI/PCIe hop — the host
 # drivers plan with this model (the delta-vs-inplace distinction survives:
 # scatter amplification vs streaming is a memory-system property). The
-# DISK is a real disk either way, so disk_bw keeps its default.
+# DISK is a real disk either way, so disk_bw keeps its default; "host
+# memory" is the same memory system as everything else here.
 EMULATED_MACHINE = MachineModel(link_bw=DEFAULT_MACHINE.hbm_bw,
-                                host_bw=DEFAULT_MACHINE.hbm_bw)
+                                host_bw=DEFAULT_MACHINE.hbm_bw,
+                                host_mem_bw=DEFAULT_MACHINE.hbm_bw)
 
 
 @dataclass(frozen=True)
@@ -138,6 +145,22 @@ class Observation:
     # compute, so the model prices the superstep as max(step, transfer)
     # instead of step + transfer (PlanCost.overlap_host).
     streaming: bool = False
+    # True when the executor runs the BARRIER-FREE superstep pipeline
+    # (core/ooc.py barrier_free=True): the inter-superstep inbox rebuild
+    # and mutation apply run per destination, overlapped with the next
+    # superstep's compute, so only 1/super_partitions of that work stays
+    # on the serial critical path (the first destination's prepare) —
+    # the barrier executor pays all of it serially.
+    barrier_free: bool = False
+    # super-partitions the OOC stream cycles through (P / budget): sets
+    # the serial share of the rebuild under barrier-free execution.
+    super_partitions: int = 1
+    # observed device-idle gap between supersteps (seconds) and the I/O
+    # engine's queue depth — surfaced for diagnostics/benchmarks; the
+    # model prices the rebuild analytically (plan-dependent), not from
+    # the observed stall, which mixes in compile and fold noise.
+    readiness_stall_s: float = 0.0
+    io_queue_depth: float = 0.0
     # messages per DISTINCT destination, measured from the run-structured
     # host inbox (>= 1). High combinability means a sender combine
     # collapses the inbox that crosses the host link; ~1 means the
@@ -170,6 +193,12 @@ class PlanCost:
     # concurrently with the device, so total seconds =
     # max(device, host, disk) instead of their sum
     overlap_host: bool = False
+    # SERIAL leg of the critical path: inter-superstep work no pipeline
+    # overlaps (the barrier executor's whole inbox rebuild; barrier-free
+    # keeps only the first destination's share). Added on top of the
+    # overlap max — this is what turns the streamed ``max(device, host,
+    # disk)`` formula into a critical-path estimate.
+    serial_seconds: float = 0.0
 
     def add(self, term: str, machine: MachineModel, *, flops: float = 0.0,
             bytes: float = 0.0, exchange_bytes: float = 0.0,
@@ -184,6 +213,17 @@ class PlanCost:
             exchange_bytes / machine.link_bw +
             host_bytes / machine.host_bw +
             disk_bytes / machine.disk_bw)
+
+    def add_serial(self, term: str, machine: MachineModel, *,
+                   bytes: float = 0.0):
+        """Host-memory traffic on the SERIAL inter-superstep path (the
+        readiness leg): charged at host DRAM bandwidth
+        (``machine.host_mem_bw`` — not device HBM, which would
+        underprice the leg ~8x on the default machine) and excluded
+        from the overlap max — the device is idle while it runs."""
+        s = bytes / machine.host_mem_bw
+        self.serial_seconds += s
+        self.terms[term] = self.terms.get(term, 0.0) + s
 
     def device_seconds(self, machine: MachineModel = DEFAULT_MACHINE) \
             -> float:
@@ -204,14 +244,17 @@ class PlanCost:
         hst = self.host_seconds(machine)
         dsk = self.disk_seconds(machine)
         if self.overlap_host:
-            # the streaming executor hides the slower legs behind the
-            # slowest; steady state settles at max(device, host_link,
-            # disk). The small residual breaks ties among transfer-bound
-            # plans toward the one doing less total work (overlap is
-            # never quite perfect, and less hidden work frees the
-            # pipeline sooner).
-            return max(dev, hst, dsk) + 1e-3 * (dev + hst + dsk)
-        return dev + hst + dsk
+            # CRITICAL-PATH estimate: the streaming executor hides the
+            # slower legs behind the slowest — steady state settles at
+            # max(device, host_link, disk) — plus the serial readiness
+            # leg nothing overlaps (the inter-superstep rebuild share).
+            # The small residual breaks ties among transfer-bound plans
+            # toward the one doing less total work (overlap is never
+            # quite perfect, and less hidden work frees the pipeline
+            # sooner).
+            return (max(dev, hst, dsk) + self.serial_seconds
+                    + 1e-3 * (dev + hst + dsk))
+        return dev + hst + dsk + self.serial_seconds
 
 
 def bucket_cap(plan: PhysicalPlan, g: GraphStats, slack: float = 1.5) -> int:
@@ -369,9 +412,23 @@ def estimate(plan: PhysicalPlan, g: GraphStats, obs: Observation,
             writes = inbox_up + (cd * vblock if plan.storage == "delta"
                                  else vblock)
             c.add("disk_io", machine, disk_bytes=reads + writes)
+        # INTER-SUPERSTEP READINESS LEG: the run-structured inbox
+        # restack (source-major stack -> destination-major transpose ->
+        # trim) streams the inbox through host memory twice. Under the
+        # barrier executor it all runs serially between supersteps (the
+        # device idles); barrier-free keeps only the FIRST destination's
+        # share on the critical path — the rest overlaps the next
+        # superstep's compute. Plan-dependent through the inbox
+        # occupancy (a sender combine shrinks what must be restacked),
+        # which is what lets the optimizer trade rebuild time against
+        # combine cost under either schedule.
+        rebuild = 2.0 * inbox_up
+        if obs.barrier_free:
+            rebuild /= max(obs.super_partitions, 1)
+        c.add_serial("inbox_rebuild", machine, bytes=rebuild)
         # the pipelined executor overlaps the host link and the disk
-        # with compute: rank plans by max(device, host, disk) instead of
-        # their sum
+        # with compute: rank plans by max(device, host, disk) (plus the
+        # serial readiness leg) instead of their sum
         c.overlap_host = bool(obs.streaming)
     return c
 
@@ -480,18 +537,21 @@ def _fit_constants(program, g: GraphStats, machine: MachineModel):
 
 
 def calibrate_machine(program, g: GraphStats,
-                      machine: MachineModel = DEFAULT_MACHINE
-                      ) -> MachineModel:
-    """One-shot startup calibration (opt-in via
-    ``AdaptiveConfig.calibrate``): lower probe supersteps on the CURRENT
-    backend, measure them with the trip-count-aware HLO analyzer and
-    return a MachineModel whose analytic constants are refit to what this
-    backend's compiler actually emits, instead of the hand-tuned
-    K_COMPUTE / K_SCATTER / SORT_PASS_FRAC. Compile-time heavy, so the
-    fit is cached per backend for the life of the process."""
+                      machine: MachineModel = DEFAULT_MACHINE,
+                      *, refresh: bool = False) -> MachineModel:
+    """Startup calibration (opt-in via ``AdaptiveConfig.calibrate``):
+    lower probe supersteps on the CURRENT backend, measure them with the
+    trip-count-aware HLO analyzer and return a MachineModel whose
+    analytic constants are refit to what this backend's compiler
+    actually emits, instead of the hand-tuned K_COMPUTE / K_SCATTER /
+    SORT_PASS_FRAC. Compile-time heavy, so the fit is cached per backend
+    for the life of the process; ``refresh=True`` bypasses the cache and
+    refits in place — the periodic re-calibration path
+    (``AdaptiveConfig.recalibrate_every``) uses it after a regrow /
+    refit / plan switch changes the lowered shapes."""
     import jax
     key = (jax.default_backend(), program.combine_op)
-    if key not in _CALIBRATED:
+    if refresh or key not in _CALIBRATED:
         _CALIBRATED[key] = _fit_constants(program, g, machine)
     kc, ks, sp = _CALIBRATED[key]
     return dataclasses.replace(machine, k_compute=kc, k_scatter=ks,

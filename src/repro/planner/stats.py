@@ -22,14 +22,24 @@ write-back), so benchmarks can report how close a superstep runs to the
 aggregates them into ``BENCH_ooc.json``).
 
 The disk tier (storage/ buffer cache) adds ``spill`` (True when a memory
-budget forces paging), the per-superstep pager ``cache_hit_rate`` and
+budget forces paging), the pager ``cache_hit_rate`` and
 ``spill_read_bytes`` / ``spill_write_bytes`` (the disk-bandwidth axis of
 the cost model, archived per run in ``BENCH_storage.json``), plus
 ``pager_resident_bytes`` / ``pager_peak_bytes`` (what the budget test
-asserts against). ``combinability`` (messages per distinct destination,
-measured from the run-structured inbox) and ``mutation_rate`` (host
+asserts against). All pager counters are PER-SUPERSTEP interval
+counters (``BufferPool.take_interval`` resets them at every record), so
+the planner conditions on current — not cumulative — paging behavior.
+``combinability`` (messages per distinct destination, measured from the
+collected bucket blocks at commit time) and ``mutation_rate`` (host
 mutation-inbox proposals per live vertex) close the remaining replan
 loops: they price the sender_combine dimension and the mutation traffic.
+
+The barrier-free superstep pipeline adds ``barrier_free``,
+``super_partitions``, ``readiness_stall_s`` (the device-idle gap between
+a superstep's last collect and the next superstep's first dispatch — the
+serial leg the rolling frontier minimizes; ``BENCH_pipeline.json``
+reports it per executor) and the background I/O engine's
+``io_queue_depth`` / ``io_queue_depth_mean``.
 ``AdaptiveController.observe`` lifts all of these into the cost model's
 ``Observation``.
 """

@@ -62,7 +62,8 @@ def save_checkpoint(ckpt_dir: str, superstep: int, vert: VertexRel,
 
 def save_ooc_checkpoint(ckpt_dir: str, superstep: int, store, gs, *,
                         inbox_gen: int, inbox_width: int,
-                        sp: int, plan=None, ec=None) -> str:
+                        sp: int, plan=None, ec=None,
+                        controller_state=None) -> str:
     """Snapshot an out-of-core job at a superstep boundary. Pages move at
     the file level (hard-link for immutable inbox generations, kernel
     copy otherwise — no DRAM round-trip on the disk tier; the pure-DRAM
@@ -100,6 +101,11 @@ def save_ooc_checkpoint(ckpt_dir: str, superstep: int, store, gs, *,
                    "frontier_cap": ec.frontier_cap,
                    "mutation_cap": ec.mutation_cap}
                   if ec is not None else None),
+         # the AdaptiveController's hysteresis state (pending-switch
+         # candidate / streak / cooldown clock), so a resume right
+         # before a pending plan switch does not re-pay the patience
+         # window from scratch
+         "controller": controller_state,
          "saved_at": time.time()}))
     final = d / name
     if final.exists():

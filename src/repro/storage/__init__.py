@@ -9,16 +9,22 @@ the TPU-adapted runtime:
                   in-flight pipeline slots, lazy dirty-page write-back
 * ``spillfile`` — mmap-backed ``.npy`` page files with atomic writes
                   (sequential I/O; hard-link-safe for checkpoints)
+* ``io_engine`` — background page-I/O worker threads: readahead of the
+                  next dispatchable destination's pages, coalesced
+                  dirty-page drain in eviction order, pin-aware
+                  scheduling (eviction never blocks on in-flight I/O)
 * ``tiered``    — ``TieredStore``, the facade ``core/ooc.py``'s
                   dispatcher/collector runs on instead of raw host arrays
 
 Entry points: ``run_out_of_core(..., memory_budget_bytes=...,
-disk_dir=..., eviction=...)`` and the CLI flags ``--disk-dir`` /
-``--memory-budget-bytes`` / ``--eviction``.
+disk_dir=..., eviction=..., io_threads=..., readahead_pages=...)`` and
+the CLI flags ``--disk-dir`` / ``--memory-budget-bytes`` /
+``--eviction`` / ``--io-threads`` / ``--readahead-pages``.
 """
+from repro.storage.io_engine import IOEngine
 from repro.storage.pager import EVICTION_POLICIES, BufferPool, Page
 from repro.storage.spillfile import SpillDir, SpillSlot
 from repro.storage.tiered import TieredStore
 
-__all__ = ["EVICTION_POLICIES", "BufferPool", "Page", "SpillDir",
-           "SpillSlot", "TieredStore"]
+__all__ = ["EVICTION_POLICIES", "BufferPool", "IOEngine", "Page",
+           "SpillDir", "SpillSlot", "TieredStore"]

@@ -1,0 +1,194 @@
+"""Background page-I/O engine: disk reads/writes off the critical path.
+
+The disk tier (PR 4) made page faults and dirty write-backs *lazy*, but
+they still ran synchronously on whichever thread touched the pool — the
+OOC dispatcher paid a disk read for every faulted page and the collector
+paid a disk write for every eviction under budget pressure. This module
+owns that I/O on worker threads instead (GraphD/GraphH discipline: an
+out-of-core engine must overlap its disk leg with everything else):
+
+* **Readahead** — the executor announces the pages the next dispatchable
+  destination will touch (``prefetch``); non-resident ones fault in from
+  their spill files in the background, so the foreground ``get`` that
+  follows is a DRAM hit. A readahead that loses the race to a foreground
+  fault simply drops its bytes; a readahead that *fails* is recorded and
+  retried synchronously by the foreground fault, which surfaces the real
+  error to the caller.
+* **Dirty-page drain** — under budget pressure the engine writes back
+  cold dirty pages ahead of eviction (``clean_ahead`` targets pages in
+  eviction order), so the evictor finds CLEAN victims and drops them
+  without blocking on disk. Writes are COALESCED: a page queued while a
+  write for it is already queued is enqueued once, and a page re-dirtied
+  after its write-back simply stays dirty (the pool's per-page version
+  counter detects the race) to be drained again later.
+* **Pin-aware scheduling** — pages with in-flight engine I/O are marked
+  ``io_busy`` and are never eviction victims (``pager._victim`` skips
+  them), so eviction never blocks behind the engine; the engine likewise
+  never writes a page mid-replacement (versioning) and performs all disk
+  I/O *outside* the pool lock.
+
+Worker failures never kill the run silently: per-key errors are kept in
+``errors`` (read failures re-raise from the foreground fault; write
+failures leave the page dirty for the synchronous ``flush`` fallback to
+surface). ``close`` drains the queue — dirty pages handed to the engine
+are on disk before shutdown returns.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Optional
+
+_SENTINEL = object()
+
+
+class IOEngine:
+    """Worker thread(s) owning a ``BufferPool``'s spill-tier I/O."""
+
+    def __init__(self, pool, *, threads: int = 1,
+                 readahead_pages: int = 8):
+        if threads < 1:
+            raise ValueError("io engine needs at least one worker thread")
+        self.pool = pool
+        self.readahead_pages = int(readahead_pages)
+        self._q: queue.Queue = queue.Queue()
+        self._mu = threading.Lock()
+        self._queued: set = set()        # (op, key) pending — coalescing
+        self._idle = threading.Condition(self._mu)
+        self._outstanding = 0            # queued + in-flight items
+        self.errors: dict = {}           # key -> last exception
+        self.reads = 0                   # completed readahead faults
+        self.read_bytes = 0
+        self.writes = 0                  # completed background drains
+        self.write_bytes = 0
+        self.dropped = 0                 # readaheads beaten by foreground
+        self._depth_peak = 0
+        self._depth_sum = 0
+        self._depth_n = 0
+        self._closed = False
+        self._workers = [
+            threading.Thread(target=self._run, name=f"pregelix-io-{k}",
+                             daemon=True)
+            for k in range(int(threads))]
+        for w in self._workers:
+            w.start()
+
+    # ---- scheduling --------------------------------------------------
+    def _enqueue(self, op: str, key) -> bool:
+        with self._mu:
+            if self._closed or (op, key) in self._queued:
+                return False
+            self._queued.add((op, key))
+            self._outstanding += 1
+            depth = self._outstanding
+            self._depth_peak = max(self._depth_peak, depth)
+            self._depth_sum += depth
+            self._depth_n += 1
+        self._q.put((op, key))
+        return True
+
+    def prefetch(self, keys) -> int:
+        """Schedule background faults for up to ``readahead_pages`` of
+        ``keys`` that are present-but-not-resident. Returns the number
+        scheduled."""
+        n = 0
+        for key in keys:
+            if n >= self.readahead_pages:
+                break
+            if self.pool.wants_prefetch(key) and self._enqueue("read", key):
+                n += 1
+        return n
+
+    def clean_ahead(self, limit: int = 4) -> int:
+        """Schedule write-backs for up to ``limit`` dirty unpinned pages
+        in EVICTION ORDER (the pages the evictor would reach next), so a
+        future eviction finds clean victims it can drop without I/O."""
+        n = 0
+        for key in self.pool.dirty_eviction_candidates(limit):
+            if self._enqueue("write", key):
+                n += 1
+        return n
+
+    # ---- worker ------------------------------------------------------
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is _SENTINEL:
+                self._q.task_done()
+                return
+            op, key = item
+            try:
+                if op == "read":
+                    nbytes = self.pool.fault_background(key)
+                    with self._mu:
+                        if nbytes is None:
+                            self.dropped += 1
+                        else:
+                            self.reads += 1
+                            self.read_bytes += nbytes
+                            self.errors.pop(key, None)
+                else:
+                    nbytes = self.pool.writeback_background(key)
+                    if nbytes is not None:
+                        with self._mu:
+                            self.writes += 1
+                            self.write_bytes += nbytes
+                            self.errors.pop(key, None)
+            except Exception as e:  # noqa: BLE001 — surfaced via errors
+                with self._mu:
+                    self.errors[key] = e
+            finally:
+                with self._mu:
+                    self._queued.discard((op, key))
+                    self._outstanding -= 1
+                    if self._outstanding == 0:
+                        self._idle.notify_all()
+                self._q.task_done()
+
+    # ---- lifecycle / statistics --------------------------------------
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until every queued request has completed."""
+        with self._idle:
+            return self._idle.wait_for(lambda: self._outstanding == 0,
+                                       timeout=timeout)
+
+    def close(self):
+        """Drain outstanding I/O and stop the workers. Dirty pages whose
+        write-backs were queued are on disk when this returns."""
+        if self._closed:
+            return
+        self.drain()
+        with self._mu:
+            self._closed = True
+        for _ in self._workers:
+            self._q.put(_SENTINEL)
+        for w in self._workers:
+            w.join(timeout=30.0)
+
+    def stats(self) -> dict:
+        with self._mu:
+            mean = (self._depth_sum / self._depth_n) if self._depth_n else 0.0
+            return {
+                "io_reads": self.reads, "io_read_bytes": self.read_bytes,
+                "io_writes": self.writes,
+                "io_write_bytes": self.write_bytes,
+                "io_dropped_readaheads": self.dropped,
+                "io_queue_depth_peak": self._depth_peak,
+                "io_queue_depth_mean": mean,
+                "io_errors": len(self.errors),
+            }
+
+    def take_interval(self) -> dict:
+        """Per-superstep view: returns current depth statistics and
+        resets the interval accumulators (the satellite counterpart of
+        ``BufferPool.take_interval``)."""
+        with self._mu:
+            out = {
+                "io_queue_depth_peak": self._depth_peak,
+                "io_queue_depth_mean": (self._depth_sum / self._depth_n
+                                        if self._depth_n else 0.0),
+            }
+            self._depth_peak = self._outstanding
+            self._depth_sum = 0
+            self._depth_n = 0
+            return out

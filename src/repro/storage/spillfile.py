@@ -22,6 +22,7 @@ from __future__ import annotations
 import os
 import re
 import shutil
+import threading
 from pathlib import Path
 
 import numpy as np
@@ -44,8 +45,11 @@ class SpillSlot:
         return self.path.exists()
 
     def store(self, arr: np.ndarray):
-        """Sequential, atomic write-back of the whole page."""
-        tmp = self.path.with_name("." + self.path.name + ".tmp")
+        """Sequential, atomic write-back of the whole page. The temp
+        file is thread-unique so a background I/O-engine drain and a
+        foreground flush can never collide on it."""
+        tmp = self.path.with_name(
+            f".{self.path.name}.{threading.get_ident()}.tmp")
         mm = np.lib.format.open_memmap(tmp, mode="w+", dtype=arr.dtype,
                                        shape=arr.shape)
         mm[...] = arr

@@ -15,6 +15,15 @@ host link. Dynamic pages (run-structured inbox generations, collected
 out-blocks, mutation blocks) share the same pool and budget via the raw
 ``put_page``/``get_page`` API.
 
+When ``io_threads > 0`` (and a disk dir is configured) the store owns a
+background page-I/O engine (``storage.io_engine``): ``readahead(keys)``
+schedules the next dispatchable destination's page faults off the
+critical path, and every readahead tick also drains cold dirty pages
+(write coalescing, eviction-order targeting) so foreground evictions
+find clean victims. ``flush`` drains the engine before the synchronous
+write-back pass, and ``close`` shuts it down with the dirty queue
+drained — see the engine's module docstring for the locking/pin rules.
+
 With ``disk_dir=None`` and no budget the store degenerates to the pure
 DRAM tier (every page stays resident; zero I/O) — the disk tier is a
 strictly additive layer, which is what makes the disk-vs-DRAM parity
@@ -34,11 +43,18 @@ class TieredStore:
     """Named, super-partition-chunked relations over a ``BufferPool``."""
 
     def __init__(self, *, n_sp: int, budget_bytes: Optional[int] = None,
-                 disk_dir: Optional[str] = None, policy: str = "lru"):
+                 disk_dir: Optional[str] = None, policy: str = "lru",
+                 io_threads: int = 0, readahead_pages: int = 8):
         self.n_sp = int(n_sp)
         self.spill = SpillDir(disk_dir) if disk_dir else None
         self.pool = BufferPool(budget_bytes, policy=policy,
                                spill=self.spill)
+        self.engine = None
+        if io_threads > 0 and self.spill is not None:
+            from repro.storage.io_engine import IOEngine
+            self.engine = IOEngine(self.pool, threads=io_threads,
+                                   readahead_pages=readahead_pages)
+            self.pool.attach_engine(self.engine)
         self._relations: dict = {}   # name -> per-chunk row counts
 
     @property
@@ -100,14 +116,39 @@ class TieredStore:
     def delete_page(self, key):
         self.pool.delete(key)
 
+    # ---- background I/O ----------------------------------------------
+    def readahead(self, keys):
+        """Schedule background faults for ``keys`` (the pages the next
+        dispatchable destination will touch) and a clean-ahead pass over
+        cold dirty pages. No-op without an engine — the DRAM tier has no
+        disk leg to hide."""
+        if self.engine is None:
+            return 0
+        self.engine.clean_ahead()
+        return self.engine.prefetch(keys)
+
     # ---- statistics / checkpoint surface -----------------------------
     def stats(self) -> dict:
-        return self.pool.stats()
+        d = self.pool.stats()
+        if self.engine is not None:
+            d.update(self.engine.stats())
+        return d
+
+    def take_interval(self) -> dict:
+        """Per-superstep counters (pager + I/O engine) since the last
+        call — what the OOC statistics stream records, so the planner
+        observes current paging behavior, not cumulative."""
+        d = self.pool.take_interval()
+        if self.engine is not None:
+            d.update(self.engine.take_interval())
+        return d
 
     def page_keys(self):
         return self.pool.keys()
 
     def flush(self):
+        if self.engine is not None:
+            self.engine.drain()
         self.pool.flush()
 
     def export_page(self, key, dst_path):
@@ -148,4 +189,6 @@ class TieredStore:
             self._relations[relation] = rows
 
     def close(self, *, delete_files: bool = True):
+        if self.engine is not None:
+            self.engine.close()
         self.pool.close(delete_files=delete_files)

@@ -1,0 +1,470 @@
+"""Barrier-free superstep pipeline + background page-I/O engine suite.
+
+The PR-5 executor removes the two global stalls PR 3/4 left per
+superstep: the inbox-rebuild/GS-fold barrier between supersteps
+(per-destination readiness: rebuild and mutation-apply roll forward one
+destination at a time, overlapped with the next superstep's compute)
+and synchronous page faults/write-backs on the dispatcher/collector
+thread (the ``storage/io_engine`` worker). Both are pure scheduling
+changes, so the bar is the same as every other executor mode:
+BIT-FOR-BIT parity with the synchronous loop — including mutations, the
+disk tier, mid-pipeline regrows spanning the rolling frontier, and
+checkpoint/resume — plus fault-injection coverage for the engine
+(failed/delayed reads surface cleanly, dirty pages drain on shutdown,
+eviction never blocks on in-flight I/O) and the controller-state /
+re-calibration / per-superstep-counter satellites.
+"""
+import dataclasses
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, PhysicalPlan, gather_values,
+                        load_graph, run_host)
+from repro.core.ooc import run_out_of_core
+from repro.graph import SSSP, ConnectedComponents, PageRank, chain_graph, \
+    rmat_graph
+from repro.storage import BufferPool, IOEngine, SpillDir, TieredStore
+from repro.storage.spillfile import SpillSlot
+
+N = 220
+EDGES = rmat_graph(N, 1200, seed=7)
+ALGOS = {
+    "pagerank": (lambda: PageRank(N, iterations=6), 2),
+    "sssp": (lambda: SSSP(source=3), 1),
+    "cc": (lambda: ConnectedComponents(), 1),
+}
+_BUDGET = 16 * 1024
+_SYNC_REF = {}
+
+
+def _sync_ref(algo: str):
+    """The reference: the fully synchronous loop (stream=False), at the
+    same super-partitioning as the pipelined runs — the float aggregate
+    folds per super-partition, so the counts must match for
+    bit-equality."""
+    if algo not in _SYNC_REF:
+        mk, vd = ALGOS[algo]
+        vert = load_graph(EDGES, N, P=4, value_dims=vd)
+        res = run_out_of_core(vert, mk(), mk().suggested_plan,
+                              budget_partitions=1, max_supersteps=30,
+                              stream=False)
+        _SYNC_REF[algo] = (gather_values(res.vertex, N), res.supersteps,
+                           np.asarray(res.gs.aggregate))
+    return _SYNC_REF[algo]
+
+
+# ------------------------------------------------- bit-for-bit parity
+
+@pytest.mark.parametrize("algo", list(ALGOS))
+def test_barrier_free_matches_sync_bit_for_bit(algo):
+    """barrier-free == barrier == synchronous, exactly — values,
+    superstep count and the order-sensitive float aggregate."""
+    vals, steps, agg = _sync_ref(algo)
+    mk, vd = ALGOS[algo]
+    for bf in (False, True):
+        vert = load_graph(EDGES, N, P=4, value_dims=vd)
+        res = run_out_of_core(vert, mk(), mk().suggested_plan,
+                              budget_partitions=1, max_supersteps=30,
+                              stream=True, barrier_free=bf,
+                              prefetch_depth=3)
+        assert np.array_equal(gather_values(res.vertex, N), vals), bf
+        assert res.supersteps == steps
+        assert np.array_equal(np.asarray(res.gs.aggregate), agg)
+    recs = [s for s in res.stats if "wall_s" in s]
+    assert recs and all(s["barrier_free"] for s in recs)
+    assert all(s["readiness_stall_s"] >= 0.0 for s in recs)
+    assert all(s["super_partitions"] == 4 for s in recs)
+
+
+@pytest.mark.parametrize("algo", list(ALGOS))
+def test_barrier_free_disk_tier_with_io_engine_parity(algo, tmp_path):
+    """The full stack at once: barrier-free + spilling buffer cache +
+    background I/O engine (readahead + dirty drain) — still bit-for-bit
+    with the synchronous DRAM loop."""
+    vals, steps, _ = _sync_ref(algo)
+    mk, vd = ALGOS[algo]
+    vert = load_graph(EDGES, N, P=4, value_dims=vd)
+    res = run_out_of_core(vert, mk(), mk().suggested_plan,
+                          budget_partitions=2, max_supersteps=30,
+                          stream=True, barrier_free=True,
+                          memory_budget_bytes=_BUDGET, disk_dir=tmp_path,
+                          eviction="mru", io_threads=2,
+                          readahead_pages=16)
+    assert np.array_equal(gather_values(res.vertex, N), vals)
+    assert res.supersteps == steps
+    recs = [s for s in res.stats if "wall_s" in s]
+    assert recs and all(s["spill"] for s in recs)
+    assert all(s["io_queue_depth"] >= 0 for s in recs)
+
+
+def test_barrier_free_mutations_parity():
+    """Cross-super-partition inserts under the rolling frontier: the
+    per-destination mutation apply (deferred into prepare) must match
+    run_host exactly — including the final superstep's mutations, which
+    the loop-exit path must land before the gather."""
+    from tests.test_storage import CrossInsert, _cross_insert_ref
+    ref = _cross_insert_ref(N, 3)
+    for bf in (False, True):
+        vert = load_graph(EDGES, N, P=4, value_dims=1)
+        prog = CrossInsert(N, 3)
+        res = run_out_of_core(vert, prog, prog.suggested_plan,
+                              budget_partitions=2, max_supersteps=5,
+                              stream=True, barrier_free=bf)
+        assert np.array_equal(gather_values(res.vertex, N), ref), bf
+
+
+def test_barrier_free_mutations_applied_at_max_supersteps_cutoff():
+    """Stop the run on the exact superstep that PROPOSES inserts: the
+    rolling frontier defers their application to the next superstep's
+    prepare, which never comes — the exit path must apply them anyway,
+    mirroring run_host (whose in-step apply includes them)."""
+    from tests.test_storage import CrossInsert
+    prog = CrossInsert(N, 3)
+    ref = run_host(load_graph(EDGES, N, P=4, value_dims=1), prog,
+                   prog.suggested_plan, max_supersteps=1)
+    res = run_out_of_core(load_graph(EDGES, N, P=4, value_dims=1),
+                          CrossInsert(N, 3), prog.suggested_plan,
+                          budget_partitions=2, max_supersteps=1,
+                          stream=True, barrier_free=True)
+    assert np.array_equal(gather_values(res.vertex, N),
+                          gather_values(ref.vertex, N))
+
+
+def test_regrow_while_rolling_frontier_spans_supersteps():
+    """A bucket overflow landing while the rolling frontier has later
+    destinations still unprepared (window < n_sp, so chunks of the
+    in-flight generation are built lazily while earlier destinations
+    compute — destination state of two adjacent generations coexists in
+    the store): the deferred regrow must unwind, pad the committed
+    generation-g+1 blocks, redo, and stay bit-for-bit."""
+    prog = SSSP(source=3)
+    ec = EngineConfig(n_parts=4, bucket_cap=2, frontier_cap=0)
+    outs = {}
+    for bf in (False, True):
+        vert = load_graph(EDGES, N, P=4, value_dims=1)
+        res = run_out_of_core(vert, SSSP(source=3), prog.suggested_plan,
+                              budget_partitions=1, max_supersteps=30,
+                              ec=ec, stream=True, barrier_free=bf,
+                              prefetch_depth=2)
+        regrows = [s for s in res.stats if s.get("event") == "regrow"]
+        assert regrows and regrows[-1]["bucket_cap"] > 2
+        outs[bf] = gather_values(res.vertex, N)
+    assert np.array_equal(outs[True], outs[False])
+    assert np.array_equal(outs[True], _sync_ref("sssp")[0])
+
+
+def test_checkpoint_resume_under_barrier_free(tmp_path):
+    """Checkpoints synchronize the rolling frontier (the saved inbox
+    generation is complete, mutations applied); resuming lands on the
+    identical final state."""
+    prog = SSSP(source=3)
+    vert = load_graph(EDGES, N, P=4, value_dims=1)
+    full = run_out_of_core(vert, prog, prog.suggested_plan,
+                           budget_partitions=2, max_supersteps=30,
+                           stream=True, barrier_free=True,
+                           checkpoint_every=2,
+                           checkpoint_dir=str(tmp_path))
+    ck = tmp_path / "ooc_000002"
+    assert (ck / "meta.json").exists()
+    res = run_out_of_core(None, SSSP(source=3), prog.suggested_plan,
+                          budget_partitions=2, max_supersteps=30,
+                          stream=True, barrier_free=True,
+                          resume_from=str(ck))
+    assert res.supersteps == full.supersteps
+    assert np.array_equal(gather_values(res.vertex, N),
+                          gather_values(full.vertex, N))
+
+
+# --------------------------------------- controller state & recalibrate
+
+def test_checkpoint_persists_controller_hysteresis_state(tmp_path):
+    """The OOC checkpoint meta carries the AdaptiveController's
+    window/streak/cooldown state, and resume restores it — a resume
+    right before a pending switch must not re-pay the patience window."""
+    prog = SSSP(source=3)
+    vert = load_graph(EDGES, N, P=4, value_dims=1)
+    run_out_of_core(vert, prog, "auto", budget_partitions=2,
+                    max_supersteps=6, checkpoint_every=2,
+                    checkpoint_dir=str(tmp_path))
+    meta = json.loads((tmp_path / "ooc_000002" / "meta.json").read_text())
+    assert meta["controller"] is not None
+    assert {"want", "streak", "last_switch", "last_recal"} <= \
+        set(meta["controller"])
+
+
+def test_controller_state_roundtrip_mid_patience():
+    """state_dict/load_state reproduce a half-served patience window:
+    the restored controller switches after ONE more preferring
+    superstep, not a full fresh window."""
+    from repro.planner import AdaptiveConfig, GraphStats
+    from repro.planner.adaptive import AdaptiveController
+    from repro.planner.stats import SuperstepStats
+    g = GraphStats(n_vertices=100_000, n_edges=800_000, n_partitions=8,
+                   vertex_capacity=16_250, edge_capacity=100_000)
+    prog = SSSP(source=0)
+    cfg = AdaptiveConfig(patience=2, cooldown=0, min_superstep=0)
+    full = PhysicalPlan(join="full_outer")
+    rec = lambda i: SuperstepStats(superstep=i, active=50,
+                                   frontier_density=50 / 100_000)
+    c1 = AdaptiveController(prog, g, full, cfg)
+    assert c1.observe(rec(3)) is None          # streak 1 of 2
+    state = c1.state_dict()
+    assert state["want"] is not None and state["streak"] == 1
+    c2 = AdaptiveController(prog, g, full, cfg)
+    c2.load_state(state)
+    switched = c2.observe(rec(4))              # streak 2 -> switch
+    assert switched is not None and switched.join == "left_outer"
+    # a fresh controller at the same superstep would still be waiting
+    c3 = AdaptiveController(prog, g, full, cfg)
+    assert c3.observe(rec(4)) is None
+
+
+def test_maybe_recalibrate_amortizes_and_requires_shape_change(
+        monkeypatch):
+    """Re-calibration fires only when (calibrate on, recalibrate_every
+    set, shapes changed, N supersteps since the last fit) all hold —
+    and updates the controller's machine in place."""
+    import repro.planner.adaptive as adaptive_mod
+    from repro.planner import AdaptiveConfig, GraphStats
+    from repro.planner.adaptive import AdaptiveController
+    from repro.planner.cost import DEFAULT_MACHINE
+    calls = []
+
+    def fake_calibrate(program, g, machine, refresh=False):
+        calls.append(refresh)
+        return dataclasses.replace(machine, k_compute=42.0)
+
+    monkeypatch.setattr("repro.planner.cost.calibrate_machine",
+                        fake_calibrate)
+    g = GraphStats(n_vertices=100, n_edges=400, n_partitions=4,
+                   vertex_capacity=32, edge_capacity=128)
+    prog = SSSP(source=0)
+    cfg = AdaptiveConfig(calibrate=True, recalibrate_every=3)
+    c = AdaptiveController(prog, g, PhysicalPlan(), cfg,
+                           machine=DEFAULT_MACHINE)
+    assert c.maybe_recalibrate(prog, 1) is None      # no shape change
+    c.note_shape_change()
+    out = c.maybe_recalibrate(prog, 1)
+    assert out is not None and out["k_compute"] == 42.0
+    assert calls == [True] and c.machine.k_compute == 42.0
+    c.note_shape_change()
+    assert c.maybe_recalibrate(prog, 2) is None      # within the window
+    assert c.maybe_recalibrate(prog, 4) is not None  # window elapsed
+    assert len(calls) == 2
+    # recalibrate_every=0 (default) never refits
+    c0 = AdaptiveController(prog, g, PhysicalPlan(),
+                            AdaptiveConfig(calibrate=True))
+    c0.note_shape_change()
+    assert c0.maybe_recalibrate(prog, 50) is None
+
+
+# -------------------------------------------- per-superstep counters
+
+def test_pager_counters_reset_per_superstep(tmp_path):
+    """The statistics stream carries INTERVAL pager counters: each
+    record reflects only its own superstep's paging (they sum to the
+    pool's cumulative totals), so the planner observes current — not
+    cumulative — behavior."""
+    prog = PageRank(N, iterations=6)
+    vert = load_graph(EDGES, N, P=4, value_dims=2)
+    res = run_out_of_core(vert, prog, prog.suggested_plan,
+                          budget_partitions=2, max_supersteps=10,
+                          memory_budget_bytes=_BUDGET,
+                          disk_dir=tmp_path, io_threads=0)
+    recs = [s for s in res.stats if "spill_read_bytes" in s]
+    assert len(recs) >= 3
+    # steady-state supersteps page similar amounts: a cumulative counter
+    # would grow monotonically instead
+    steady = [s["spill_read_bytes"] for s in recs[1:]]
+    assert max(steady) < sum(steady), "per-superstep, not cumulative"
+    assert all(0.0 <= s["cache_hit_rate"] <= 1.0 for s in recs)
+
+
+def test_take_interval_resets_and_sums_to_cumulative(tmp_path):
+    pool = BufferPool(2 * 4096, policy="lru", spill=SpillDir(tmp_path))
+    a = np.zeros((1024,), np.float32)   # 4 KiB pages
+    for i in range(3):
+        pool.put(i, a + i)
+    pool.get(0)
+    i1 = pool.take_interval()
+    assert i1["evictions"] >= 1 and i1["misses"] >= 1
+    i2 = pool.take_interval()
+    assert i2["misses"] == 0 and i2["spill_read_bytes"] == 0
+    pool.get(1)
+    i3 = pool.take_interval()
+    total = pool.stats()
+    assert i1["misses"] + i2["misses"] + i3["misses"] == total["misses"]
+
+
+# ------------------------------------------------- I/O engine unit tests
+
+def _engine_pool(tmp_path, budget_pages=2, threads=1, **kw):
+    pool = BufferPool(budget_pages * 4096, policy="lru",
+                      spill=SpillDir(tmp_path))
+    engine = IOEngine(pool, threads=threads, **kw)
+    pool.attach_engine(engine)
+    return pool, engine
+
+
+def _page(i):
+    return np.full((1024,), i, np.float32)   # 4 KiB
+
+
+def test_engine_readahead_turns_fault_into_hit(tmp_path):
+    pool, engine = _engine_pool(tmp_path, readahead_pages=8)
+    try:
+        for i in range(3):
+            pool.put(i, _page(i))
+        assert not pool.page(0).resident     # evicted by budget
+        engine.clean_ahead(limit=8)
+        engine.prefetch([0])
+        engine.drain()
+        st0 = pool.stats()
+        got = pool.get(0)                    # must be a DRAM hit now
+        assert np.array_equal(got, _page(0))
+        assert pool.stats()["hits"] == st0["hits"] + 1
+        assert pool.stats()["misses"] == st0["misses"]
+        assert engine.stats()["io_reads"] >= 1
+    finally:
+        engine.close()
+
+
+def test_engine_drains_dirty_pages_on_shutdown(tmp_path):
+    """Dirty pages whose write-backs were handed to the engine are on
+    disk when close() returns — nothing is lost at shutdown."""
+    pool, engine = _engine_pool(tmp_path, budget_pages=4)
+    try:
+        for i in range(4):
+            pool.put(i, _page(i))            # all dirty, all resident
+        scheduled = engine.clean_ahead(limit=4)
+        assert scheduled > 0                 # budget is exactly full
+    finally:
+        engine.close()
+    for i in range(4):
+        page = pool.page(i)
+        if not page.dirty:
+            assert page.slot is not None and page.slot.exists()
+            assert np.array_equal(page.slot.load(), _page(i))
+    assert engine.stats()["io_writes"] >= 1
+
+
+def test_engine_failed_read_surfaces_cleanly(tmp_path, monkeypatch):
+    """A failed background read must not hang or kill the run: the
+    engine records the error and the foreground fault retries
+    synchronously, surfacing the real exception to the caller."""
+    pool, engine = _engine_pool(tmp_path)
+    try:
+        for i in range(3):
+            pool.put(i, _page(i))
+        pool.flush()
+        assert not pool.page(0).resident
+        orig = SpillSlot.load
+
+        def boom(self):
+            raise OSError("injected read failure")
+
+        monkeypatch.setattr(SpillSlot, "load", boom)
+        engine.prefetch([0])
+        engine.drain()
+        assert 0 in engine.errors
+        assert isinstance(engine.errors[0], OSError)
+        with pytest.raises(OSError, match="injected"):
+            pool.get(0)                      # sync retry surfaces it
+        monkeypatch.setattr(SpillSlot, "load", orig)
+        assert np.array_equal(pool.get(0), _page(0))   # and recovers
+    finally:
+        engine.close()
+
+
+def test_foreground_get_waits_for_inflight_background_fault(tmp_path,
+                                                            monkeypatch):
+    """A DELAYED background read: the foreground get blocks until the
+    in-flight engine fault lands instead of duplicating the disk read,
+    then returns the faulted bytes."""
+    pool, engine = _engine_pool(tmp_path)
+    try:
+        for i in range(3):
+            pool.put(i, _page(i))
+        pool.flush()
+        assert not pool.page(0).resident
+        gate = threading.Event()
+        orig = SpillSlot.load
+
+        def slow(self):
+            gate.wait(timeout=10.0)
+            return orig(self)
+
+        monkeypatch.setattr(SpillSlot, "load", slow)
+        engine.prefetch([0])
+        time.sleep(0.05)                     # engine now blocked in load
+        monkeypatch.setattr(SpillSlot, "load", orig)
+        got = {}
+
+        def fg():
+            got["v"] = pool.get(0)
+
+        t = threading.Thread(target=fg)
+        t.start()
+        time.sleep(0.05)
+        gate.set()                           # release the delayed read
+        t.join(timeout=10.0)
+        assert not t.is_alive()
+        assert np.array_equal(got["v"], _page(0))
+        # exactly ONE disk read happened (the engine's — counted as the
+        # miss); the waiting foreground get was served from DRAM
+        assert pool.stats()["misses"] == 1
+        assert pool.stats()["hits"] >= 1
+    finally:
+        gate.set()
+        engine.close()
+
+
+def test_eviction_skips_pages_with_inflight_io(tmp_path, monkeypatch):
+    """Pin-aware scheduling: a page mid-transfer is never an eviction
+    victim — room is made from other pages and eviction never blocks on
+    the in-flight I/O."""
+    pool, engine = _engine_pool(tmp_path, budget_pages=3)
+    try:
+        for i in range(3):
+            pool.put(i, _page(i))
+        pool.flush()                         # all clean, all resident
+        gate = threading.Event()
+        orig = SpillSlot.store
+
+        def slow_store(self, arr):
+            gate.wait(timeout=10.0)
+            return orig(self, arr)
+
+        pool.get(0)[...] = 7.0
+        pool.mark_dirty(0)
+        monkeypatch.setattr(SpillSlot, "store", slow_store)
+        engine.clean_ahead(limit=1)          # write of page 0 in flight
+        time.sleep(0.05)
+        monkeypatch.setattr(SpillSlot, "store", orig)
+        pool.put(3, _page(3))                # needs an eviction NOW
+        assert pool.page(0).resident         # io-busy page was skipped
+        assert pool.page(3).resident
+        gate.set()
+        engine.drain()
+    finally:
+        gate.set()
+        engine.close()
+
+
+def test_tiered_store_readahead_noop_without_engine(tmp_path):
+    store = TieredStore(n_sp=2, disk_dir=tmp_path, io_threads=0)
+    store.register("a", np.zeros((4, 8), np.float32))
+    assert store.readahead([("a", 0)]) == 0
+    assert "io_reads" not in store.stats()
+    store.close()
+    store2 = TieredStore(n_sp=2, budget_bytes=64 * 1024,
+                         disk_dir=tmp_path, io_threads=1)
+    store2.register("a", np.zeros((4, 8), np.float32))
+    assert "io_reads" in store2.stats()
+    iv = store2.take_interval()
+    assert "io_queue_depth_peak" in iv
+    store2.close()

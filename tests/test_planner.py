@@ -100,9 +100,11 @@ def test_storage_cost_follows_measured_change_density():
 
 def test_streaming_observation_prices_with_overlap():
     """Under the pipelined OOC executor the host link overlaps compute:
-    the model prices the superstep at ~max(device, host) instead of
-    their sum — streaming cost is never above synchronous cost and is
-    strictly below it whenever both sides are non-trivial."""
+    the model prices the superstep as a CRITICAL PATH — max(device,
+    host) plus the serial inter-superstep readiness leg (the inbox
+    rebuild nothing overlaps) — instead of the plain sum, so streaming
+    cost is never above synchronous cost and is strictly below it
+    whenever both sides are non-trivial."""
     plan = PhysicalPlan()
     sync = estimate(plan, WEB, Observation(ooc=True))
     strm = estimate(plan, WEB, Observation(ooc=True, streaming=True))
@@ -110,12 +112,35 @@ def test_streaming_observation_prices_with_overlap():
     # identical traffic, different composition rule
     assert strm.host_bytes == sync.host_bytes
     assert strm.bytes == sync.bytes
+    assert strm.serial_seconds == sync.serial_seconds > 0
     assert strm.seconds() < sync.seconds()
     dev, hst = strm.device_seconds(), strm.host_seconds()
-    assert strm.seconds() == pytest.approx(max(dev, hst), rel=0.01)
+    assert strm.seconds() == pytest.approx(
+        max(dev, hst) + strm.serial_seconds, rel=0.01)
     # in-memory observations are untouched by the streaming flag
     mem = estimate(plan, WEB, Observation(streaming=True))
     assert not mem.overlap_host and mem.host_bytes == 0
+    assert mem.serial_seconds == 0
+
+
+def test_barrier_free_shrinks_the_serial_readiness_leg():
+    """barrier_free keeps only the first destination's share of the
+    inbox rebuild on the serial path (1/super_partitions); the barrier
+    executor pays all of it — so the model prefers the barrier-free
+    schedule and scales its advantage with the super-partition count."""
+    plan = PhysicalPlan()
+    bar = estimate(plan, WEB, Observation(ooc=True, streaming=True,
+                                          super_partitions=4))
+    bf4 = estimate(plan, WEB, Observation(ooc=True, streaming=True,
+                                          barrier_free=True,
+                                          super_partitions=4))
+    bf8 = estimate(plan, WEB, Observation(ooc=True, streaming=True,
+                                          barrier_free=True,
+                                          super_partitions=8))
+    assert bf4.serial_seconds == pytest.approx(bar.serial_seconds / 4)
+    assert bf8.serial_seconds < bf4.serial_seconds < bar.serial_seconds
+    assert bf4.seconds() < bar.seconds()
+    assert "inbox_rebuild" in bar.terms
 
 
 def test_ooc_stream_io_prices_the_super_partition_traffic():
