@@ -271,7 +271,20 @@ def _stall_stats(res):
 
 
 def _queue_depth_percentiles(res):
-    """p50 / p90 / max of the per-superstep I/O-queue-depth peaks."""
+    """I/O queue-depth distribution of a run. Since PR 6 every superstep
+    record carries real within-superstep percentiles
+    (``io_queue_depth_p50/p90/max`` from the engine's depth histogram);
+    report their run-level mean/max. Falls back to percentiles of the
+    per-superstep peaks for runs without the engine histogram."""
+    recs = [s for s in res.stats
+            if "wall_s" in s and "io_queue_depth_p90" in s]
+    if recs:
+        k = len(recs)
+        return {
+            "p50": sum(s["io_queue_depth_p50"] for s in recs) / k,
+            "p90": sum(s["io_queue_depth_p90"] for s in recs) / k,
+            "max": max(s["io_queue_depth_max"] for s in recs),
+        }
     depths = sorted(s.get("io_queue_depth", 0) for s in res.stats
                     if "wall_s" in s)
     if not depths:
@@ -361,9 +374,50 @@ def pipeline_race(scale: float, P: int = 8):
     return out
 
 
+def trace_capture(scale: float, trace_out: str, P: int = 8):
+    """Traced disk-tier run -> Chrome trace-event JSON artifact.
+
+    A DEDICATED run, separate from every timed leg, so span recording
+    never skews the BENCH numbers. Barrier-free pipeline on the disk
+    tier with TWO I/O-engine workers and a tight DRAM budget: the trace
+    must show the dispatcher/collector main thread plus both
+    ``pregelix-io-*`` workers (>= 3 OS threads) with fault / readahead /
+    writeback spans overlapping compute and the readiness-stall gap.
+    CI validates the artifact with ``python -m repro.obs.export``."""
+    from repro.obs import trace, write_chrome_trace
+    n = max(int(16_000 * scale), 16 * P)
+    edges = rmat_graph(n, 10 * n, seed=4)
+    prog = PageRank(n, iterations=6)
+    plan = dataclasses.replace(prog.suggested_plan, join="full_outer")
+    vert = load_graph(edges, n, P=P, value_dims=2)
+    working = sum(int(np.asarray(getattr(vert, k)).nbytes) for k in
+                  ("vid", "halt", "value", "edge_src", "edge_dst",
+                   "edge_val"))
+    # quarter-of-working-set budget: enough paging pressure that the
+    # engine's fault/readahead/writeback spans actually appear
+    budget = max(working // 4, 64 * 1024)
+    trace.start()
+    try:
+        with tempfile.TemporaryDirectory(prefix="pregelix-trace-") as td:
+            run_out_of_core(vert, prog, plan,
+                            budget_partitions=max(P // 4, 1),
+                            max_supersteps=6, stream=True,
+                            barrier_free=True,
+                            memory_budget_bytes=budget, disk_dir=td,
+                            eviction="mru", io_threads=2)
+    finally:
+        tracer = trace.stop()
+    summary = write_chrome_trace(trace_out, tracer)
+    record("obs/trace_spans", summary["spans"],
+           f"threads={summary['span_threads']},"
+           f"cats={','.join(sorted(summary['categories']))}")
+    return summary
+
+
 def main(scale: float = 1.0, out_path: str = "BENCH_ooc.json",
          disk: bool = False, storage_out: str = "BENCH_storage.json",
-         pipeline_out: str = "BENCH_pipeline.json"):
+         pipeline_out: str = "BENCH_pipeline.json",
+         trace_out: str = "BENCH_trace.json"):
     out = {"scale": scale}
     out["budget_sweep"] = budget_sweep(scale)
     out["streaming"] = streaming_race(scale)
@@ -385,6 +439,10 @@ def main(scale: float = 1.0, out_path: str = "BENCH_ooc.json",
         hit = max(v["hit_rate"] for v in st["disk_tier"]["disk"].values())
         print(f"wrote {storage_out} (best disk-tier hit rate "
               f"{hit:.2f})", flush=True)
+        ts = trace_capture(scale, trace_out)
+        print(f"wrote {trace_out} ({ts['spans']} spans on "
+              f"{ts['span_threads']} threads, categories "
+              f"{','.join(sorted(ts['categories']))})", flush=True)
     return out
 
 
@@ -405,7 +463,11 @@ if __name__ == "__main__":
                     help="barrier-free vs barrier pipeline race results "
                          "(wall times, readiness-stall seconds, I/O "
                          "queue-depth percentiles; CI uploads this)")
+    ap.add_argument("--trace-out", default="BENCH_trace.json",
+                    help="Chrome trace-event JSON from a dedicated "
+                         "traced disk-tier run (with --disk; CI "
+                         "validates and uploads this)")
     args = ap.parse_args()
     main(0.05 if args.smoke else args.scale, args.out,
          disk=args.disk, storage_out=args.storage_out,
-         pipeline_out=args.pipeline_out)
+         pipeline_out=args.pipeline_out, trace_out=args.trace_out)

@@ -29,6 +29,8 @@ from repro.core.relations import (OVF_BUCKET, OVF_EDGE, OVF_FRONTIER,
                                   VertexRel, empty_msgs, init_gs,
                                   out_degrees)
 from repro.core.superstep import EngineConfig, make_superstep
+from repro.obs import trace
+from repro.obs.metrics import MetricsRegistry
 
 PlanArg = Union[PhysicalPlan, str]   # a PhysicalPlan or the string "auto"
 
@@ -179,9 +181,13 @@ def run_host(vert: VertexRel, program: VertexProgram,
                      program.msg_dims)
     n_live = (controller.g.n_vertices if controller is not None
               else int(jnp.sum(vert.vid >= 0)))
+    metrics = MetricsRegistry()
     coll = StatsCollector(n_partitions=vert.num_partitions,
                           vertex_capacity=vert.capacity,
-                          msg_dims=program.msg_dims, n_vertices=n_live)
+                          msg_dims=program.msg_dims, n_vertices=n_live,
+                          metrics=metrics)
+    m_regrows = metrics.counter("host.regrows")
+    m_switches = metrics.counter("host.plan_switches")
     stats = []
     i = 0
     recompiled = True  # first step includes the jit compile
@@ -190,8 +196,9 @@ def run_host(vert: VertexRel, program: VertexProgram,
         this_recompiled = recompiled
         recompiled = False
         prev = (vert, msg, gs)
-        vert2, msg2, gs2 = step(vert, msg, gs)
-        jax.block_until_ready(gs2.superstep)
+        with trace.annotate("superstep", "compute"):
+            vert2, msg2, gs2 = step(vert, msg, gs)
+            jax.block_until_ready(gs2.superstep)
         ovf_delta = np.asarray(gs2.overflow) - np.asarray(gs.overflow)
         if (ovf_delta > 0).any():
             # grow ONLY the overflowed capacities x2 and REDO this
@@ -207,6 +214,8 @@ def run_host(vert: VertexRel, program: VertexProgram,
                 frontier_cap=ec.frontier_cap,
                 mutation_cap=ec.mutation_cap,
                 sources=np.flatnonzero(ovf_delta > 0).tolist()).as_dict())
+            m_regrows.inc()
+            trace.instant("regrow", "replan", superstep=i)
             recompiled = True
             if controller is not None:
                 controller.note_shape_change()
@@ -222,7 +231,9 @@ def run_host(vert: VertexRel, program: VertexProgram,
         if controller is not None and not bool(gs.halt):
             # mid-run replanning: switch the physical plan when observed
             # frontier density pushes another plan below the current one
-            new_plan = controller.observe(rec, bucket_cap=ec.bucket_cap)
+            with trace.span("replan", "replan"):
+                new_plan = controller.observe(rec,
+                                              bucket_cap=ec.bucket_cap)
             if new_plan is not None:
                 from repro.planner import migrate_msgs
                 msg = migrate_msgs(msg, plan, new_plan, ec.n_parts)
@@ -248,6 +259,7 @@ def run_host(vert: VertexRel, program: VertexProgram,
                     sender_combine=plan.sender_combine,
                     storage=plan.storage,
                     frontier_cap=ec.frontier_cap).as_dict())
+                m_switches.inc()
                 recompiled = True
                 switched = True
                 controller.note_shape_change()
@@ -279,7 +291,8 @@ def run_host(vert: VertexRel, program: VertexProgram,
             failure_injector(i, vert, msg, gs)
         if checkpoint_every and i % checkpoint_every == 0 \
                 and checkpoint_dir:
-            save_checkpoint(checkpoint_dir, i, vert, msg, gs)
+            with trace.span("checkpoint", "checkpoint"):
+                save_checkpoint(checkpoint_dir, i, vert, msg, gs)
         if on_superstep is not None:
             on_superstep(i, vert, msg, gs, rec.as_dict())
         if bool(gs.halt):

@@ -156,6 +156,8 @@ from repro.core.plan import FRONTIER_FLOOR, STORAGES, PhysicalPlan
 from repro.core.program import VertexProgram
 from repro.core.relations import GlobalState, MsgRel, VertexRel, init_gs
 from repro.core.superstep import EngineConfig, jit_superstep
+from repro.obs import trace
+from repro.obs.metrics import MetricsRegistry
 from repro.storage import TieredStore
 
 # the OOC planner searches both storage policies on top of the full
@@ -374,7 +376,8 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                     readahead_pages: int = 8,
                     checkpoint_every: int = 0,
                     checkpoint_dir: Optional[str] = None,
-                    resume_from: Optional[str] = None) -> RunResult:
+                    resume_from: Optional[str] = None,
+                    on_superstep=None) -> RunResult:
     """budget_partitions = how many partitions fit in device memory at once
     (the HBM budget). P % budget_partitions must be 0. plan="auto" picks
     the plan from the cost model and re-picks it at superstep boundaries —
@@ -411,7 +414,20 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
     ``checkpoint_every``/``checkpoint_dir`` snapshot the host store at
     superstep boundaries by hard-linking/copying its spill files (no
     DRAM re-serialization); ``resume_from=<checkpoint dir>`` restarts
-    from such a snapshot — ``vert`` may then be None."""
+    from such a snapshot — ``vert`` may then be None.
+
+    OBSERVABILITY: every pipeline leg records a span when ``repro.obs``
+    tracing is on (``trace.start()`` / ``pregel_run --trace``) —
+    prepare/dispatch on the main loop, collect-wait/commit per collected
+    super-partition, the readiness stall as an explicit span from the
+    previous superstep's last collect to the next first dispatch, plus
+    replan/regrow/checkpoint events; the I/O-engine workers record their
+    own fault/writeback spans on their threads. A per-run
+    ``MetricsRegistry`` (shared with the store's I/O engine) merges its
+    interval snapshot into every record's ``extra["metrics"]``.
+    ``on_superstep(i, rec_dict)`` is called after each superstep's
+    record lands — the live progress hook ``pregel_run --progress``
+    uses."""
     from repro.planner.stats import StatsCollector
     from repro.runtime.checkpoint import save_ooc_checkpoint
 
@@ -442,10 +458,12 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
             P = vert.vid.shape[0]
             assert P % sp == 0
             n_sp = P // sp
+        metrics = MetricsRegistry()
         store = TieredStore(n_sp=n_sp, budget_bytes=memory_budget_bytes,
                             disk_dir=disk_dir, policy=eviction,
                             io_threads=io_threads,
-                            readahead_pages=readahead_pages)
+                            readahead_pages=readahead_pages,
+                            metrics=metrics)
         gen = 0            # inbox generation (one per superstep fold)
         if resume_from is not None:
             gs = _adopt_checkpoint(store, ck_gs, ck_src)
@@ -557,7 +575,11 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                   else sum(int((store.read("vid", s) >= 0).sum())
                            for s in range(n_sp)))
         coll = StatsCollector(n_partitions=P, vertex_capacity=Np,
-                              msg_dims=D, n_vertices=n_live)
+                              msg_dims=D, n_vertices=n_live,
+                              metrics=metrics)
+        m_prepare = metrics.histogram("ooc.prepare_s")
+        m_regrows = metrics.counter("ooc.regrows")
+        m_switches = metrics.counter("ooc.plan_switches")
         stats = []
         delta_bytes = full_bytes = 0
         recompiled = True  # first superstep includes the jit compile
@@ -588,6 +610,7 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
             path calls it for every q at the fold."""
             if q in prepared:
                 return
+            tp = time.time()
             d_q = np.concatenate([store.get_page(("out_dst", gen, s, q))
                                   for s in range(n_sp)], axis=0)
             p_q = np.concatenate([store.get_page(("out_pay", gen, s, q))
@@ -620,6 +643,8 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                 for s in range(n_sp):
                     for nm in _MUT:
                         store.delete_page((nm, gen, s, q))
+            m_prepare.observe(time.time() - tp)
+            trace.complete("prepare", "prepare", tp, time.time(), q=q)
             prepared.add(q)
 
         def dispatch(q):
@@ -672,14 +697,19 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                 valid=jax.device_put(v_in.reshape(sp, P * C_in)))
             # part0 = this block's first GLOBAL partition index, so
             # resurrect mints correct vids past super-partition 0
-            v2, buckets, g2, cnts, mut = step(
-                vpart, msg, gs, jnp.asarray(q * sp, jnp.int32))
-            t_io["dispatch"] += time.time() - td
+            with trace.annotate("step_enqueue", "compute"):
+                v2, buckets, g2, cnts, mut = step(
+                    vpart, msg, gs, jnp.asarray(q * sp, jnp.int32))
+            now = time.time()
+            t_io["dispatch"] += now - td
+            trace.complete("dispatch", "dispatch", td, now, q=q)
             if stall_cell[0] is None:
                 # device-idle gap: from the previous superstep's last
                 # collect to this superstep's first step enqueue — the
                 # readiness stall the barrier-free pipeline minimizes
-                stall_cell[0] = time.time() - t_ready0
+                stall_cell[0] = now - t_ready0
+                trace.complete("readiness_stall", "dispatch",
+                               t_ready0, now)
             return _InFlight(q, v2, buckets, g2, cnts, mut)
 
         def commit(e):
@@ -697,8 +727,9 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
             waits for the inbox rebuild to learn them."""
             tw = time.time()
             new_value = np.asarray(e.v2.value)   # blocks on e's step
-            t_io["wait"] += time.time() - tw
             tc = time.time()
+            t_io["wait"] += tc - tw
+            trace.complete("collect_wait", "collect", tw, tc, q=e.s)
             old_value = store.read("value", e.s)
             changed = np.any(new_value != old_value, axis=-1)
             d_b = int(changed.sum()) * new_value.shape[-1] * 4
@@ -771,7 +802,9 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                 active=int(e.g2.active_count),
                 agg=np.asarray(e.g2.aggregate),
                 delta_bytes=d_b, full_bytes=f_b, has_mut=has_mut)
-            t_io["commit"] += time.time() - tc
+            now = time.time()
+            t_io["commit"] += now - tc
+            trace.complete("commit", "commit", tc, now, q=e.s)
             return done
 
         while i < max_supersteps and not bool(gs.halt):
@@ -820,6 +853,7 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                     # (nothing from a dirty step was committed). This is
                     # one of the three events the barrier-free frontier
                     # synchronizes on.
+                    t_rg = time.time()
                     redo = {e.s}
                     store.unpin("value", e.s)
                     for other in pending:
@@ -863,6 +897,9 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                         mutation_cap=ec.mutation_cap,
                         sources=np.flatnonzero(delta > 0).tolist(),
                         redo=sorted(redo)).as_dict())
+                    m_regrows.inc()
+                    trace.complete("overflow_regrow", "replan",
+                                   t_rg, time.time())
                     this_recompiled = True
                     if controller is not None:
                         controller.note_shape_change()
@@ -877,6 +914,7 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
             # synchronous loop), and the next superstep's first
             # destination dispatches right after, without waiting for
             # any inbox rebuild or mutation apply.
+            t_fold = time.time()
             ordered = [committed[s] for s in range(n_sp)]
             halt_all = all(d.halt_ok for d in ordered)
             active = sum(d.active for d in ordered)
@@ -914,12 +952,18 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                              overflow=gs.overflow,
                              active_count=jnp.asarray(active, jnp.int32),
                              msg_count=jnp.asarray(msg_count, jnp.int32))
+            trace.complete("fold", "commit", t_fold, time.time(), i=i)
             if not barrier_free:
                 # the PR-4 barrier: rebuild the whole generation and
                 # apply every destination's mutations before anything
                 # else dispatches
                 for q in range(n_sp):
                     prepare(q)
+            if store.engine is not None:
+                # close the I/O pacing loop: fit the readahead depth to
+                # how many observed-latency page faults the superstep's
+                # compute window (the collect-wait) can hide
+                store.engine.autopace(t_io["wait"])
             interval = store.take_interval()
             pool_now = store.stats()
             faults = interval["misses"]
@@ -951,12 +995,32 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                 io_queue_depth=interval.get("io_queue_depth_peak", 0),
                 io_queue_depth_mean=interval.get("io_queue_depth_mean",
                                                  0.0),
+                # queue-depth DISTRIBUTION (metrics histogram), not just
+                # the mean: a spiky engine with a calm average still
+                # stalls evictions at its p90
+                io_queue_depth_p50=interval.get("io_queue_depth_p50",
+                                                0.0),
+                io_queue_depth_p90=interval.get("io_queue_depth_p90",
+                                                0.0),
+                io_queue_depth_max=interval.get("io_queue_depth_max",
+                                                0.0),
+                readahead_depth=interval.get("readahead_depth",
+                                             readahead_pages),
                 pager_resident_bytes=pool_now["resident_bytes"],
                 pager_peak_bytes=pool_now["peak_resident_bytes"])
             stats.append(rec.as_dict())
+            if trace.enabled():
+                trace.counter("active", active)
+                trace.counter("messages", msg_count)
+                trace.counter("io_queue_depth",
+                              interval.get("io_queue_depth_peak", 0))
+            if on_superstep is not None:
+                on_superstep(i, stats[-1])
             switched = False
             if controller is not None and not bool(gs.halt):
-                new_plan = controller.observe(rec, bucket_cap=ec.bucket_cap)
+                with trace.span("replan", "replan"):
+                    new_plan = controller.observe(rec,
+                                                  bucket_cap=ec.bucket_cap)
                 if new_plan is not None:
                     if (new_plan.connector == "partitioning_merging"
                             and plan.connector != "partitioning_merging"
@@ -1001,6 +1065,7 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                         sender_combine=plan.sender_combine,
                         storage=plan.storage,
                         frontier_cap=ec.frontier_cap).as_dict())
+                    m_switches.inc()
                     recompiled = True
                     switched = True
                     controller.note_shape_change()
@@ -1038,6 +1103,7 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                 # checkpoints synchronize the rolling frontier: the
                 # saved inbox generation must be complete and every
                 # pending mutation applied before the pages export
+                t_ck = time.time()
                 for q in range(n_sp):
                     prepare(q)
                 if store.engine is not None:
@@ -1047,6 +1113,8 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                     inbox_width=C_in, sp=sp, plan=plan, ec=ec,
                     controller_state=(controller.state_dict()
                                       if controller is not None else None))
+                trace.complete("checkpoint_sync", "checkpoint",
+                               t_ck, time.time(), superstep=i)
             if bool(gs.halt):
                 break
         # the rolling frontier defers mutation application to each

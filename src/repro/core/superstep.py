@@ -379,8 +379,22 @@ def jit_superstep(program: VertexProgram, plan: PhysicalPlan,
     The message and global-state arguments are never donated: the
     streaming dispatcher shares one GlobalState across every in-flight
     super-partition, and the collected bucket outputs do not alias the
-    inbox-slice shapes."""
+    inbox-slice shapes.
+
+    The returned callable participates in ``repro.obs`` tracing: each
+    invocation is a ``compute``-category span (and, when the tracer was
+    started with jax_annotations, a ``jax.profiler.TraceAnnotation`` —
+    the bridge that lines host spans up with device activity under the
+    JAX profiler). With tracing off the wrapper is one extra Python call
+    around the jitted function."""
+    from repro.obs import trace
+
     fn = make_superstep(program, plan, ec)
-    if donate_vertex:
-        return jax.jit(fn, donate_argnums=(0,))
-    return jax.jit(fn)
+    jf = (jax.jit(fn, donate_argnums=(0,)) if donate_vertex
+          else jax.jit(fn))
+
+    def traced(*args):
+        with trace.annotate("superstep", "compute"):
+            return jf(*args)
+
+    return traced

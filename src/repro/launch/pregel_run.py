@@ -219,6 +219,18 @@ def main():
                     help="--ooc disk tier page-replacement policy: lru, "
                          "or mru (resists the superstep's cyclic "
                          "sequential scan)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a span timeline of the run and write it "
+                         "as Chrome trace-event JSON to PATH (load in "
+                         "chrome://tracing or https://ui.perfetto.dev)")
+    ap.add_argument("--progress", action="store_true",
+                    help="print one human-readable line per superstep "
+                         "(active frontier, messages, wall, cache hit "
+                         "rate, readiness stall, current plan)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the per-superstep metrics registry "
+                         "snapshots (counters / gauges / histogram "
+                         "percentiles) collected in SuperstepStats")
     args = ap.parse_args()
 
     plan = "auto" if args.auto_plan else PhysicalPlan(
@@ -255,10 +267,19 @@ def main():
     import numpy as np
     from repro.core import gather_values, load_graph, run_host
     from repro.graph import DATASETS
+    from repro.obs import progress_line, trace, write_chrome_trace
     edges, n = DATASETS[args.dataset]()
     program = ALGOS[args.algo](n)
     vert = load_graph(edges, n, P=args.parts,
                       value_dims=program.value_dims)
+    if args.trace:
+        trace.start()
+    show = None
+    if args.progress:
+        plan_tag = None if plan == "auto" else plan
+
+        def show(i, rec):
+            print(progress_line(rec, plan_tag, n_vertices=n), flush=True)
     if args.ooc:
         from repro.core.ooc import run_out_of_core
         budget = args.budget_partitions
@@ -279,7 +300,8 @@ def main():
                               disk_dir=args.disk_dir,
                               eviction=args.eviction,
                               io_threads=args.io_threads,
-                              readahead_pages=args.readahead_pages)
+                              readahead_pages=args.readahead_pages,
+                              on_superstep=show)
         tier = (f", disk tier at {args.disk_dir} "
                 f"[{args.eviction}]" if args.disk_dir else "")
         exe = ("synchronous" if not args.stream else
@@ -287,7 +309,10 @@ def main():
         mode = (f"out-of-core (budget={budget}/{args.parts} partitions, "
                 f"{exe}{tier})")
     else:
-        res = run_host(vert, program, plan, max_supersteps=40)
+        host_cb = ((lambda i, v, m, g, rec: show(i, rec))
+                   if show is not None else None)
+        res = run_host(vert, program, plan, max_supersteps=40,
+                       on_superstep=host_cb)
         mode = "in-memory"
     vals = gather_values(res.vertex, n)
     print(f"{args.algo} on {args.dataset} [{mode}]: "
@@ -326,6 +351,27 @@ def main():
                   f"storage={s.get('storage', '-')}")
     print("per-superstep:", [round(s['wall_s'], 3) for s in res.stats
                              if 'wall_s' in s])
+    if args.metrics:
+        for s in res.stats:
+            m = s.get("metrics")
+            if not m:
+                continue
+            print(f"metrics @ superstep {s.get('superstep', '?')}:")
+            for name in sorted(m):
+                snap = m[name]
+                if isinstance(snap, dict):   # histogram percentiles
+                    body = "  ".join(
+                        f"{k}={v:.4g}" for k, v in snap.items())
+                else:
+                    body = f"{snap:.6g}"
+                print(f"  {name:<22} {body}")
+    if args.trace:
+        tracer = trace.stop()
+        summary = write_chrome_trace(args.trace, tracer)
+        print(f"trace: {args.trace} "
+              f"({summary['spans']} spans on "
+              f"{summary['span_threads']} thread(s); load in "
+              f"chrome://tracing or ui.perfetto.dev)")
     print("value head:", vals[:5, 0])
 
 

@@ -1,0 +1,23 @@
+"""Runtime observability: span tracing, metrics, Chrome-trace export.
+
+* ``repro.obs.trace`` — thread-safe span recorder (per-thread buffers,
+  nestable spans categorized by pipeline leg, instant/counter events;
+  near-zero-cost when disabled).
+* ``repro.obs.metrics`` — named counters/gauges/histograms whose
+  per-superstep interval snapshot merges into ``SuperstepStats.extra``.
+* ``repro.obs.export`` — Chrome trace-event JSON (Perfetto-loadable),
+  one track per thread, plus the schema validator CI runs.
+* ``repro.obs.progress`` — the human per-superstep progress line.
+"""
+from repro.obs import trace
+from repro.obs.export import (chrome_trace, validate_chrome_trace,
+                              write_chrome_trace)
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.progress import fmt_plan, progress_line
+
+__all__ = [
+    "trace",
+    "chrome_trace", "validate_chrome_trace", "write_chrome_trace",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "fmt_plan", "progress_line",
+]

@@ -42,6 +42,17 @@ class AdaptiveConfig:
     # SORT_PASS_FRAC against freshly lowered probes — at most once per
     # this many supersteps, so the probe compiles amortize. 0 = off.
     recalibrate_every: int = 0
+    # EWMA smoothing factor for the measured readiness stall (the serial
+    # inter-superstep leg): closes the measurement loop by calibrating
+    # the cost model's analytic serial price to the stall the run
+    # actually observes (Observation.serial_scale). 0 = loop open.
+    stall_alpha: float = 0.3
+
+
+# the measured-stall calibration multiplier is clamped: the stall also
+# absorbs fold/GC noise (up) and warm-cache supersteps (down), and an
+# unbounded ratio would let one outlier superstep flip plan ranking
+_SCALE_MIN, _SCALE_MAX = 0.125, 8.0
 
 
 class AdaptiveController:
@@ -63,6 +74,7 @@ class AdaptiveController:
         self._last_switch = -10 ** 9
         self._shapes_dirty = False   # a regrow/refit/switch re-lowered
         self._last_recal = -10 ** 9  # superstep of the last refit
+        self._stall_ewma: Optional[float] = None  # measured serial leg
 
     # ---- hysteresis persistence (OOC checkpoint meta.json) -----------
     def state_dict(self) -> dict:
@@ -77,6 +89,8 @@ class AdaptiveController:
             "last_switch": int(self._last_switch),
             "last_recal": int(self._last_recal),
             "shapes_dirty": bool(self._shapes_dirty),
+            "stall_ewma": (float(self._stall_ewma)
+                           if self._stall_ewma is not None else None),
         }
 
     def load_state(self, state: dict):
@@ -91,6 +105,8 @@ class AdaptiveController:
         # elapsed at checkpoint time) must survive the resume, or the
         # controller prices plans with stale constants forever
         self._shapes_dirty = bool(state.get("shapes_dirty", False))
+        ewma = state.get("stall_ewma")
+        self._stall_ewma = float(ewma) if ewma is not None else None
 
     # ---- periodic re-calibration -------------------------------------
     def note_shape_change(self):
@@ -120,20 +136,37 @@ class AdaptiveController:
                 "k_scatter": self.machine.k_scatter,
                 "sort_pass_frac": self.machine.sort_pass_frac}
 
-    def observe(self, rec: SuperstepStats, *,
-                bucket_cap: int = 0) -> Optional[PhysicalPlan]:
-        """Returns the new plan when a switch is warranted, else None.
-        On a switch the controller's own `plan` is already updated.
-        `bucket_cap` = the engine's live bucket capacity, flooring every
-        candidate's modeled message capacity (buckets only grow)."""
-        cfg = self.config
-        # OOC drivers annotate their records with ooc=True plus the
-        # measured per-superstep change density (delta/full write-back
-        # byte ratio — prices the storage dimension), message
-        # COMBINABILITY (messages per distinct destination — prices the
-        # sender_combine dimension), mutation rate (host mutation-inbox
-        # traffic) and the disk tier's hit rate / spill flag (prices the
-        # disk-bandwidth axis)
+    def _update_stall_ewma(self, rec: SuperstepStats):
+        """Fold a steady superstep's measured readiness stall into the
+        EWMA. Recompile supersteps are skipped (their stall includes jit
+        compile time, which would poison the calibration); so are
+        records that never measured a stall (in-memory / barrier runs)."""
+        if rec.recompiled or "readiness_stall_s" not in rec.extra:
+            return
+        stall = float(rec.extra["readiness_stall_s"])
+        a = self.config.stall_alpha
+        if a <= 0.0:
+            return
+        if self._stall_ewma is None:
+            self._stall_ewma = stall
+        else:
+            self._stall_ewma = a * stall + (1.0 - a) * self._stall_ewma
+
+    def _make_observation(self, rec: SuperstepStats, *,
+                          bucket_cap: int = 0) -> Observation:
+        """Lift a stats record into the cost model's ``Observation``.
+        OOC drivers annotate their records with ooc=True plus the
+        measured per-superstep change density (delta/full write-back
+        byte ratio — prices the storage dimension), message
+        COMBINABILITY (messages per distinct destination — prices the
+        sender_combine dimension), mutation rate (host mutation-inbox
+        traffic) and the disk tier's hit rate / spill flag (prices the
+        disk-bandwidth axis). When a stall EWMA has accumulated, the
+        serial inbox-rebuild leg gets a measured calibration multiplier:
+        ``serial_scale`` = EWMA stall / analytic serial leg of the
+        CURRENT plan, clamped — every candidate's serial price shifts by
+        the same factor, so ranking stays plan-relative but the
+        serial-vs-overlap tradeoff is priced at observed magnitude."""
         obs = Observation(frontier_density=rec.frontier_density,
                           messages=rec.messages, superstep=rec.superstep,
                           bucket_cap=bucket_cap,
@@ -158,6 +191,25 @@ class AdaptiveController:
                           spilling=bool(rec.extra.get("spill", False)),
                           hit_rate=float(rec.extra.get("cache_hit_rate",
                                                        1.0)))
+        if self._stall_ewma is not None and obs.ooc:
+            cur_serial = estimate(self.plan, self.g, obs,
+                                  self.machine).serial_seconds
+            if cur_serial > 0.0:
+                scale = self._stall_ewma / cur_serial
+                scale = min(max(scale, _SCALE_MIN), _SCALE_MAX)
+                obs = dataclasses.replace(obs, serial_scale=scale,
+                                          stall_ewma_s=self._stall_ewma)
+        return obs
+
+    def observe(self, rec: SuperstepStats, *,
+                bucket_cap: int = 0) -> Optional[PhysicalPlan]:
+        """Returns the new plan when a switch is warranted, else None.
+        On a switch the controller's own `plan` is already updated.
+        `bucket_cap` = the engine's live bucket capacity, flooring every
+        candidate's modeled message capacity (buckets only grow)."""
+        cfg = self.config
+        self._update_stall_ewma(rec)
+        obs = self._make_observation(rec, bucket_cap=bucket_cap)
         best, best_cost = choose(self.program, self.g, obs,
                                  base=self.plan, machine=self.machine,
                                  **self.space_kw)

@@ -158,9 +158,19 @@ class Observation:
     # observed device-idle gap between supersteps (seconds) and the I/O
     # engine's queue depth — surfaced for diagnostics/benchmarks; the
     # model prices the rebuild analytically (plan-dependent), not from
-    # the observed stall, which mixes in compile and fold noise.
+    # the raw observed stall, which mixes in compile and fold noise.
     readiness_stall_s: float = 0.0
     io_queue_depth: float = 0.0
+    # measurement loop closure (ROADMAP "Measurement-driven planning"):
+    # the controller EWMAs the measured readiness stall across steady
+    # (non-recompile) supersteps and divides it by the analytic serial
+    # leg of the CURRENT plan to get `serial_scale` — a plan-independent
+    # calibration multiplier applied to every candidate's serial leg, so
+    # ranking stays plan-relative but the serial-vs-overlapped tradeoff
+    # is priced at the stall the hardware actually delivers.
+    # `stall_ewma_s` rides along for diagnostics; < 0 = no measurement.
+    stall_ewma_s: float = -1.0
+    serial_scale: float = 1.0
     # messages per DISTINCT destination, measured from the run-structured
     # host inbox (>= 1). High combinability means a sender combine
     # collapses the inbox that crosses the host link; ~1 means the
@@ -224,6 +234,14 @@ class PlanCost:
         s = bytes / machine.host_mem_bw
         self.serial_seconds += s
         self.terms[term] = self.terms.get(term, 0.0) + s
+
+    def scale_serial(self, factor: float, term: str = "inbox_rebuild"):
+        """Apply a measured calibration multiplier to the serial leg
+        (the Observation.serial_scale closure): scales both the total
+        and the named term so reports stay consistent."""
+        self.serial_seconds *= factor
+        if term in self.terms:
+            self.terms[term] *= factor
 
     def device_seconds(self, machine: MachineModel = DEFAULT_MACHINE) \
             -> float:
@@ -426,6 +444,8 @@ def estimate(plan: PhysicalPlan, g: GraphStats, obs: Observation,
         if obs.barrier_free:
             rebuild /= max(obs.super_partitions, 1)
         c.add_serial("inbox_rebuild", machine, bytes=rebuild)
+        if obs.serial_scale != 1.0:
+            c.scale_serial(obs.serial_scale)
         # the pipelined executor overlaps the host link and the disk
         # with compute: rank plans by max(device, host, disk) (plus the
         # serial readiness leg) instead of their sum

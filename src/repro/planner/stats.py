@@ -92,14 +92,22 @@ class StatsCollector:
     the run history the adaptive controller windows over."""
 
     def __init__(self, *, n_partitions: int, vertex_capacity: int,
-                 msg_dims: int, n_vertices: Optional[int] = None):
+                 msg_dims: int, n_vertices: Optional[int] = None,
+                 metrics=None):
         """n_vertices = LIVE vertex count; densities are fractions of it
         (slot capacities carry slack, so slot fractions would understate
-        liveness). Falls back to total slots when unknown."""
+        liveness). Falls back to total slots when unknown.
+
+        ``metrics`` is an optional ``repro.obs.metrics.MetricsRegistry``;
+        when set, every ``record`` merges the registry's per-superstep
+        interval snapshot into ``extra["metrics"]`` so the counters the
+        runtime and storage layers maintain travel on the same stream as
+        the driver observables."""
         self.n_partitions = n_partitions
         self.vertex_capacity = vertex_capacity
         self.msg_dims = msg_dims
         self.n_vertices = n_vertices
+        self.metrics = metrics
         self.records: List[SuperstepStats] = []
 
     @property
@@ -111,6 +119,10 @@ class StatsCollector:
     def record(self, superstep: int, *, active: int, messages: int,
                wall_s: float, recompiled: bool = False,
                **extra) -> SuperstepStats:
+        if self.metrics is not None:
+            m = self.metrics.interval()
+            if m:
+                extra["metrics"] = m
         rec = SuperstepStats(
             superstep=superstep, active=active, messages=messages,
             frontier_density=min(active / self.total_vertices, 1.0),

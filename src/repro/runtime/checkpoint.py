@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.core.relations import (N_OVERFLOW, GlobalState, MsgRel,
                                   VertexRel)
+from repro.obs import trace
 
 # the host-resident relations an OOC checkpoint carries (one spill page
 # per super-partition each) plus the run-structured inbox chunks
@@ -42,21 +43,23 @@ def save_checkpoint(ckpt_dir: str, superstep: int, vert: VertexRel,
     d.mkdir(parents=True, exist_ok=True)
     path = d / f"ckpt_{superstep:06d}.npz"
     tmp = d / f".tmp_{superstep:06d}.npz"
-    np.savez_compressed(
-        tmp,
-        vid=np.asarray(vert.vid), halt=np.asarray(vert.halt),
-        value=np.asarray(vert.value), edge_src=np.asarray(vert.edge_src),
-        edge_dst=np.asarray(vert.edge_dst),
-        edge_val=np.asarray(vert.edge_val),
-        m_dst=np.asarray(msg.dst), m_pay=np.asarray(msg.payload),
-        m_val=np.asarray(msg.valid),
-        gs_halt=np.asarray(gs.halt), gs_agg=np.asarray(gs.aggregate),
-        gs_step=np.asarray(gs.superstep),
-        gs_overflow=np.asarray(gs.overflow),
-        gs_active=np.asarray(gs.active_count),
-        gs_msgs=np.asarray(gs.msg_count))
-    os.replace(tmp, path)  # atomic publish
-    (d / "LATEST").write_text(path.name)
+    with trace.span("save_checkpoint", "checkpoint"):
+        np.savez_compressed(
+            tmp,
+            vid=np.asarray(vert.vid), halt=np.asarray(vert.halt),
+            value=np.asarray(vert.value),
+            edge_src=np.asarray(vert.edge_src),
+            edge_dst=np.asarray(vert.edge_dst),
+            edge_val=np.asarray(vert.edge_val),
+            m_dst=np.asarray(msg.dst), m_pay=np.asarray(msg.payload),
+            m_val=np.asarray(msg.valid),
+            gs_halt=np.asarray(gs.halt), gs_agg=np.asarray(gs.aggregate),
+            gs_step=np.asarray(gs.superstep),
+            gs_overflow=np.asarray(gs.overflow),
+            gs_active=np.asarray(gs.active_count),
+            gs_msgs=np.asarray(gs.msg_count))
+        os.replace(tmp, path)  # atomic publish
+        (d / "LATEST").write_text(path.name)
     return str(path)
 
 
@@ -76,12 +79,14 @@ def save_ooc_checkpoint(ckpt_dir: str, superstep: int, store, gs, *,
     if tmp.exists():
         shutil.rmtree(tmp)
     tmp.mkdir()
-    for nm in OOC_RELATIONS:
-        for s in range(store.n_sp):
-            store.export_page((nm, s), tmp / f"{nm}_{s}.npy")
-    for nm in OOC_INBOX:
-        for q in range(store.n_sp):
-            store.export_page((nm, inbox_gen, q), tmp / f"{nm}_{q}.npy")
+    with trace.span("export_pages", "checkpoint"):
+        for nm in OOC_RELATIONS:
+            for s in range(store.n_sp):
+                store.export_page((nm, s), tmp / f"{nm}_{s}.npy")
+        for nm in OOC_INBOX:
+            for q in range(store.n_sp):
+                store.export_page((nm, inbox_gen, q),
+                                  tmp / f"{nm}_{q}.npy")
     np.savez(tmp / "gs.npz",
              halt=np.asarray(gs.halt), aggregate=np.asarray(gs.aggregate),
              superstep=np.asarray(gs.superstep),

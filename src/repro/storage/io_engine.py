@@ -37,7 +37,11 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Optional
+
+from repro.obs import trace
+from repro.obs.metrics import Histogram
 
 _SENTINEL = object()
 
@@ -46,11 +50,15 @@ class IOEngine:
     """Worker thread(s) owning a ``BufferPool``'s spill-tier I/O."""
 
     def __init__(self, pool, *, threads: int = 1,
-                 readahead_pages: int = 8):
+                 readahead_pages: int = 8, metrics=None):
         if threads < 1:
             raise ValueError("io engine needs at least one worker thread")
         self.pool = pool
-        self.readahead_pages = int(readahead_pages)
+        # `readahead_pages` is the configured CEILING; the live depth
+        # adapts within [1, ceiling] from observed fault latency vs
+        # compute time (`autopace`).
+        self.readahead_max = max(int(readahead_pages), 1)
+        self.readahead_pages = self.readahead_max
         self._q: queue.Queue = queue.Queue()
         self._mu = threading.Lock()
         self._queued: set = set()        # (op, key) pending — coalescing
@@ -65,6 +73,16 @@ class IOEngine:
         self._depth_peak = 0
         self._depth_sum = 0
         self._depth_n = 0
+        # queue-depth distribution per superstep (p50/p90/max travel in
+        # SuperstepStats.extra); shared with the run registry when given
+        # — then take_interval only SNAPSHOTS it and leaves the reset to
+        # the registry's own interval pass (StatsCollector.record runs
+        # right after), so the same numbers appear on both streams
+        self._own_hist = metrics is None
+        self._depth_hist = (metrics.histogram("io.queue_depth")
+                            if metrics is not None else Histogram())
+        self._int_reads = 0              # interval fault-latency sample
+        self._int_read_s = 0.0
         self._closed = False
         self._workers = [
             threading.Thread(target=self._run, name=f"pregelix-io-{k}",
@@ -84,6 +102,7 @@ class IOEngine:
             self._depth_peak = max(self._depth_peak, depth)
             self._depth_sum += depth
             self._depth_n += 1
+        self._depth_hist.observe(depth)
         self._q.put((op, key))
         return True
 
@@ -119,16 +138,22 @@ class IOEngine:
             op, key = item
             try:
                 if op == "read":
-                    nbytes = self.pool.fault_background(key)
+                    t0 = time.time()
+                    with trace.span("fault_bg", "readahead"):
+                        nbytes = self.pool.fault_background(key)
+                    dt = time.time() - t0
                     with self._mu:
                         if nbytes is None:
                             self.dropped += 1
                         else:
                             self.reads += 1
                             self.read_bytes += nbytes
+                            self._int_reads += 1
+                            self._int_read_s += dt
                             self.errors.pop(key, None)
                 else:
-                    nbytes = self.pool.writeback_background(key)
+                    with trace.span("writeback_bg", "writeback"):
+                        nbytes = self.pool.writeback_background(key)
                     if nbytes is not None:
                         with self._mu:
                             self.writes += 1
@@ -178,15 +203,42 @@ class IOEngine:
                 "io_errors": len(self.errors),
             }
 
+    def autopace(self, compute_s: float) -> int:
+        """Close the I/O pacing loop (ROADMAP "Measurement-driven
+        planning"): set the live readahead depth to the number of page
+        faults the measured per-fault latency says fit inside one
+        superstep's compute window, clamped to [1, readahead_max].
+        Prefetching deeper than that outruns the window the pipeline can
+        hide and only pressures the eviction clock; shallower leaves
+        hideable faults on the foreground path. Consumes and resets the
+        interval fault-latency sample; with no faults observed this
+        superstep the depth is left unchanged."""
+        with self._mu:
+            reads, read_s = self._int_reads, self._int_read_s
+            self._int_reads, self._int_read_s = 0, 0.0
+        if reads == 0 or read_s <= 0.0 or compute_s <= 0.0:
+            return self.readahead_pages
+        lat = read_s / reads
+        k = int(compute_s / lat)
+        self.readahead_pages = max(1, min(self.readahead_max, k))
+        return self.readahead_pages
+
     def take_interval(self) -> dict:
-        """Per-superstep view: returns current depth statistics and
+        """Per-superstep view: returns current depth statistics —
+        including the p50/p90/max of the queue-depth distribution — and
         resets the interval accumulators (the satellite counterpart of
         ``BufferPool.take_interval``)."""
+        hist = (self._depth_hist.interval() if self._own_hist
+                else self._depth_hist.snapshot())
         with self._mu:
             out = {
                 "io_queue_depth_peak": self._depth_peak,
                 "io_queue_depth_mean": (self._depth_sum / self._depth_n
                                         if self._depth_n else 0.0),
+                "io_queue_depth_p50": hist["p50"],
+                "io_queue_depth_p90": hist["p90"],
+                "io_queue_depth_max": hist["max"],
+                "readahead_depth": self.readahead_pages,
             }
             self._depth_peak = self._outstanding
             self._depth_sum = 0

@@ -53,6 +53,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.obs import trace
 from repro.storage.spillfile import SpillDir
 
 EVICTION_POLICIES = ("lru", "mru")
@@ -170,9 +171,10 @@ class BufferPool:
         self.evictions += 1
 
     def _writeback(self, page: Page):
-        if page.slot is None:
-            page.slot = self.spill.slot_for(page.key)
-        page.slot.store(page.data)
+        with trace.span("page_writeback", "writeback"):
+            if page.slot is None:
+                page.slot = self.spill.slot_for(page.key)
+            page.slot.store(page.data)
         self.spill_write_bytes += page.nbytes
         page.dirty = False
 
@@ -282,7 +284,8 @@ class BufferPool:
             # worker behind its transfer
             self._io_busy.add(key)
         try:
-            data = slot.load()
+            with trace.span("page_fault", "fault"):
+                data = slot.load()
         except BaseException:
             with self._mu:
                 self._io_done(key)

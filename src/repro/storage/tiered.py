@@ -44,7 +44,8 @@ class TieredStore:
 
     def __init__(self, *, n_sp: int, budget_bytes: Optional[int] = None,
                  disk_dir: Optional[str] = None, policy: str = "lru",
-                 io_threads: int = 0, readahead_pages: int = 8):
+                 io_threads: int = 0, readahead_pages: int = 8,
+                 metrics=None):
         self.n_sp = int(n_sp)
         self.spill = SpillDir(disk_dir) if disk_dir else None
         self.pool = BufferPool(budget_bytes, policy=policy,
@@ -53,7 +54,8 @@ class TieredStore:
         if io_threads > 0 and self.spill is not None:
             from repro.storage.io_engine import IOEngine
             self.engine = IOEngine(self.pool, threads=io_threads,
-                                   readahead_pages=readahead_pages)
+                                   readahead_pages=readahead_pages,
+                                   metrics=metrics)
             self.pool.attach_engine(self.engine)
         self._relations: dict = {}   # name -> per-chunk row counts
 
