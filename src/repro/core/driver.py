@@ -29,10 +29,39 @@ from repro.core.relations import (OVF_BUCKET, OVF_EDGE, OVF_FRONTIER,
                                   VertexRel, empty_msgs, init_gs,
                                   out_degrees)
 from repro.core.superstep import EngineConfig, make_superstep
+from repro.kernels import backend as kbackend
 from repro.obs import trace
 from repro.obs.metrics import MetricsRegistry
 
 PlanArg = Union[PhysicalPlan, str]   # a PhysicalPlan or the string "auto"
+
+
+def apply_kernel_impl(plan: PlanArg, kernel_impl: Optional[str],
+                      auto_space: Optional[dict]):
+    """Thread a driver-level ``kernel_impl`` override into either a
+    concrete plan (replace the field) or the "auto" search space (pin the
+    kernel_impls dimension so the initial choice AND every mid-run switch
+    carry it)."""
+    if kernel_impl is None:
+        return plan, auto_space
+    if isinstance(plan, PhysicalPlan):
+        return dataclasses.replace(plan, kernel_impl=kernel_impl), \
+            auto_space
+    auto_space = dict(auto_space or {})
+    auto_space.setdefault("kernel_impls", (kernel_impl,))
+    return plan, auto_space
+
+
+def plan_gather_layout(plan: PhysicalPlan, vert: VertexRel):
+    """Device-resident gather layout for the kernel path, or None when the
+    resolved plan doesn't consume one. Depends only on edge_src (which the
+    engine never rewrites — mutations touch edge_dst/edge_val), so one
+    layout serves a whole run; recompute only on plan switches."""
+    if not kbackend.wants_edge_layout(plan):
+        return None
+    perm, tile_row = kbackend.plan_edge_layout(
+        np.asarray(vert.edge_src), vert.capacity)
+    return jnp.asarray(perm), jnp.asarray(tile_row)
 
 
 @dataclass
@@ -120,12 +149,16 @@ def grow_overflowed(ec: EngineConfig, delta, *,
 def run_jit(vert: VertexRel, program: VertexProgram,
             plan: PlanArg = PhysicalPlan(), *,
             max_supersteps: int = 50,
-            ec: Optional[EngineConfig] = None) -> RunResult:
+            ec: Optional[EngineConfig] = None,
+            kernel_impl: Optional[str] = None) -> RunResult:
     t0 = time.time()
     # "auto" resolves once up front (whole-loop jit: no mid-run switching)
     plan, _ = _resolve_plan(vert, program, plan, adaptive=False, ec=ec)
+    if kernel_impl is not None:
+        plan = dataclasses.replace(plan, kernel_impl=kernel_impl)
     ec = ec or default_engine_config(vert, program, plan)
     step = make_superstep(program, plan, ec)
+    layout = plan_gather_layout(plan, vert)
     gs = init_gs(program.agg_dims)
     vert = init_vertex_values(vert, program, gs)
     msg = empty_msgs(vert.num_partitions, ec.n_parts * ec.bucket_cap,
@@ -137,7 +170,7 @@ def run_jit(vert: VertexRel, program: VertexProgram,
             jnp.all(g.overflow == 0)
 
     def body(state):
-        return step(*state)
+        return step(*state, None, layout)
 
     v, m, g = jax.jit(
         lambda s: jax.lax.while_loop(cond, body, s))((vert, msg, gs))
@@ -160,7 +193,8 @@ def run_host(vert: VertexRel, program: VertexProgram,
              on_superstep: Optional[Callable] = None,
              failure_injector: Optional[Callable] = None,
              auto_config=None,
-             auto_space: Optional[dict] = None) -> RunResult:
+             auto_space: Optional[dict] = None,
+             kernel_impl: Optional[str] = None) -> RunResult:
     """Host-loop driver with statistics, checkpointing, capacity growth and
     (for tests) failure injection. plan="auto" turns on the cost-based
     planner: the initial plan is chosen for superstep 0's all-active
@@ -170,11 +204,13 @@ def run_host(vert: VertexRel, program: VertexProgram,
     from repro.runtime.checkpoint import save_checkpoint
 
     t0 = time.time()
+    plan, auto_space = apply_kernel_impl(plan, kernel_impl, auto_space)
     plan, controller = _resolve_plan(vert, program, plan, adaptive=True,
                                      ec=ec, auto_config=auto_config,
                                      auto_space=auto_space)
     ec = ec or default_engine_config(vert, program, plan)
     step = jax.jit(make_superstep(program, plan, ec))
+    layout = plan_gather_layout(plan, vert)
     gs = init_gs(program.agg_dims)
     vert = init_vertex_values(vert, program, gs)
     msg = empty_msgs(vert.num_partitions, ec.n_parts * ec.bucket_cap,
@@ -197,7 +233,7 @@ def run_host(vert: VertexRel, program: VertexProgram,
         recompiled = False
         prev = (vert, msg, gs)
         with trace.annotate("superstep", "compute"):
-            vert2, msg2, gs2 = step(vert, msg, gs)
+            vert2, msg2, gs2 = step(vert, msg, gs, None, layout)
             jax.block_until_ready(gs2.superstep)
         ovf_delta = np.asarray(gs2.overflow) - np.asarray(gs.overflow)
         if (ovf_delta > 0).any():
@@ -253,6 +289,7 @@ def run_host(vert: VertexRel, program: VertexProgram,
                                              bucket_cap=need.bucket_cap)
                     msg = _regrow_msgs(msg, ec)
                 step = jax.jit(make_superstep(program, plan, ec))
+                layout = plan_gather_layout(plan, vert)
                 stats.append(coll.event(
                     i, "plan-switch", join=plan.join,
                     groupby=plan.groupby, connector=plan.connector,

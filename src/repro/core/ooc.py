@@ -156,6 +156,7 @@ from repro.core.plan import FRONTIER_FLOOR, STORAGES, PhysicalPlan
 from repro.core.program import VertexProgram
 from repro.core.relations import GlobalState, MsgRel, VertexRel, init_gs
 from repro.core.superstep import EngineConfig, jit_superstep
+from repro.kernels import backend as kbackend
 from repro.obs import trace
 from repro.obs.metrics import MetricsRegistry
 from repro.storage import TieredStore
@@ -366,6 +367,7 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                     ec: Optional[EngineConfig] = None,
                     auto_config=None,
                     auto_space: Optional[dict] = None,
+                    kernel_impl: Optional[str] = None,
                     stream: bool = True,
                     prefetch_depth: int = 2,
                     barrier_free: bool = True,
@@ -496,6 +498,16 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
         if ck_meta is not None and ck_meta.get("plan"):
             saved_plan = PhysicalPlan(**ck_meta["plan"])
         wanted_auto = plan == "auto"
+        if kernel_impl is not None:
+            # pin the hot-path kernel dispatch: into the concrete plan
+            # directly, or into the auto search space so every candidate
+            # (initial choice and mid-run switches) carries it
+            if isinstance(plan, PhysicalPlan):
+                plan = dataclasses.replace(plan, kernel_impl=kernel_impl)
+            else:
+                auto_space = dict(_OOC_AUTO_SPACE if auto_space is None
+                                  else auto_space)
+                auto_space.setdefault("kernel_impls", (kernel_impl,))
         plan, controller = _resolve_plan(
             shape_vert if resume_from is None else None, program, plan,
             adaptive=True, ec=ec, auto_config=auto_config,
@@ -508,8 +520,11 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                 # rather than re-choosing blind at superstep-0 stats;
                 # the controller re-plans from live statistics as usual
                 plan = saved_plan
+                if kernel_impl is not None:
+                    plan = dataclasses.replace(plan,
+                                               kernel_impl=kernel_impl)
                 if controller is not None:
-                    controller.plan = saved_plan
+                    controller.plan = plan
             if (plan.connector == "partitioning_merging"
                     and saved_plan.connector != "partitioning_merging"
                     and not saved_plan.sender_combine):
@@ -543,6 +558,25 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                                  max(Np // 2, 1))
         step = jit_superstep(program, plan, ec, donate_vertex=True)
         seen_widths = set()   # inbox widths this `step` has already traced
+
+        # kernel-path gather layouts, one per super-partition q. edge_src
+        # is immutable for the whole run (mutations rewrite edge_dst /
+        # edge_val only; commit never writes edge_src), so the cache is
+        # valid across regrows AND plan switches; plan_layout_fixed pads
+        # every q's layout to the SAME shape, so the shared jitted step
+        # traces once and takes each q's layout as a plain traced argument
+        gather_layouts = {}
+
+        def gather_layout(q):
+            if not kbackend.wants_edge_layout(plan):
+                return None
+            lay = gather_layouts.get(q)
+            if lay is None:
+                perm, tile = kbackend.plan_edge_layout(
+                    store.read("edge_src", q), Np)
+                lay = (jax.device_put(perm), jax.device_put(tile))
+                gather_layouts[q] = lay
+            return lay
 
         D = program.msg_dims
         if resume_from is None:
@@ -699,7 +733,8 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
             # resurrect mints correct vids past super-partition 0
             with trace.annotate("step_enqueue", "compute"):
                 v2, buckets, g2, cnts, mut = step(
-                    vpart, msg, gs, jnp.asarray(q * sp, jnp.int32))
+                    vpart, msg, gs, jnp.asarray(q * sp, jnp.int32),
+                    gather_layout(q))
             now = time.time()
             t_io["dispatch"] += now - td
             trace.complete("dispatch", "dispatch", td, now, q=q)

@@ -51,6 +51,12 @@ from dataclasses import dataclass
 # the two write-back policies the planner's storage dimension ranges over
 STORAGES = ("inplace", "delta")
 
+# hot-path kernel implementations (kernels/backend.resolve): "auto"
+# resolves per backend — compiled Pallas on TPU, the jnp reference
+# elsewhere; "pallas" forces the kernels (interpret mode off-TPU, the
+# bit-for-bit-testable emulator); "pallas_tpu" forces TPU lowering.
+KERNEL_IMPLS = ("auto", "ref", "pallas", "pallas_tpu")
+
 
 @dataclass(frozen=True)
 class PhysicalPlan:
@@ -74,12 +80,22 @@ class PhysicalPlan:
     # live set collapses — that is where the paper's left-outer win lives
     # under static shapes.
     frontier_capacity: float = 1.0
+    # hot-path kernel dispatch (kernels/backend.py): which implementation
+    # of the edge gather (csr_spmv one-hot MXU matmul) and the sender
+    # combine (segment_combine single-pass fold) the superstep uses. The
+    # planner prices the kernel path per machine model (MXU vs emulated),
+    # so "auto" picks it exactly where it wins.
+    kernel_impl: str = "auto"         # auto | ref | pallas | pallas_tpu
 
     def validate(self, combine_op: str):
         if self.groupby == "scatter" and combine_op == "custom":
             raise ValueError(
                 "scatter (hash) group-by needs a named monoid combine op; "
                 "use groupby='sort' for custom combine UDFs")
+        if self.kernel_impl not in KERNEL_IMPLS:
+            raise ValueError(
+                f"kernel_impl={self.kernel_impl!r}: expected one of "
+                f"{KERNEL_IMPLS}")
         return self
 
 

@@ -25,6 +25,7 @@ from repro.core import connector, groupby
 from repro.core.plan import PhysicalPlan
 from repro.core.program import ComputeOut, VertexProgram
 from repro.core.relations import GlobalState, MsgRel, VertexRel
+from repro.kernels import backend as kbackend
 
 
 @dataclass(frozen=True)
@@ -47,11 +48,43 @@ def _combine_fns(program: VertexProgram):
     return fn, jnp.full((program.msg_dims,), ident, jnp.float32)
 
 
+def compact_combined(dst, payload, valid, capc: int):
+    """Fused combine -> exchange-pack leg: compact each partition's
+    combined survivors (one row per distinct destination, dst still
+    ascending) down to the ``capc`` rows the buckets can actually accept,
+    so the bucket build never re-materializes (or re-sorts) the full
+    (P, Ep, C) edge-payload relation. Order-preserving, so the
+    ``presorted`` bucket contract holds on the compacted stream; rows
+    beyond capc are counted as bucket overflow (``capc >= n_parts *
+    bucket_cap``, so any such row would have overflowed its bucket
+    anyway — the drivers' regrow protocol fires identically with or
+    without the fusion)."""
+    def per_part(d, p, v):
+        idx, _, ovf = groupby.compact(v, capc)
+        ok = idx >= 0
+        take = idx.clip(0)
+        return (jnp.where(ok, d[take], -1),
+                jnp.where(ok[:, None], p[take], 0.0),
+                ok, ovf)
+    d2, p2, v2, ovf = jax.vmap(per_part)(dst, payload, valid)
+    return d2, p2, v2, jnp.sum(ovf)
+
+
 def make_superstep(program: VertexProgram, plan: PhysicalPlan,
                    ec: EngineConfig):
     plan.validate(program.combine_op)
     n_parts = ec.n_parts
     comb_fn, comb_ident = _combine_fns(program)
+
+    # ---- hot-path kernel dispatch (kernels/backend.py)
+    impl_r = kbackend.resolve(plan.kernel_impl)
+    named_comb = program.combine_op != "custom"
+    # csr_spmv gather: full_outer only — left_outer compacts the edge
+    # stream data-dependently, which the host-planned tiling can't follow
+    kernel_gather = impl_r != "ref" and plan.join == "full_outer"
+    # fuse combine -> exchange-pack on the kernel path (clean ref/pallas
+    # HLO A/B: the ref path keeps the seed's unfused lowering)
+    fuse_pack = impl_r != "ref" and plan.sender_combine and named_comb
 
     # ---- transport-dependent reductions
     if ec.axis_name is None:
@@ -170,7 +203,8 @@ def make_superstep(program: VertexProgram, plan: PhysicalPlan,
             agg = (out.aggregate, factive)
         return value, halt, gate & active, agg
 
-    def gen_messages(vert: VertexRel, value_new, gate_dense, gs):
+    def gen_messages(vert: VertexRel, value_new, gate_dense, gs,
+                     layout=None):
         """Edge-parallel send (dataflow D3). Under the left-outer plan the
         edge stream is COMPACTED to the frontier's edges first (cheap
         boolean prepass + cumsum), so payload generation, the sender
@@ -198,16 +232,42 @@ def make_superstep(program: VertexProgram, plan: PhysicalPlan,
         else:
             ovf_edges = jnp.zeros((), jnp.int32)
         src_vid = jnp.take_along_axis(vert.vid, esl, axis=1)
-        # (on TPU the row-blocked csr_spmv Pallas kernel implements this
-        # gather as one-hot MXU matmuls — kernels/csr_spmv; the jnp gather
-        # below is its oracle and the CPU path)
-        src_val = jnp.take_along_axis(value_new, esl[..., None]
-                                      .repeat(value_new.shape[-1], -1),
-                                      axis=1)
+        if kernel_gather and layout is not None:
+            # row-blocked csr_spmv Pallas kernel: the gather becomes
+            # one-hot MXU matmuls over the host-planned tiling. Invalid
+            # lanes read 0.0 where the jnp path reads row 0 — both are
+            # masked by egate before anything observable.
+            src_val = kbackend.edge_gather_values(
+                value_new, edge_src, layout, impl_r=impl_r)
+        else:
+            src_val = jnp.take_along_axis(value_new, esl[..., None]
+                                          .repeat(value_new.shape[-1], -1),
+                                          axis=1)
         payload = program.send(src_vid, src_val, edge_val, edge_dst, gs)
         return edge_dst, payload, egate, ovf_edges
 
     def sender_combine(dst, payload, valid):
+        if named_comb:
+            # segment_combine kernel path: single-pass blocked segmented
+            # fold over the dst-sorted stream. BOTH impls run the same
+            # blocked reduction order ("ref" = jnp re-execution of the
+            # kernel's tile network) so kernel_impl="ref" and ="pallas"
+            # are bit-for-bit identical even for float sums. pallas_call
+            # must not be vmapped (the batching rule would regrid the
+            # sequential tile carry), so partitions unroll — P_local is
+            # small and static.
+            big = jnp.iinfo(jnp.int32).max
+            outs = []
+            for p in range(dst.shape[0]):
+                key = jnp.where(valid[p], dst[p], big)
+                order = jnp.argsort(key)
+                ks, ps, vs = key[order], payload[p][order], valid[p][order]
+                folded, is_last = kbackend.sorted_segment_fold(
+                    ks, ps, vs, program.combine_op, impl_r=impl_r)
+                outs.append((jnp.where(is_last, ks, -1), folded, is_last))
+            stack = lambda i: jnp.stack([o[i] for o in outs])
+            return stack(0), stack(1), stack(2)
+
         def per_part(d, p, v):
             ks, folded, is_last = groupby.sort_combine(
                 jnp.where(v, d, jnp.iinfo(jnp.int32).max), p, v,
@@ -287,11 +347,14 @@ def make_superstep(program: VertexProgram, plan: PhysicalPlan,
         return vid, value, halt, edge_dst, edge_val, ovf, mut_buckets
 
     def superstep(vert: VertexRel, msg: MsgRel, gs: GlobalState,
-                  part0=None):
+                  part0=None, layout=None):
         """``part0`` (out-of-core only): global index of the resident
         block's first partition, so resurrect derives correct vids for
-        super-partitions past the first. Traced as a scalar — the jitted
-        step is shared across super-partitions without re-tracing."""
+        super-partitions past the first. ``layout`` (kernel path only):
+        host-planned gather tiling from ``kbackend.plan_edge_layout`` —
+        fixed-shape per graph shape, so the OOC driver threads
+        per-super-partition layouts through one shared jitted step. Both
+        traced — no re-tracing across super-partitions."""
         P, Np = vert.vid.shape
         # 1-2. receiver group-by + join + select (D1)
         combined, has_msg = receiver_groupby(msg, Np)
@@ -301,11 +364,17 @@ def make_superstep(program: VertexProgram, plan: PhysicalPlan,
         # 3. vertex updates (D2)
         value, halt, gate, agg = apply_updates(vert, out, active, frontier)
         # 4. message generation + sender combine + exchange (D3/D7)
-        dst, payload, valid, ovf_edges = gen_messages(vert, value, gate, gs)
+        dst, payload, valid, ovf_edges = gen_messages(vert, value, gate, gs,
+                                                      layout)
         presorted = False
+        ovf_pack = jnp.zeros((), jnp.int32)
         if plan.sender_combine:
             dst, payload, valid = sender_combine(dst, payload, valid)
             presorted = True  # sort_combine leaves dst ascending
+            capc = n_parts * ec.bucket_cap
+            if fuse_pack and capc < dst.shape[1]:
+                dst, payload, valid, ovf_pack = compact_combined(
+                    dst, payload, valid, capc)
         r_dst, r_pay, r_val, ovf = route(dst, payload, valid, ec.bucket_cap,
                                          Np, collect=ec.ooc_collect,
                                          presorted=presorted)
@@ -326,7 +395,8 @@ def make_superstep(program: VertexProgram, plan: PhysicalPlan,
         # (order = relations.OVF_BUCKET/FRONTIER/MUTATION/EDGE)
         zero = jnp.zeros((), jnp.int32)
         overflow = jnp.stack([
-            red_sum(ovf).astype(jnp.int32),
+            red_sum(ovf).astype(jnp.int32) +
+            red_sum(ovf_pack).astype(jnp.int32),
             (red_sum(ovf_f).astype(jnp.int32) if frontier is not None
              else zero),
             red_sum(m_ovf).astype(jnp.int32),

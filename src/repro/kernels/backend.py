@@ -1,18 +1,159 @@
-"""Kernel backend selection: Pallas compiled on TPU, interpret-mode
-elsewhere, or the jnp reference."""
+"""Kernel backend selection + the engine-facing kernel entry points.
+
+``resolve`` maps the ``PhysicalPlan.kernel_impl`` knob (auto | ref |
+pallas | pallas_tpu) to a concrete implementation, honouring the
+``REPRO_KERNEL_IMPL`` env override so CI can force a path without code
+changes. The rest of this module is the thin layer the superstep engine
+calls: a fixed-shape gather layout planner, the partition-flattened edge
+gather, and the blocked segmented fold — each shaped so that
+``kernel_impl="ref"`` and ``"pallas"`` are bit-for-bit identical.
+"""
 from __future__ import annotations
 
+import os
+from typing import Optional, Tuple
+
 import jax
+import jax.numpy as jnp
+import numpy as np
+
+VALID_IMPLS = ("auto", "ref", "pallas", "pallas_tpu")
+ENV_VAR = "REPRO_KERNEL_IMPL"
+
+# Engine block sizes, shared with the planner's cost model. BM is the
+# edge-stream tile; BR is the gather's row-block (the one-hot matmul
+# contraction width).
+GATHER_BLOCK_M = 512
+GATHER_BLOCK_R = 256
+COMBINE_BLOCK_M = 512
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def resolve(impl: str) -> str:
-    """impl in {auto, ref, pallas, pallas_tpu}."""
+def resolve(impl: str, *, tpu: Optional[bool] = None) -> str:
+    """Map a kernel_impl knob to a concrete impl in {ref, pallas,
+    pallas_tpu}.
+
+    - ``auto``: pallas_tpu on TPU, ref elsewhere (interpret mode is an
+      emulator, not a fast path — see the cost model's INTERPRET_PENALTY).
+    - ``pallas``: compiled on TPU, interpret mode elsewhere.
+    - ``pallas_tpu``: forced TPU lowering (fails off-TPU; debugging knob).
+    - ``tpu``: overrides backend detection — the planner resolves per
+      MACHINE MODEL (``MachineModel.mxu``), not per host process.
+    - ``$REPRO_KERNEL_IMPL`` overrides ``impl`` itself, including "auto".
+    """
+    env = os.environ.get(ENV_VAR)
+    if env:
+        if env not in VALID_IMPLS:
+            raise ValueError(
+                f"{ENV_VAR}={env!r}: expected one of {VALID_IMPLS}")
+        impl = env
+    if impl not in VALID_IMPLS:
+        raise ValueError(
+            f"kernel_impl={impl!r}: expected one of {VALID_IMPLS}")
+    if tpu is None:
+        tpu = on_tpu()
     if impl == "auto":
-        return "pallas_tpu" if on_tpu() else "ref"
-    if impl == "pallas" and on_tpu():
+        return "pallas_tpu" if tpu else "ref"
+    if impl == "pallas" and tpu:
         return "pallas_tpu"
     return impl
+
+
+def wants_edge_layout(plan) -> bool:
+    """True when the resolved kernel path consumes a gather layout.
+    full_outer only: left_outer compacts the edge stream data-dependently
+    each superstep, which the host-planned fixed tiling cannot express —
+    there the gather stays on the jnp path (the segmented fold and the
+    fused pack still kick in)."""
+    return resolve(plan.kernel_impl) != "ref" and plan.join == "full_outer"
+
+
+def plan_edge_layout(edge_src, n_rows: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side gather layout for a (P, Ep) edge_src block over (P, n_rows)
+    value rows. Partitions are flattened into ONE (P*Ep,) edge stream over
+    P*n_rows rows — ``pallas_call`` must not be vmapped (the batching rule
+    would regrid the kernel and break its sequential-carry assumption), so
+    a single kernel invocation serves the whole block. Uses
+    ``plan_layout_fixed``: the result shape depends only on the block's
+    shape, so every equal-shape super-partition yields an equal-shape
+    layout and the OOC driver can pass per-super-partition layouts through
+    one shared jitted superstep as traced arguments."""
+    from repro.kernels.csr_spmv.ops import plan_layout_fixed
+    edge_src = np.asarray(edge_src)
+    P, Ep = edge_src.shape
+    off = (np.arange(P, dtype=np.int64) * n_rows)[:, None]
+    flat = np.where(edge_src >= 0, edge_src + off, -1).reshape(-1)
+    return plan_layout_fixed(flat, P * n_rows, block_m=GATHER_BLOCK_M,
+                             block_r=GATHER_BLOCK_R)
+
+
+def edge_gather_values(values, edge_src, layout, *, impl_r: str):
+    """Gather ``values[p, edge_src[p, e]]`` per edge via the csr_spmv
+    one-hot-MXU-matmul kernel. values: (P, Np, V); edge_src: (P, Ep),
+    -1 = invalid; layout from ``plan_edge_layout``. Returns (P, Ep, V);
+    invalid lanes read 0.0 (masked downstream by the edge gate, exactly
+    like the clip-gather's arbitrary row-0 reads on the jnp path).
+
+    Bit-for-bit discipline: a finite value survives the one-hot matmul
+    exactly (one 1.0*x product plus exact 0.0 additions; -0.0 may
+    normalize to +0.0, which still compares equal). Non-finite values
+    would be destroyed by the 0*x products (0*inf = nan), so they ride a
+    side "class" channel (0 finite / 1 +inf / 2 -inf / 3 nan) and are
+    re-materialized after the gather."""
+    from repro.kernels.csr_spmv import ops as csr_ops
+    P, Np, V = values.shape
+    Ep = edge_src.shape[1]
+    vals = values.reshape(P * Np, V)
+    finite = jnp.isfinite(vals)
+    cls = jnp.where(finite, 0.0,
+                    jnp.where(jnp.isnan(vals), 3.0,
+                              jnp.where(vals > 0, 1.0, 2.0)))
+    packed = jnp.concatenate([jnp.where(finite, vals, 0.0), cls], axis=-1)
+    off = (jnp.arange(P, dtype=jnp.int32) * Np)[:, None]
+    flat_src = jnp.where(edge_src >= 0, edge_src + off, -1).reshape(-1)
+    ones = jnp.ones(flat_src.shape, jnp.float32)
+    out = csr_ops.edge_gather(packed, flat_src, ones, layout=layout,
+                              impl=impl_r, block_m=GATHER_BLOCK_M,
+                              block_r=GATHER_BLOCK_R)
+    g, c = out[:, :V], out[:, V:]
+    g = jnp.where(c == 1.0, jnp.inf,
+                  jnp.where(c == 2.0, -jnp.inf,
+                            jnp.where(c == 3.0, jnp.nan, g)))
+    return g.reshape(P, Ep, V)
+
+
+def sorted_segment_fold(keys, payload, valid, op: str, *, impl_r: str):
+    """Inclusive segmented fold over a key-sorted stream — the engine's
+    sender-combine reduction. keys: (M,) ascending, invalid rows keyed
+    int32.max at the tail; payload: (M, D). Returns (folded (M, D),
+    is_last (M,) — already masked by valid).
+
+    Both impls execute the SAME blocked reduction order (per-tile
+    Hillis-Steele doubling + sequential tile carry): "ref" through
+    ``segment_combine_blocked`` jnp, "pallas" through the Pallas kernel
+    (interpret mode off-TPU). M is padded to a tile multiple here so the
+    kernel never sees a ragged tile — one code path, bit-for-bit parity
+    for float sums included."""
+    from repro.kernels.segment_combine.ref import segment_combine_blocked
+    from repro.kernels.segment_combine.segment_combine import \
+        segment_combine_pallas
+    M, D = payload.shape
+    BM = min(COMBINE_BLOCK_M, M)
+    pad = (-M) % BM
+    if pad:
+        big = jnp.iinfo(jnp.int32).max
+        keys = jnp.concatenate([keys, jnp.full((pad,), big, keys.dtype)])
+        payload = jnp.concatenate(
+            [payload, jnp.zeros((pad, D), payload.dtype)])
+        valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
+    if impl_r == "ref":
+        folded, is_last = segment_combine_blocked(keys, payload, valid, op,
+                                                  block_m=BM)
+    else:
+        folded, is_last = segment_combine_pallas(
+            keys, payload, valid, op, block_m=BM,
+            interpret=(impl_r != "pallas_tpu"))
+    return folded[:M], is_last[:M]

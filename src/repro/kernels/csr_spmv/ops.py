@@ -43,6 +43,39 @@ def plan_layout(edge_src: np.ndarray, n_rows: int, *, block_m: int = 512,
     return perm, tile_row
 
 
+def layout_capacity(n_edge_slots: int, n_rows: int, *, block_m: int = 512,
+                    block_r: int = 256) -> int:
+    """Worst-case padded edge-slot count of ``plan_layout``: each non-empty
+    row block wastes < block_m slots, so E rounded up plus one block per
+    row block always fits. A function of SHAPES only — no edge data."""
+    n_blocks = (n_rows + block_r - 1) // block_r
+    cap = ((n_edge_slots + block_m - 1) // block_m + n_blocks) * block_m
+    return max(cap, block_m)
+
+
+def plan_layout_fixed(edge_src: np.ndarray, n_rows: int, *,
+                      block_m: int = 512, block_r: int = 256):
+    """``plan_layout`` padded to shapes that depend ONLY on
+    (len(edge_src), n_rows, block_m, block_r) — never on where the edges
+    actually point. Equal-shape edge blocks therefore produce equal-shape
+    layouts, which is what lets a layout be a TRACED argument of one
+    shared jitted superstep (the out-of-core driver reuses a single
+    compiled step across super-partitions, each with its own layout).
+    Pad slots carry perm = -1 (dropped by the scatter-back) and
+    tile_row = 0 (the pad tiles gather nothing: their src rows are -1).
+    perm is int32 (the int64 of plan_layout would be silently downcast
+    under jit with x64 disabled)."""
+    perm, tile_row = plan_layout(edge_src, n_rows, block_m=block_m,
+                                 block_r=block_r)
+    cap = layout_capacity(len(edge_src), n_rows, block_m=block_m,
+                          block_r=block_r)
+    perm_f = np.full(cap, -1, np.int32)
+    perm_f[:len(perm)] = perm
+    tile_f = np.zeros(cap // block_m, np.int32)
+    tile_f[:len(tile_row)] = tile_row
+    return perm_f, tile_f
+
+
 def edge_gather(values, edge_src, edge_val, *, layout=None,
                 impl: str = "auto", block_m: int = 512,
                 block_r: int = 256):

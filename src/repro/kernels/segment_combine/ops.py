@@ -13,11 +13,12 @@ from repro.kernels.segment_combine.segment_combine import \
     segment_combine_pallas
 
 
-@functools.partial(jax.jit, static_argnames=("op", "impl"))
+@functools.partial(jax.jit, static_argnames=("op", "impl", "block_m"))
 def segment_combine(seg_ids, payload, valid, op: str = "sum",
-                    impl: str = "auto"):
+                    impl: str = "auto", block_m: int = 512):
     impl = backend.resolve(impl)
     if impl == "ref":
         return segment_combine_ref(seg_ids, payload, valid, op)
     return segment_combine_pallas(seg_ids, payload, valid, op,
+                                  block_m=block_m,
                                   interpret=(impl != "pallas_tpu"))

@@ -36,3 +36,58 @@ def segment_combine_ref(seg_ids: jax.Array, payload: jax.Array,
     is_last = jnp.concatenate([seg_ids[1:] != seg_ids[:-1],
                                jnp.ones((1,), bool)]) & valid
     return folded, is_last
+
+
+def segment_combine_blocked(seg_ids: jax.Array, payload: jax.Array,
+                            valid: jax.Array, op: str = "sum", *,
+                            block_m: int = 512):
+    """Plain-jnp re-execution of the Pallas kernel's EXACT computation
+    order: per-tile Hillis-Steele doubling scan + sequential carry splice
+    across tiles (`segment_combine.py:_kernel`).
+
+    `segment_combine_ref` above is the readable oracle, but its
+    `associative_scan` brackets float sums differently, so its low bits
+    can differ from the kernel's. The engine's ``kernel_impl="ref"``
+    sender-combine path folds through THIS function so that "ref" and
+    "pallas" runs stay bit-for-bit identical even for ``op="sum"``
+    (min/max are reduction-order-insensitive either way).
+
+    A ragged final tile is padded with (int32.max, IDENT); the in-tile
+    scan is causal (row i only reads rows < i), so pad rows at the tail
+    cannot perturb real rows.
+
+    The inter-tile carry is a `lax.scan` (NOT a Python loop): the trace
+    stays O(1) in n_tiles, matching the kernel's sequential grid — an
+    unrolled loop makes XLA compile time explode at real graph sizes
+    (webmap-tiny already has ~270 tiles per partition)."""
+    from repro.kernels.segment_combine.segment_combine import (
+        IDENT, _fn, _segmented_scan_tile)
+    M, D = payload.shape
+    BM = min(block_m, M)
+    big = jnp.iinfo(jnp.int32).max
+    seg2 = jnp.where(valid, seg_ids, big)[:, None]
+    pay = jnp.where(valid[:, None], payload, IDENT[op]).astype(jnp.float32)
+    n_tiles = -(-M // BM)
+    pad = n_tiles * BM - M
+    segp = jnp.concatenate([seg2, jnp.full((pad, 1), big, seg2.dtype)])
+    payp = jnp.concatenate([pay, jnp.full((pad, D), IDENT[op], pay.dtype)])
+    fn = _fn(op)
+
+    def tile(carry, sp):
+        prev_seg, prev_val = carry
+        seg, payt = sp
+        v, boundary = _segmented_scan_tile(seg, payt, op)
+        first = jnp.cumsum(boundary.astype(jnp.int32), axis=0) == 1
+        cont = (seg == prev_seg) & first
+        v = jnp.where(cont, fn(prev_val, v), v)
+        return (seg[-1, 0], v[-1:, :]), v
+
+    carry0 = (jnp.int32(-2), jnp.full((1, D), IDENT[op], jnp.float32))
+    _, outs = jax.lax.scan(tile, carry0,
+                           (segp.reshape(n_tiles, BM, 1),
+                            payp.reshape(n_tiles, BM, D)))
+    folded = outs.reshape(n_tiles * BM, D)[:M]
+    s = seg2[:, 0]
+    is_last = jnp.concatenate([s[1:] != s[:-1],
+                               jnp.ones((1,), bool)]) & valid
+    return folded, is_last

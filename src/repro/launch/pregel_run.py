@@ -164,6 +164,15 @@ def main():
     ap.add_argument("--connector", default="partitioning")
     ap.add_argument("--sender-combine", type=int, default=1)
     ap.add_argument("--partition", default="hash", choices=["hash","range"])
+    ap.add_argument("--kernel-impl", default="auto",
+                    choices=["auto", "ref", "pallas", "pallas_tpu"],
+                    help="superstep hot-path kernel dispatch "
+                         "(kernels/backend.py): auto resolves per backend "
+                         "(compiled Pallas on TPU, jnp reference "
+                         "elsewhere); pallas forces the kernels "
+                         "(interpret mode off-TPU); ref forces the jnp "
+                         "path. With --auto-plan the planner prices both "
+                         "and the chosen plan carries the winner")
     ap.add_argument("--auto-plan", action="store_true",
                     help="let the cost-based planner pick (and, in the "
                          "real-run mode, mid-run re-pick) the plan")
@@ -237,7 +246,8 @@ def main():
         join=args.join, groupby=args.groupby,
         connector=args.connector,
         sender_combine=bool(args.sender_combine),
-        partition=args.partition)
+        partition=args.partition,
+        kernel_impl=args.kernel_impl)
     if args.dryrun:
         out_dir = Path(args.out)
         out_dir.mkdir(parents=True, exist_ok=True)
@@ -292,8 +302,13 @@ def main():
         if args.memory_budget_bytes and not args.disk_dir:
             ap.error("--memory-budget-bytes requires --disk-dir "
                      "(a budget needs somewhere to spill)")
+        # pin the kernel dispatch inside the auto-planner's search space
+        # (a concrete plan already carries it from the CLI knob)
+        kimp = (args.kernel_impl if args.auto_plan
+                and args.kernel_impl != "auto" else None)
         res = run_out_of_core(vert, program, plan,
                               budget_partitions=budget, max_supersteps=40,
+                              kernel_impl=kimp,
                               stream=args.stream,
                               barrier_free=args.barrier_free,
                               memory_budget_bytes=args.memory_budget_bytes,
@@ -311,8 +326,10 @@ def main():
     else:
         host_cb = ((lambda i, v, m, g, rec: show(i, rec))
                    if show is not None else None)
+        kimp = (args.kernel_impl if args.auto_plan
+                and args.kernel_impl != "auto" else None)
         res = run_host(vert, program, plan, max_supersteps=40,
-                       on_superstep=host_cb)
+                       kernel_impl=kimp, on_superstep=host_cb)
         mode = "in-memory"
     vals = gather_values(res.vertex, n)
     print(f"{args.algo} on {args.dataset} [{mode}]: "

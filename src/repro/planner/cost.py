@@ -58,6 +58,13 @@ K_SCATTER = 4.0
 SORT_PASS_FRAC = 0.25
 FRONTIER_SLACK = 2.0   # refit keeps 2x headroom over the live frontier
 MIN_FRONTIER = FRONTIER_FLOOR   # the driver's refit floor
+# INTERPRET_PENALTY [dimensionless]: Pallas interpret mode executes the
+# kernel's tile program through the host backend — every block move is a
+# real HBM/DRAM round trip and the MXU matmul degenerates to scalar code.
+# Charged on the kernel path's streamed bytes when the resolved impl is
+# "pallas" (interpret) so plan="auto" never picks the emulator over the
+# jnp reference off-TPU.
+INTERPRET_PENALTY = 8.0
 
 
 @dataclass(frozen=True)
@@ -84,6 +91,12 @@ class MachineModel:
     k_compute: float = K_COMPUTE
     k_scatter: float = K_SCATTER
     sort_pass_frac: float = SORT_PASS_FRAC
+    # does this machine have a matrix unit the Pallas kernels compile to?
+    # `estimate` resolves plan.kernel_impl="auto"/"pallas" against THIS
+    # flag (not the host process's backend): the planner prices plans for
+    # the machine model it is told about, which is what lets one process
+    # rank TPU and emulated plans side by side.
+    mxu: bool = True
 
 
 DEFAULT_MACHINE = MachineModel()
@@ -95,7 +108,8 @@ DEFAULT_MACHINE = MachineModel()
 # memory" is the same memory system as everything else here.
 EMULATED_MACHINE = MachineModel(link_bw=DEFAULT_MACHINE.hbm_bw,
                                 host_bw=DEFAULT_MACHINE.hbm_bw,
-                                host_mem_bw=DEFAULT_MACHINE.hbm_bw)
+                                host_mem_bw=DEFAULT_MACHINE.hbm_bw,
+                                mxu=False)
 
 
 @dataclass(frozen=True)
@@ -209,6 +223,15 @@ class PlanCost:
     # overlap max — this is what turns the streamed ``max(device, host,
     # disk)`` formula into a critical-path estimate.
     serial_seconds: float = 0.0
+    # per-term raw components (flops / bytes per axis) — what the
+    # roofline benchmark plots against the machine ceilings; `terms`
+    # above only keeps the converted seconds
+    detail: dict = field(default_factory=dict)
+
+    def _detail(self, term: str) -> dict:
+        return self.detail.setdefault(term, {
+            "flops": 0.0, "hbm_bytes": 0.0, "exchange_bytes": 0.0,
+            "host_bytes": 0.0, "disk_bytes": 0.0, "serial_bytes": 0.0})
 
     def add(self, term: str, machine: MachineModel, *, flops: float = 0.0,
             bytes: float = 0.0, exchange_bytes: float = 0.0,
@@ -223,6 +246,12 @@ class PlanCost:
             exchange_bytes / machine.link_bw +
             host_bytes / machine.host_bw +
             disk_bytes / machine.disk_bw)
+        d = self._detail(term)
+        d["flops"] += flops
+        d["hbm_bytes"] += bytes
+        d["exchange_bytes"] += exchange_bytes
+        d["host_bytes"] += host_bytes
+        d["disk_bytes"] += disk_bytes
 
     def add_serial(self, term: str, machine: MachineModel, *,
                    bytes: float = 0.0):
@@ -234,6 +263,7 @@ class PlanCost:
         s = bytes / machine.host_mem_bw
         self.serial_seconds += s
         self.terms[term] = self.terms.get(term, 0.0) + s
+        self._detail(term)["serial_bytes"] += bytes
 
     def scale_serial(self, factor: float, term: str = "inbox_rebuild"):
         """Apply a measured calibration multiplier to the serial leg
@@ -311,6 +341,22 @@ def estimate(plan: PhysicalPlan, g: GraphStats, obs: Observation,
     M = P * cap                       # received message capacity
     msg_w = (1 + D) * WORD + 1        # dst + payload + valid per slot
 
+    # hot-path kernel dispatch, resolved against the MACHINE MODEL (not
+    # the host backend): "auto" prices as pallas_tpu when the machine has
+    # an MXU, as the jnp reference otherwise — which is exactly how the
+    # engine will resolve it there, so plan="auto" picks the kernel path
+    # per backend. Interpret mode ("pallas" off-MXU) is an emulator and
+    # carries INTERPRET_PENALTY on its streamed bytes.
+    from repro.kernels import backend as _kbackend
+    kern = _kbackend.resolve(plan.kernel_impl, tpu=machine.mxu)
+    pen = INTERPRET_PENALTY if kern == "pallas" else 1.0
+    kern_gather = kern != "ref" and plan.join == "full_outer"
+    # (the engine only folds named monoids through the kernel; the model
+    # can't see combine_op here, so custom-combine programs are mildly
+    # mispriced on the kernel path — acceptable: ranking is plan-relative
+    # and every candidate shares the same kernel_impl by default)
+    kern_combine = kern != "ref" and plan.sender_combine
+
     # D1: receiver group-by over the full message capacity
     if plan.connector == "partitioning_merging":
         # presorted runs: one segmented scan, then a scatter of the <=1
@@ -344,13 +390,35 @@ def estimate(plan: PhysicalPlan, g: GraphStats, obs: Observation,
         e_work = min(max(8 * F, MIN_FRONTIER, f * Ep), Ep)
 
     # D3: edge-parallel payload generation
-    c.add("send", machine, flops=kc * e_work * D,
-          bytes=ks * e_work * (V + D + 2) * WORD)
+    if kern_gather:
+        # csr_spmv kernel: the value gather becomes row-blocked one-hot
+        # MXU matmuls ((BM x BR) @ (BR x 2V) per tile — 2V: the value
+        # channel plus the non-finite class channel), so the random HBM
+        # gather's scatter amplification disappears: the value block and
+        # edge stream are READ ONCE, sequentially, and the matmul flops
+        # buy the addressing. Off-MXU interpret mode streams the same
+        # bytes through the emulator at INTERPRET_PENALTY.
+        from repro.kernels.backend import GATHER_BLOCK_R
+        c.add("send", machine,
+              flops=kc * e_work * D +
+              2.0 * e_work * GATHER_BLOCK_R * 2 * V,
+              bytes=pen * e_work * (V + D + 2) * WORD)
+    else:
+        c.add("send", machine, flops=kc * e_work * D,
+              bytes=ks * e_work * (V + D + 2) * WORD)
 
     # D3/D7: sender combine = sort + segmented fold over the edge stream
     if plan.sender_combine:
-        c.add("sender_combine", machine, flops=kc * e_work * D,
-              bytes=sort_b(e_work, msg_w) + e_work * msg_w)
+        if kern == "pallas_tpu":
+            # segment_combine kernel: the fold runs VMEM-resident inside
+            # ONE streamed pass over the sorted run (the jnp fold's
+            # multi-pass scan through HBM disappears); the dst argsort
+            # remains either way
+            c.add("sender_combine", machine, flops=kc * e_work * D,
+                  bytes=sort_b(e_work, msg_w) + 0.5 * e_work * msg_w)
+        else:
+            c.add("sender_combine", machine, flops=kc * e_work * D,
+                  bytes=sort_b(e_work, msg_w) + pen * e_work * msg_w)
 
     # connector bucket build (bucket_by_owner): the merging connector
     # with hash partitioning sorts twice (by dst, then stably by owner);
@@ -363,9 +431,14 @@ def estimate(plan: PhysicalPlan, g: GraphStats, obs: Observation,
         n_sorts = 2
     else:
         n_sorts = 1
-    c.add("connector", machine, flops=kc * e_work,
-          bytes=n_sorts * sort_b(e_work, msg_w) +
-          ks * e_work * msg_w)
+    # with the kernel fold in play the scatter->combine->pack leg is fused:
+    # combined survivors are compacted to the bucket capacity (M) BEFORE
+    # routing, so the connector never sees more than M rows and the
+    # intermediate (P, Ep, C) payload relation is never materialized
+    e_pack = min(e_work, float(M)) if kern_combine else e_work
+    c.add("connector", machine, flops=kc * e_pack,
+          bytes=n_sorts * sort_b(e_pack, msg_w) +
+          ks * e_pack * msg_w)
 
     # exchange: fixed-capacity buckets cross the links whole
     c.add("exchange", machine,
@@ -514,20 +587,23 @@ def _fit_constants(program, g: GraphStats, machine: MachineModel):
     clamped to sane ranges; a degenerate system keeps the defaults."""
     import numpy as np
     obs = Observation(frontier_density=1.0)
+    # probes pin kernel_impl="ref": hlo_calibrate lowers on the host CPU
+    # where the reference path runs, so the fit must price the same path
+    # it measures (the kernel path's constants ride along unfitted)
     if program.combine_op == "custom":
         probes = [PhysicalPlan(join="full_outer", groupby="sort",
                                connector="partitioning",
-                               sender_combine=False),
+                               sender_combine=False, kernel_impl="ref"),
                   PhysicalPlan(join="full_outer", groupby="sort",
                                connector="partitioning",
-                               sender_combine=True)]
+                               sender_combine=True, kernel_impl="ref")]
     else:
         probes = [PhysicalPlan(join="full_outer", groupby="scatter",
                                connector="partitioning",
-                               sender_combine=False),
+                               sender_combine=False, kernel_impl="ref"),
                   PhysicalPlan(join="full_outer", groupby="sort",
                                connector="partitioning",
-                               sender_combine=False)]
+                               sender_combine=False, kernel_impl="ref")]
     P = max(g.n_partitions, 1)   # hlo measures all partitions; the model
     unit = lambda kc, ks, sp: dataclasses.replace(   # is per-partition
         machine, k_compute=kc, k_scatter=ks, sort_pass_frac=sp)

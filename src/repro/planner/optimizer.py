@@ -31,27 +31,35 @@ def plan_space(program, base: Optional[PhysicalPlan] = None, *,
                connectors: Tuple[str, ...] = CONNECTORS,
                sender_combines: Tuple[bool, ...] = (True, False),
                storages: Optional[Tuple[str, ...]] = None,
+               kernel_impls: Optional[Tuple[str, ...]] = None,
                ) -> Iterator[PhysicalPlan]:
     """Valid plans for `program`, varying the per-superstep dimensions of
     `base`. Invalid combinations are pruned via PhysicalPlan.validate.
     ``storages=None`` inherits the base plan's storage policy; the OOC
-    driver passes ``core.plan.STORAGES`` to search both."""
+    driver passes ``core.plan.STORAGES`` to search both.
+    ``kernel_impls=None`` inherits the base plan's kernel dispatch —
+    "auto" already resolves per machine inside ``estimate``, so the extra
+    dimension is only worth searching when a caller pins competing
+    implementations explicitly (e.g. ("ref", "pallas"))."""
     base = base if base is not None else DEFAULT_PLAN
     storages = storages if storages is not None else (base.storage,)
+    kernel_impls = (kernel_impls if kernel_impls is not None
+                    else (base.kernel_impl,))
     for join in joins:
         for groupby in groupbys:
             for connector in connectors:
                 for sc in sender_combines:
                     for storage in storages:
-                        plan = dataclasses.replace(
-                            base, join=join, groupby=groupby,
-                            connector=connector, sender_combine=sc,
-                            storage=storage)
-                        try:
-                            plan.validate(program.combine_op)
-                        except ValueError:
-                            continue
-                        yield plan
+                        for kern in kernel_impls:
+                            plan = dataclasses.replace(
+                                base, join=join, groupby=groupby,
+                                connector=connector, sender_combine=sc,
+                                storage=storage, kernel_impl=kern)
+                            try:
+                                plan.validate(program.combine_op)
+                            except ValueError:
+                                continue
+                            yield plan
 
 
 def rank(program, g: GraphStats, obs: Observation, *,

@@ -79,6 +79,103 @@ def test_groupby_strategies_agree(M, Np, op, seed):
                                atol=1e-5)
 
 
+INT32_MAX = np.iinfo(np.int32).max
+
+
+@given(st.integers(1, 300), st.integers(1, 3),
+       st.sampled_from(["sum", "min", "max"]),
+       st.sampled_from([32, 64, 128]),
+       st.sampled_from([0.0, 0.3, 0.8, 1.0]),
+       st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_segment_fold_blocked_ref_vs_pallas_bitwise(M, D, op, bm, p_valid,
+                                                    seed):
+    """The engine's two fold paths (jnp blocked ref vs Pallas interpret)
+    are BIT-FOR-BIT identical — including degenerate inputs: all-invalid
+    streams (p_valid=0), int32-max sentinel keys, M not divisible by
+    block_m (ragged final tile), and D=1 payloads."""
+    from repro.kernels.segment_combine.ref import segment_combine_blocked
+    from repro.kernels.segment_combine.segment_combine import \
+        segment_combine_pallas
+    rng = np.random.default_rng(seed)
+    seg = np.sort(rng.integers(0, max(M // 3, 1), M)).astype(np.int32)
+    valid = rng.random(M) < p_valid
+    # invalid rows carry the engine's sentinel key (sender_combine keys
+    # invalid lanes int32.max before the sort)
+    seg = np.where(valid, seg, INT32_MAX).astype(np.int32)
+    pay = rng.normal(size=(M, D)).astype(np.float32)
+    args = (jnp.asarray(seg), jnp.asarray(pay), jnp.asarray(valid), op)
+    f_r, l_r = segment_combine_blocked(*args, block_m=bm)
+    f_p, l_p = segment_combine_pallas(*args, block_m=bm, interpret=True)
+    assert np.array_equal(np.asarray(l_r), np.asarray(l_p))
+    assert np.array_equal(np.asarray(f_r), np.asarray(f_p))
+    # oracle: every marked row closes a maximal contiguous run of its key
+    # and carries that run's fold over its valid rows
+    f, last = np.asarray(f_p), np.asarray(l_p)
+    red = {"sum": np.sum, "min": np.min, "max": np.max}[op]
+    bounds = [0] + [i + 1 for i in range(M - 1) if seg[i] != seg[i + 1]] \
+        + [M]
+    n_marked = 0
+    for a, b in zip(bounds[:-1], bounds[1:]):
+        if valid[b - 1]:
+            n_marked += 1
+            assert last[b - 1]
+            want = red(pay[a:b][valid[a:b]], axis=0)
+            np.testing.assert_allclose(f[b - 1], want, atol=1e-4)
+    assert int(last.sum()) == n_marked
+
+
+def test_segment_fold_empty_and_all_sentinel():
+    """Deterministic degenerate corners: an empty (all-invalid) stream and
+    a stream of nothing but sentinel keys produce no marked rows, on both
+    impls, bit-for-bit."""
+    from repro.kernels.segment_combine.ref import segment_combine_blocked
+    from repro.kernels.segment_combine.segment_combine import \
+        segment_combine_pallas
+    for M, D in [(1, 1), (7, 2), (64, 1)]:
+        seg = jnp.full((M,), INT32_MAX, jnp.int32)
+        pay = jnp.ones((M, D), jnp.float32)
+        valid = jnp.zeros((M,), bool)
+        f_r, l_r = segment_combine_blocked(seg, pay, valid, "sum",
+                                           block_m=32)
+        f_p, l_p = segment_combine_pallas(seg, pay, valid, "sum",
+                                          block_m=32, interpret=True)
+        assert not np.asarray(l_r).any() and not np.asarray(l_p).any()
+        assert np.array_equal(np.asarray(f_r), np.asarray(f_p))
+
+
+@given(st.sampled_from([(1, 40, 96), (2, 30, 64), (2, 257, 100)]),
+       st.integers(1, 3),
+       st.sampled_from([0.0, 0.2, 1.0]),
+       st.booleans(),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_edge_gather_engine_matches_take_oracle(shape, V, p_inv, nonfinite,
+                                                seed):
+    """The engine's kernel gather (one-hot MXU matmul + class-channel
+    non-finite reconstruction) reproduces take_along_axis EXACTLY on
+    valid lanes — inf/-inf/nan included — and reads 0.0 on invalid lanes;
+    degenerate inputs: all-invalid edge blocks (p_inv=1) and edge counts
+    not divisible by the kernel block."""
+    from repro.kernels import backend as kbackend
+    P, Np, Ep = shape
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, Np, (P, Ep)).astype(np.int32)
+    src = np.where(rng.random((P, Ep)) < p_inv, -1, src).astype(np.int32)
+    vals = rng.normal(size=(P, Np, V)).astype(np.float32)
+    if nonfinite:
+        for bad in (np.inf, -np.inf, np.nan):
+            mask = rng.random((P, Np, V)) < 0.05
+            vals = np.where(mask, bad, vals).astype(np.float32)
+    layout = kbackend.plan_edge_layout(src, Np)
+    got = np.asarray(kbackend.edge_gather_values(
+        jnp.asarray(vals), jnp.asarray(src), layout, impl_r="pallas"))
+    want = np.take_along_axis(vals, np.maximum(src, 0)[:, :, None], axis=1)
+    ok = src >= 0
+    np.testing.assert_array_equal(got[ok], want[ok])
+    assert (got[~ok] == 0.0).all()
+
+
 @given(st.integers(10, 200), st.integers(0, 2 ** 31 - 1))
 @settings(max_examples=10, deadline=None)
 def test_segment_combine_kernel_matches_numpy(M, seed):
