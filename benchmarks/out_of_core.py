@@ -26,6 +26,14 @@ global inter-superstep barrier + synchronous page I/O, in DRAM and on
 the disk tier, reporting wall times, readiness-stall seconds and I/O
 queue-depth percentiles.
 
+``--sharded`` (-> ``BENCH_sharded.json``) races the REAL multi-device
+driver (``core/sharded.py``): the same fixed graph on a 1/2/4/8-device
+host mesh, per-device-count wall time, exchange-stall seconds and
+all_to_all wire bytes, plus the planner's predicted exchange seconds
+(net axis, calibrated the way the adaptive controller does it: a
+net_scale fit on the first half of the measured exchange stalls,
+validated against the second half).
+
 Everything lands in machine-readable ``BENCH_ooc.json`` (per-config
 steady-state wall times, streaming speedups, picked plans) so CI can
 archive the perf trajectory across PRs. ``--smoke`` runs a tiny config
@@ -37,7 +45,14 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
+import sys
 import tempfile
+
+# must land before the repro import chain pulls in jax: the sharded race
+# needs a multi-device host platform (same hack as launch/pregel_run)
+if "--sharded" in sys.argv and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import numpy as np
 
@@ -414,10 +429,131 @@ def trace_capture(scale: float, trace_out: str, P: int = 8):
     return summary
 
 
+def _steady_exchange(res):
+    """Per-superstep (stall_s, bytes) lists, recompile steps dropped —
+    same steady-state policy as time_supersteps."""
+    recs = [s for s in res.stats
+            if "wall_s" in s and not s.get("recompiled", False)]
+    if not recs:
+        recs = [s for s in res.stats if "wall_s" in s][1:]
+    return ([float(s.get("exchange_stall_s", 0.0)) for s in recs],
+            [int(s.get("exchange_bytes", 0)) for s in recs])
+
+
+def sharded_scaling(scale: float, P: int = 8,
+                    device_counts=(1, 2, 4, 8)):
+    """The ISSUE-8 tentpole curve: the SAME graph raced across mesh
+    sizes on the real sharded driver (``run_sharded``: all_to_all
+    exchange inside one shard_map'd superstep). Per device count:
+    steady-state wall seconds, exchange-stall seconds, all_to_all wire
+    bytes, and the planner's predicted exchange seconds — net_scale fit
+    on the FIRST half of the measured stalls (the controller's clamp,
+    [0.125, 8]), checked against the SECOND half so 'predicted within 2x
+    of measured' is a held-out claim, not a tautology."""
+    import jax
+
+    from repro.core import run_sharded
+    from repro.planner.cost import (EMULATED_MACHINE, GraphStats,
+                                    Observation, estimate)
+
+    n = max(int(16_000 * scale), 16 * P)
+    edges = rmat_graph(n, 10 * n, seed=4)
+    prog = PageRank(n, iterations=6)
+    plan = prog.suggested_plan
+    avail = len(jax.devices())
+    counts = [d for d in device_counts if d <= avail and P % d == 0]
+    out = {"n_vertices": n, "P": P, "devices_available": avail,
+           "curve": {}}
+    g = None
+    for N in counts:
+        vert = load_graph(edges, n, P=P, value_dims=2)
+        if g is None:
+            g = GraphStats(
+                n_vertices=n,
+                n_edges=int((np.asarray(vert.edge_src) >= 0).sum()),
+                n_partitions=P,
+                vertex_capacity=int(vert.vid.shape[1]),
+                edge_capacity=int(vert.edge_src.shape[1]),
+                value_dims=prog.value_dims, msg_dims=prog.msg_dims)
+        res = run_sharded(vert, prog, plan, devices=N, max_supersteps=8)
+        wall = time_supersteps(res)
+        stalls, xbytes = _steady_exchange(res)
+        mean_stall = float(np.mean(stalls)) if stalls else 0.0
+        row = {"devices": N, "wall_s": wall,
+               "supersteps": res.supersteps,
+               "exchange_stall_s": float(np.sum(stalls)),
+               "exchange_stall_mean_s": mean_stall,
+               "exchange_bytes": int(np.sum(xbytes))}
+        # planner's exchange prediction (net axis) vs the measured span
+        obs = Observation(frontier_density=1.0, sharded=N > 1,
+                          n_workers=N)
+        analytic = estimate(plan, g, obs, EMULATED_MACHINE).net_seconds
+        row["analytic_exchange_s"] = analytic
+        if N > 1 and analytic > 0 and len(stalls) >= 2:
+            half = max(len(stalls) // 2, 1)
+            fit = float(np.clip(np.mean(stalls[:half]) / analytic,
+                                0.125, 8.0))
+            held_out = float(np.mean(stalls[half:]) or mean_stall)
+            predicted = analytic * fit
+            ratio = predicted / max(held_out, 1e-12)
+            row.update(net_scale_fit=fit, predicted_exchange_s=predicted,
+                       predicted_over_measured=ratio,
+                       within_2x=bool(0.5 <= ratio <= 2.0))
+        else:
+            row.update(net_scale_fit=1.0, predicted_exchange_s=analytic,
+                       predicted_over_measured=None, within_2x=None)
+        out["curve"][str(N)] = row
+        record(f"sharded/devices_{N}", wall * 1e6,
+               f"exchange_stall_s={row['exchange_stall_s']:.4f},"
+               f"exchange_MiB={row['exchange_bytes'] / 2**20:.2f}")
+    return out
+
+
+def validate_sharded(payload: dict) -> bool:
+    """Schema check for BENCH_sharded.json (CI gate; scalability.py
+    reuses it). Raises SystemExit on a malformed artifact."""
+    curve = payload.get("curve")
+    if not isinstance(curve, dict) or not curve:
+        raise SystemExit("BENCH_sharded.json: missing/empty 'curve'")
+    need = ("devices", "wall_s", "supersteps", "exchange_stall_s",
+            "exchange_bytes", "analytic_exchange_s",
+            "predicted_exchange_s")
+    for key, row in curve.items():
+        for f in need:
+            if f not in row:
+                raise SystemExit(
+                    f"BENCH_sharded.json: curve[{key}] missing '{f}'")
+        if not row["wall_s"] > 0:
+            raise SystemExit(
+                f"BENCH_sharded.json: curve[{key}] wall_s <= 0")
+        if row["devices"] > 1 and not row["exchange_bytes"] > 0:
+            raise SystemExit(
+                f"BENCH_sharded.json: curve[{key}] has {row['devices']} "
+                "workers but zero all_to_all wire bytes")
+    multi = [r for r in curve.values()
+             if r["devices"] > 1 and r.get("within_2x") is not None]
+    if multi:
+        ok = sum(1 for r in multi if r["within_2x"])
+        print(f"sharded: predicted exchange within 2x of measured for "
+              f"{ok}/{len(multi)} multi-device points", flush=True)
+    return True
+
+
 def main(scale: float = 1.0, out_path: str = "BENCH_ooc.json",
          disk: bool = False, storage_out: str = "BENCH_storage.json",
          pipeline_out: str = "BENCH_pipeline.json",
-         trace_out: str = "BENCH_trace.json"):
+         trace_out: str = "BENCH_trace.json",
+         sharded: bool = False, sharded_out: str = "BENCH_sharded.json"):
+    if sharded:
+        sh = {"scale": scale, **sharded_scaling(scale)}
+        validate_sharded(sh)
+        with open(sharded_out, "w") as f:
+            json.dump(sh, f, indent=1)
+        walls = {r["devices"]: r["wall_s"] for r in sh["curve"].values()}
+        print(f"wrote {sharded_out} (device counts {sorted(walls)}, "
+              f"wall_s {', '.join(f'{walls[d]:.4f}' for d in sorted(walls))})",
+              flush=True)
+        return sh
     out = {"scale": scale}
     out["budget_sweep"] = budget_sweep(scale)
     out["streaming"] = streaming_race(scale)
@@ -467,7 +603,22 @@ if __name__ == "__main__":
                     help="Chrome trace-event JSON from a dedicated "
                          "traced disk-tier run (with --disk; CI "
                          "validates and uploads this)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="race ONLY the multi-device sharded driver "
+                         "across 1/2/4/8 host devices and write "
+                         "--sharded-out (sets XLA_FLAGS pre-import)")
+    ap.add_argument("--sharded-out", default="BENCH_sharded.json",
+                    help="sharded scaling curve (CI uploads this)")
+    ap.add_argument("--validate-sharded", metavar="PATH", default=None,
+                    help="validate an existing BENCH_sharded.json and "
+                         "exit (CI gate)")
     args = ap.parse_args()
+    if args.validate_sharded:
+        with open(args.validate_sharded) as f:
+            validate_sharded(json.load(f))
+        print(f"{args.validate_sharded}: ok", flush=True)
+        raise SystemExit(0)
     main(0.05 if args.smoke else args.scale, args.out,
          disk=args.disk, storage_out=args.storage_out,
-         pipeline_out=args.pipeline_out, trace_out=args.trace_out)
+         pipeline_out=args.pipeline_out, trace_out=args.trace_out,
+         sharded=args.sharded, sharded_out=args.sharded_out)

@@ -1,43 +1,72 @@
-"""Paper Figure 12: scaling with worker count. This container has ONE core,
-so wall-clock parallel speedup is not measurable; we report the structural
-scaling quantities the paper discusses: per-superstep message volume and
-exchanged bytes vs partition count (the combiner's falling effectiveness as
-P grows — the cause of Fig 12a's gap to ideal), plus scale-up (graph grows
-with P) superstep times."""
+"""Paper Figure 12: scaling with worker count, raced on the REAL sharded
+driver (``core/sharded.py``) instead of the old emulated-only sweep: a
+1-D host mesh of N devices runs the bucketed exchange as a tiled
+all_to_all inside one shard_map'd superstep, so the curve measures the
+actual multi-device hot path (this container has ONE core, so wall-clock
+parallel speedup is bounded by the host; exchange-stall seconds and wire
+bytes are the structural quantities that carry to a real mesh).
+
+Writes the same ``BENCH_sharded.json`` schema as
+``out_of_core.py --sharded`` (reuses its curve helper + validator), plus
+a scale-up leg (graph grows with the mesh, Fig 12c) as extra records.
+"""
 from __future__ import annotations
 
-from repro.core import load_graph, run_host
-from repro.graph import PageRank, rmat_graph
+import json
+import os
+import sys
+
+# before the repro import chain pulls in jax: the race needs a
+# multi-device host platform (same hack as out_of_core --sharded)
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 from benchmarks.common import record, time_supersteps
+from benchmarks.out_of_core import sharded_scaling, validate_sharded
 
 
-def main(scale: int = 1):
-    n = 12_000 * scale
-    edges = rmat_graph(n, 10 * n, seed=5)
+def scaleup(scale: float, P: int = 8):
+    """Scale-up shape (Fig 12c): graph grows proportionally to the mesh,
+    per-superstep wall time should stay roughly flat on a real cluster."""
+    import jax
+
+    from repro.core import load_graph, run_sharded
+    from repro.graph import PageRank, rmat_graph
+
     out = {}
-    # speedup-shape: fixed graph, growing P -> message volume after
-    # sender-combine grows (combiner less effective), as in Fig 12a
-    for P in (1, 2, 4, 8):
-        prog = PageRank(n, iterations=6)
-        vert = load_graph(edges, n, P=P, value_dims=2)
-        res = run_host(vert, prog, prog.suggested_plan, max_supersteps=8)
-        msgs = max(s.get("messages", 0) for s in res.stats)
-        out[("fixed", P)] = msgs
-        record(f"scale/fixed_graph/P{P}", time_supersteps(res) * 1e6,
-               f"peak_combined_msgs={msgs}")
-    # scale-up: graph grows proportionally to P (Fig 12c)
-    for k, P in ((1, 1), (2, 2), (4, 4)):
-        nk = n * k
-        ek = rmat_graph(nk, 10 * nk, seed=6)
+    avail = len(jax.devices())
+    base = max(int(12_000 * scale), 16 * P)
+    for N in (1, 2, 4):
+        if N > avail:
+            break
+        nk = base * N
+        edges = rmat_graph(nk, 10 * nk, seed=6)
+        vert = load_graph(edges, nk, P=P, value_dims=2)
         prog = PageRank(nk, iterations=6)
-        vert = load_graph(ek, nk, P=P, value_dims=2)
-        res = run_host(vert, prog, prog.suggested_plan, max_supersteps=8)
-        out[("scaleup", P)] = time_supersteps(res)
-        record(f"scale/scaleup/P{P}", time_supersteps(res) * 1e6,
-               f"vertices={nk}")
+        res = run_sharded(vert, prog, prog.suggested_plan, devices=N,
+                          max_supersteps=8)
+        t = time_supersteps(res)
+        out[str(N)] = {"devices": N, "n_vertices": nk, "wall_s": t}
+        record(f"scale/scaleup/devices_{N}", t * 1e6, f"vertices={nk}")
     return out
 
 
+def main(scale: float = 1.0, out_path: str = "BENCH_sharded.json"):
+    payload = {"scale": scale, **sharded_scaling(scale)}
+    payload["scaleup"] = scaleup(scale)
+    validate_sharded(payload)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {out_path}", flush=True)
+    return payload
+
+
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for CI")
+    ap.add_argument("--out", default="BENCH_sharded.json")
+    args = ap.parse_args()
+    main(0.05 if args.smoke else args.scale, args.out)

@@ -11,10 +11,12 @@ from repro.core.relations import (N_OVERFLOW, OVF_BUCKET, OVF_EDGE,
                                   MsgRel, VertexRel, empty_msgs,
                                   gather_values, init_gs, load_graph,
                                   out_degrees)
+from repro.core.sharded import ExchangeReadiness, run_sharded
 from repro.core.superstep import EngineConfig, jit_superstep, make_superstep
 
 __all__ = [
     "RunResult", "default_engine_config", "run_host", "run_jit",
+    "run_sharded", "ExchangeReadiness",
     "DEFAULT_PLAN", "SPARSE_PLAN", "STORAGES", "PhysicalPlan", "ComputeOut",
     "VertexProgram", "GlobalState", "MsgRel", "VertexRel", "empty_msgs",
     "gather_values", "init_gs", "load_graph", "out_degrees",

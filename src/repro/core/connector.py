@@ -93,10 +93,34 @@ def exchange_emulated(b_dst, b_pay, b_val):
             b_val.transpose(1, 0, 2))
 
 
-def exchange_shard_map(b_dst, b_pay, b_val, axis_name):
-    """shard_map transport: per-shard buckets (P_local=1, n_parts, C, ...)
+def exchange_shard_map(b_dst, b_pay, b_val, axis_name, *,
+                       dst_major: bool = True):
+    """shard_map transport: per-shard buckets (P_local, n_parts, C, ...)
     exchanged with all_to_all over `axis_name` (tuple axes = the flattened
-    multi-pod mesh; XLA emits the hierarchical ICI/DCI exchange)."""
-    a2a = lambda x: jax.lax.all_to_all(x, axis_name, split_axis=1,
-                                       concat_axis=1, tiled=True)
+    multi-pod mesh; XLA emits the hierarchical ICI/DCI exchange).
+
+    Worker d owns the CONTIGUOUS global partitions [d*P_local,
+    (d+1)*P_local) — exactly the tiled all_to_all chunking of the bucket
+    axis, so chunk j of axis 1 is worker j's owned range.
+
+    The raw tiled result is worker-major: on worker d,
+    ``y[p, j*P_local + q]`` holds source worker j's local partition p
+    destined to local partition q. ``dst_major=True`` (default) reorders
+    it to the global layout ``out[q, s]`` = the run from global source
+    partition s into local destination q — bit-for-bit the
+    ``exchange_emulated`` transpose, which is what the in-memory sharded
+    driver and the receiver group-by's run contract assume. The OOC
+    sharded driver takes ``dst_major=False``: it lands the worker-major
+    runs into per-destination inbox pages itself."""
+    def a2a(x):
+        y = jax.lax.all_to_all(x, axis_name, split_axis=1,
+                               concat_axis=1, tiled=True)
+        P_local, n_parts = x.shape[0], x.shape[1]
+        if not dst_major or P_local == 1:
+            return y     # worker-major requested, or reorder is identity
+        N = n_parts // P_local
+        rest = y.shape[2:]
+        y = y.reshape((P_local, N, P_local) + rest)   # (p, j, q, ...)
+        y = jnp.swapaxes(y, 0, 2)                     # (q, j, p, ...)
+        return y.reshape((P_local, n_parts) + rest)   # run s = j*P_l + p
     return a2a(b_dst), a2a(b_pay), a2a(b_val)

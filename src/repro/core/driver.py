@@ -76,10 +76,14 @@ class RunResult:
 
 def _resolve_plan(vert, program, plan: PlanArg, *, adaptive: bool,
                   ec: Optional[EngineConfig] = None,
-                  auto_config=None, auto_space=None, graph_stats=None):
+                  auto_config=None, auto_space=None, graph_stats=None,
+                  machine=None, obs0=None):
     """plan="auto" -> (cost-model-chosen plan, AdaptiveController|None).
     `graph_stats` short-circuits the vertex scan (the OOC resume path
-    rebuilds the counts page-at-a-time and never holds a VertexRel)."""
+    rebuilds the counts page-at-a-time and never holds a VertexRel).
+    `machine` overrides the emulated-vs-default machine-model choice
+    (the sharded driver picks per backend); `obs0` seeds the initial
+    observation (sharded=True / n_workers for the network axis)."""
     if isinstance(plan, PhysicalPlan):
         return plan, None
     if plan != "auto":
@@ -89,7 +93,8 @@ def _resolve_plan(vert, program, plan: PlanArg, *, adaptive: bool,
                                AdaptiveConfig, resolve_auto_plan)
     emulated = ec is None or ec.axis_name is None
     config = auto_config or AdaptiveConfig()
-    machine = EMULATED_MACHINE if emulated else DEFAULT_MACHINE
+    if machine is None:
+        machine = EMULATED_MACHINE if emulated else DEFAULT_MACHINE
     if config.calibrate:
         # one-shot startup calibration (opt-in): lower a probe superstep
         # per backend and refit the analytic cost constants against the
@@ -101,7 +106,7 @@ def _resolve_plan(vert, program, plan: PlanArg, *, adaptive: bool,
             machine)
     return resolve_auto_plan(
         vert, program, adaptive=adaptive, config=config,
-        machine=machine, space_kw=auto_space, g=graph_stats)
+        machine=machine, space_kw=auto_space, g=graph_stats, obs0=obs0)
 
 
 def default_engine_config(vert: VertexRel, program: VertexProgram,

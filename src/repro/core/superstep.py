@@ -39,6 +39,12 @@ class EngineConfig:
     # host instead of exchanging — the OOC driver performs the exchange as
     # a host-side transpose into its run-structured inbox (core/ooc.py)
     ooc_collect: bool = False
+    # sharded driver: keep the MESSAGE leg collected (the superstep's
+    # ``new_msg`` carries the pre-exchange (P_local, n_parts, C) buckets)
+    # so the driver can run the all_to_all as a SEPARATE jitted stage —
+    # timed as an ``exchange`` span that feeds the planner's network
+    # axis. Mutations still exchange in-device (core/sharded.py).
+    exchange_apart: bool = False
 
 
 def _combine_fns(program: VertexProgram):
@@ -137,10 +143,24 @@ def make_superstep(program: VertexProgram, plan: PhysicalPlan,
                 # part0..part0+P_local-1, not 0..P_local-1
                 ids = ids + part0
             return ids[:, None]
+        # shard_map: worker w owns the CONTIGUOUS global partitions
+        # [w * (n_parts // n_shards), ...) — the tiled all_to_all
+        # chunking of the bucket axis (connector.exchange_shard_map).
+        # ``part0`` (OOC sharded) offsets into the worker's own block:
+        # the resident rows are global partitions w*P_w + part0 + p.
         idx = jnp.zeros((), jnp.int32)
+        n_shards = 1
         for a in ec.axis_name:
-            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
-        return jnp.broadcast_to(idx, (P_local, 1))
+            # psum of a static 1 folds to the static axis size (0.4.x
+            # has no jax.lax.axis_size)
+            sz = jax.lax.psum(1, a)
+            idx = idx * sz + jax.lax.axis_index(a)
+            n_shards *= sz
+        ids = idx * (n_parts // n_shards) + \
+            jnp.arange(P_local, dtype=jnp.int32)
+        if part0 is not None:
+            ids = ids + part0
+        return ids[:, None]
 
     def resurrect(vert: VertexRel, has_msg, part0):
         """Paper Fig. 2 left-outer case: a message to a non-existent vid
@@ -375,8 +395,9 @@ def make_superstep(program: VertexProgram, plan: PhysicalPlan,
             if fuse_pack and capc < dst.shape[1]:
                 dst, payload, valid, ovf_pack = compact_combined(
                     dst, payload, valid, capc)
+        collect_msgs = ec.ooc_collect or ec.exchange_apart
         r_dst, r_pay, r_val, ovf = route(dst, payload, valid, ec.bucket_cap,
-                                         Np, collect=ec.ooc_collect,
+                                         Np, collect=collect_msgs,
                                          presorted=presorted)
         ovf_f = frontier[2].sum() if frontier is not None else 0
         # 5. mutations (D6)
@@ -415,6 +436,9 @@ def make_superstep(program: VertexProgram, plan: PhysicalPlan,
         new_vert = VertexRel(vid=vid, halt=halt, value=value,
                              edge_src=vert.edge_src, edge_dst=edge_dst,
                              edge_val=edge_val)
+        # under ooc_collect / exchange_apart new_msg carries the
+        # PRE-EXCHANGE (P_local, n_parts, C) buckets — same pytree, one
+        # extra axis; the driver runs the exchange itself
         new_msg = MsgRel(dst=r_dst, payload=r_pay, valid=r_val)
         new_gs = GlobalState(
             halt=g_halt | program.is_converged(gs),

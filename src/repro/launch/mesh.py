@@ -24,9 +24,21 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, devices=devs[:n])
 
 
-def make_host_mesh():
-    """Whatever devices exist, as a 1-D (data,) mesh — CPU examples/tests."""
+def make_host_mesh(devices: int | None = None):
+    """A 1-D (data,) mesh over the host's devices — CPU examples/tests
+    and the sharded driver's default. ``devices`` pins an explicit count
+    (the ``pregel_run --devices N`` knob); None takes everything
+    present. Raises when more devices are requested than exist — the
+    caller forgot ``XLA_FLAGS=--xla_force_host_platform_device_count``."""
     devs = jax.devices()
+    if devices is not None:
+        if devices > len(devs):
+            raise RuntimeError(
+                f"requested a {devices}-device host mesh but only "
+                f"{len(devs)} device(s) present; set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={devices} "
+                "before the first jax import")
+        devs = devs[:devices]
     return jax.make_mesh((len(devs),), ("data",), devices=devs)
 
 

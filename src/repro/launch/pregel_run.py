@@ -1,8 +1,19 @@
 import os
-if "--dryrun" in __import__("sys").argv:
+_argv = __import__("sys").argv
+if "--dryrun" in _argv:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+elif "--devices" in _argv:
+    # sharded real-run: fake that many host devices unless the user set
+    # their own XLA_FLAGS (or runs on real accelerators)
+    try:
+        _n = int(_argv[_argv.index("--devices") + 1])
+    except (ValueError, IndexError):
+        _n = 0
+    if _n > 1 and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={_n}"
 
-# ^ device count must be set before any jax import (dry-run mode only).
+# ^ device count must be set before any jax import.
 
 import argparse      # noqa: E402
 import json          # noqa: E402
@@ -158,7 +169,21 @@ def main():
     ap.add_argument("--scale", default="paper-large",
                     choices=list(GRAPH_SCALES))
     ap.add_argument("--mesh", default="both",
-                    choices=["single", "multi", "both"])
+                    choices=["single", "multi", "both", "host",
+                             "production"],
+                    help="--dryrun: single|multi|both pod lowering. "
+                         "Real runs: host = 1-D mesh over the host's "
+                         "devices (see --devices), production = the "
+                         "(16,16) pod mesh; both select the sharded "
+                         "multi-device driver (core/sharded.py)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="run the real (non-dryrun) job SHARDED over this "
+                         "many devices via run_sharded: supersteps "
+                         "execute under shard_map with the bucket "
+                         "exchange as a jax.lax.all_to_all. On CPU the "
+                         "launcher fakes the device count via XLA_FLAGS "
+                         "automatically; composes with --ooc for "
+                         "per-worker tiered stores")
     ap.add_argument("--join", default="full_outer")
     ap.add_argument("--groupby", default="scatter")
     ap.add_argument("--connector", default="partitioning")
@@ -290,7 +315,51 @@ def main():
 
         def show(i, rec):
             print(progress_line(rec, plan_tag, n_vertices=n), flush=True)
-    if args.ooc:
+    sharded = args.devices > 1 or args.mesh in ("host", "production")
+    if sharded:
+        from repro.core.sharded import run_sharded
+        from repro.launch.mesh import make_host_mesh
+        mesh = (make_production_mesh() if args.mesh == "production"
+                else make_host_mesh(args.devices or None))
+        n_dev = int(mesh.devices.size)
+        kimp = (args.kernel_impl if args.auto_plan
+                and args.kernel_impl != "auto" else None)
+        ooc_kw = {}
+        tier = ""
+        if args.ooc:
+            per_worker = args.parts // n_dev
+            budget = args.budget_partitions
+            if budget and per_worker % budget:
+                ap.error(f"--budget-partitions {budget} must divide the "
+                         f"per-worker block {per_worker} "
+                         f"(--parts {args.parts} / {n_dev} devices)")
+            if not budget:
+                budget = next(b for b in
+                              range(max(per_worker // 2, 1), 0, -1)
+                              if per_worker % b == 0)
+            if args.memory_budget_bytes and not args.disk_dir:
+                ap.error("--memory-budget-bytes requires --disk-dir "
+                         "(a budget needs somewhere to spill)")
+            ooc_kw = dict(budget_partitions=budget,
+                          disk_dir=args.disk_dir,
+                          memory_budget_bytes=args.memory_budget_bytes,
+                          io_threads=args.io_threads,
+                          readahead_pages=args.readahead_pages,
+                          eviction=args.eviction)
+            tier = (f", ooc budget={budget}/{per_worker} per worker" +
+                    (f", disk tier at {args.disk_dir}/worker*"
+                     f" [{args.eviction}]" if args.disk_dir else ""))
+        res = run_sharded(vert, program, plan, mesh=mesh,
+                          max_supersteps=40, kernel_impl=kimp,
+                          on_superstep=show, **ooc_kw)
+        mode = f"sharded x{n_dev} devices{tier}"
+        ex = [s for s in res.stats if "exchange_stall_s" in s]
+        if ex:
+            print(f"exchange: {sum(s['exchange_stall_s'] for s in ex):.3f}s "
+                  f"stall, "
+                  f"{sum(s['exchange_bytes'] for s in ex) / 2**20:.1f} MiB "
+                  f"over {len(ex)} supersteps on {n_dev} workers")
+    elif args.ooc:
         from repro.core.ooc import run_out_of_core
         budget = args.budget_partitions
         if budget and args.parts % budget:

@@ -29,7 +29,9 @@ Design constraints:
 
 Span categories (one per pipeline leg; ``CATEGORIES``): ``dispatch``,
 ``prepare``, ``compute``, ``collect``, ``commit``, ``fault``,
-``readahead``, ``writeback``, ``checkpoint``, ``replan``.
+``readahead``, ``writeback``, ``checkpoint``, ``replan``, ``exchange``
+(the sharded driver's all_to_all stage — what the planner's network
+axis is calibrated against).
 """
 from __future__ import annotations
 
@@ -39,7 +41,8 @@ from typing import Optional
 
 # pipeline legs; the exporter colors/filters by these
 CATEGORIES = ("dispatch", "prepare", "compute", "collect", "commit",
-              "fault", "readahead", "writeback", "checkpoint", "replan")
+              "fault", "readahead", "writeback", "checkpoint", "replan",
+              "exchange")
 
 # event tuples stored in the per-thread buffers:
 #   ("X", name, cat, t0, dur, args)   complete span (seconds, wall clock)

@@ -75,6 +75,7 @@ class AdaptiveController:
         self._shapes_dirty = False   # a regrow/refit/switch re-lowered
         self._last_recal = -10 ** 9  # superstep of the last refit
         self._stall_ewma: Optional[float] = None  # measured serial leg
+        self._exchange_ewma: Optional[float] = None  # measured net leg
 
     # ---- hysteresis persistence (OOC checkpoint meta.json) -----------
     def state_dict(self) -> dict:
@@ -91,6 +92,9 @@ class AdaptiveController:
             "shapes_dirty": bool(self._shapes_dirty),
             "stall_ewma": (float(self._stall_ewma)
                            if self._stall_ewma is not None else None),
+            "exchange_ewma": (float(self._exchange_ewma)
+                              if self._exchange_ewma is not None
+                              else None),
         }
 
     def load_state(self, state: dict):
@@ -107,6 +111,8 @@ class AdaptiveController:
         self._shapes_dirty = bool(state.get("shapes_dirty", False))
         ewma = state.get("stall_ewma")
         self._stall_ewma = float(ewma) if ewma is not None else None
+        xe = state.get("exchange_ewma")
+        self._exchange_ewma = float(xe) if xe is not None else None
 
     # ---- periodic re-calibration -------------------------------------
     def note_shape_change(self):
@@ -152,6 +158,24 @@ class AdaptiveController:
         else:
             self._stall_ewma = a * stall + (1.0 - a) * self._stall_ewma
 
+    def _update_exchange_ewma(self, rec: SuperstepStats):
+        """Network-axis mirror of ``_update_stall_ewma``: fold a steady
+        superstep's measured all_to_all stage stall (the sharded
+        driver's ``exchange_stall_s``) into the EWMA that calibrates the
+        cost model's net leg. Recompile supersteps are skipped for the
+        same reason."""
+        if rec.recompiled or "exchange_stall_s" not in rec.extra:
+            return
+        a = self.config.stall_alpha
+        if a <= 0.0:
+            return
+        stall = float(rec.extra["exchange_stall_s"])
+        if self._exchange_ewma is None:
+            self._exchange_ewma = stall
+        else:
+            self._exchange_ewma = (a * stall +
+                                   (1.0 - a) * self._exchange_ewma)
+
     def _make_observation(self, rec: SuperstepStats, *,
                           bucket_cap: int = 0) -> Observation:
         """Lift a stats record into the cost model's ``Observation``.
@@ -190,7 +214,26 @@ class AdaptiveController:
                               rec.extra.get("mutation_rate", 0.0)),
                           spilling=bool(rec.extra.get("spill", False)),
                           hit_rate=float(rec.extra.get("cache_hit_rate",
-                                                       1.0)))
+                                                       1.0)),
+                          sharded=bool(rec.extra.get("sharded", False)),
+                          n_workers=int(rec.extra.get("n_workers", 1)),
+                          exchange_bytes=float(rec.extra.get(
+                              "exchange_bytes", 0.0)),
+                          exchange_stall_s=float(rec.extra.get(
+                              "exchange_stall_s", 0.0)))
+        if self._exchange_ewma is not None and obs.sharded:
+            # net-axis closure: scale every candidate's exchange leg by
+            # measured-stage-EWMA / the CURRENT plan's analytic net leg
+            # (plan-relative ranking survives; magnitude tracks the
+            # interconnect the run actually observes)
+            cur_net = estimate(self.plan, self.g, obs,
+                               self.machine).net_seconds
+            if cur_net > 0.0:
+                scale = self._exchange_ewma / cur_net
+                scale = min(max(scale, _SCALE_MIN), _SCALE_MAX)
+                obs = dataclasses.replace(
+                    obs, net_scale=scale,
+                    exchange_ewma_s=self._exchange_ewma)
         if self._stall_ewma is not None and obs.ooc:
             cur_serial = estimate(self.plan, self.g, obs,
                                   self.machine).serial_seconds
@@ -209,6 +252,7 @@ class AdaptiveController:
         candidate's modeled message capacity (buckets only grow)."""
         cfg = self.config
         self._update_stall_ewma(rec)
+        self._update_exchange_ewma(rec)
         obs = self._make_observation(rec, bucket_cap=bucket_cap)
         best, best_cost = choose(self.program, self.g, obs,
                                  base=self.plan, machine=self.machine,
@@ -274,18 +318,22 @@ def resolve_auto_plan(vert, program, *,
                       machine: MachineModel = DEFAULT_MACHINE,
                       space_kw: Optional[dict] = None,
                       g: Optional[GraphStats] = None,
+                      obs0: Optional[Observation] = None,
                       ) -> Tuple[PhysicalPlan, Optional[AdaptiveController]]:
     """Entry point for drivers' ``plan="auto"``: pick the initial plan for
     superstep 0 (Pregel activates EVERY vertex, so density starts at 1.0)
     and, when `adaptive`, the controller that re-chooses mid-run.
     ``g`` supplies pre-computed graph statistics when no VertexRel exists
-    (the OOC resume-from-spill-directory path)."""
+    (the OOC resume-from-spill-directory path). ``obs0`` overrides the
+    superstep-0 observation — the sharded driver passes sharded=True /
+    n_workers so the INITIAL pick already prices the network axis."""
     if base is not None and base.frontier_capacity != 1.0:
         # superstep 0 must cover all vertices under left-outer
         base = dataclasses.replace(base, frontier_capacity=1.0)
     if g is None:
         g = GraphStats.from_vertex(vert, program)
-    plan, _ = choose(program, g, Observation(frontier_density=1.0),
+    plan, _ = choose(program, g,
+                     obs0 or Observation(frontier_density=1.0),
                      base=base, machine=machine, **(space_kw or {}))
     if not adaptive:
         return plan, None

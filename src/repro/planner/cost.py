@@ -88,6 +88,17 @@ class MachineModel:
                                  # is a host-memory pass, not a PCIe or
                                  # HBM one, and must be priced at host
                                  # memory speed
+    net_bw: float = 25e9         # bytes/s BISECTION bandwidth per worker
+                                 # for the sharded all_to_all exchange
+                                 # (network axis; ethernet/DCN-class
+                                 # default — the ICI link_bw stays the
+                                 # on-device exchange price)
+    net_latency_s: float = 10e-6  # per-exchange dispatch latency: one
+                                  # all_to_all STAGE pays it once per
+                                  # superstep regardless of plan, but it
+                                  # keeps the modeled exchange seconds in
+                                  # the measured span's regime when the
+                                  # payload is latency-dominated
     k_compute: float = K_COMPUTE
     k_scatter: float = K_SCATTER
     sort_pass_frac: float = SORT_PASS_FRAC
@@ -109,6 +120,15 @@ DEFAULT_MACHINE = MachineModel()
 EMULATED_MACHINE = MachineModel(link_bw=DEFAULT_MACHINE.hbm_bw,
                                 host_bw=DEFAULT_MACHINE.hbm_bw,
                                 host_mem_bw=DEFAULT_MACHINE.hbm_bw,
+                                # fake host devices: the all_to_all is a
+                                # memcpy (memory-class bandwidth) but each
+                                # exchange STAGE pays a real dispatch
+                                # latency (ms-class on the CPU client) —
+                                # this is what keeps the modeled exchange
+                                # within the clamp of the measured-span
+                                # calibration (Observation.net_scale)
+                                net_bw=DEFAULT_MACHINE.hbm_bw,
+                                net_latency_s=1e-3,
                                 mxu=False)
 
 
@@ -194,6 +214,26 @@ class Observation:
     # insert proposals per live vertex last superstep: the host mutation
     # inbox's device->host + scatter-merge traffic.
     mutation_rate: float = 0.0
+    # ---- network axis (sharded driver) -------------------------------
+    # True when the run executes on a multi-device mesh with the
+    # all_to_all exchange stage (core/sharded.py): the exchange then
+    # crosses the NETWORK (machine.net_bw), not device memory, and the
+    # model prices it per worker over the bisection.
+    sharded: bool = False
+    n_workers: int = 1
+    # measured per-superstep exchange wire bytes / stage stall (seconds),
+    # lifted from the driver's ``exchange`` span — diagnostics plus the
+    # raw inputs of the net calibration below.
+    exchange_bytes: float = 0.0
+    exchange_stall_s: float = 0.0
+    # measurement loop closure for the network axis, mirroring
+    # serial_scale: the controller EWMAs the measured exchange stall and
+    # divides it by the CURRENT plan's analytic net leg; every
+    # candidate's net price shifts by the clamped ratio, so connector
+    # choice trades against OBSERVED interconnect pressure.
+    # exchange_ewma_s < 0 = no measurement yet.
+    exchange_ewma_s: float = -1.0
+    net_scale: float = 1.0
     # True when the OOC store runs the DISK TIER (a memory_budget_bytes
     # smaller than the working set, spilling through storage/pager): page
     # faults and dirty write-backs then cross the disk axis.
@@ -212,6 +252,13 @@ class PlanCost:
     host_bytes: float = 0.0       # device<->host link bytes (OOC only)
     disk_bytes: float = 0.0       # DRAM<->disk spill-tier bytes (OOC
                                   # under a memory budget only)
+    net_bytes: float = 0.0        # all_to_all wire bytes per worker
+                                  # (sharded runs only)
+    # seconds of the all_to_all exchange STAGE: the sharded driver runs
+    # it as its own blocking dispatch between supersteps, so it is
+    # ADDITIVE on the critical path (never hidden by the overlap max),
+    # like the serial leg but priced at net_bw + a per-stage latency.
+    net_seconds: float = 0.0
     terms: dict = field(default_factory=dict)   # per-operator seconds
     # pipelined OOC streaming: the host link and the disk both run
     # concurrently with the device, so total seconds =
@@ -231,7 +278,8 @@ class PlanCost:
     def _detail(self, term: str) -> dict:
         return self.detail.setdefault(term, {
             "flops": 0.0, "hbm_bytes": 0.0, "exchange_bytes": 0.0,
-            "host_bytes": 0.0, "disk_bytes": 0.0, "serial_bytes": 0.0})
+            "host_bytes": 0.0, "disk_bytes": 0.0, "serial_bytes": 0.0,
+            "net_bytes": 0.0})
 
     def add(self, term: str, machine: MachineModel, *, flops: float = 0.0,
             bytes: float = 0.0, exchange_bytes: float = 0.0,
@@ -273,6 +321,25 @@ class PlanCost:
         if term in self.terms:
             self.terms[term] *= factor
 
+    def add_net(self, term: str, machine: MachineModel, *,
+                net_bytes: float = 0.0, latency_s: float = 0.0):
+        """All_to_all wire traffic of the sharded exchange stage: priced
+        at the machine's bisection bandwidth plus a per-stage dispatch
+        latency, and kept out of the overlap max — the stage blocks
+        between the superstep dispatch and the next prepare."""
+        s = net_bytes / machine.net_bw + latency_s
+        self.net_bytes += net_bytes
+        self.net_seconds += s
+        self.terms[term] = self.terms.get(term, 0.0) + s
+        self._detail(term)["net_bytes"] += net_bytes
+
+    def scale_net(self, factor: float, term: str = "exchange_net"):
+        """Measured calibration multiplier for the network leg (the
+        Observation.net_scale closure), mirroring ``scale_serial``."""
+        self.net_seconds *= factor
+        if term in self.terms:
+            self.terms[term] *= factor
+
     def device_seconds(self, machine: MachineModel = DEFAULT_MACHINE) \
             -> float:
         return (self.flops / machine.peak_flops +
@@ -301,8 +368,8 @@ class PlanCost:
             # quite perfect, and less hidden work frees the pipeline
             # sooner).
             return (max(dev, hst, dsk) + self.serial_seconds
-                    + 1e-3 * (dev + hst + dsk))
-        return dev + hst + dsk + self.serial_seconds
+                    + self.net_seconds + 1e-3 * (dev + hst + dsk))
+        return dev + hst + dsk + self.serial_seconds + self.net_seconds
 
 
 def bucket_cap(plan: PhysicalPlan, g: GraphStats, slack: float = 1.5) -> int:
@@ -440,9 +507,26 @@ def estimate(plan: PhysicalPlan, g: GraphStats, obs: Observation,
           bytes=n_sorts * sort_b(e_pack, msg_w) +
           ks * e_pack * msg_w)
 
-    # exchange: fixed-capacity buckets cross the links whole
-    c.add("exchange", machine,
-          exchange_bytes=M * msg_w * (P - 1) / max(P, 1))
+    # exchange: fixed-capacity buckets cross the links whole. On a
+    # sharded mesh the cross-WORKER share crosses the network instead
+    # (all_to_all over the bisection, plus one per-stage dispatch
+    # latency — plan-independent, so it shifts every candidate equally
+    # and only matters for matching the measured span's magnitude);
+    # the intra-worker share stays a link/memory move. net_scale is the
+    # controller's measured-exchange calibration multiplier.
+    if obs.sharded and obs.n_workers > 1:
+        W = obs.n_workers
+        P_l = max(P // W, 1)
+        c.add("exchange", machine,
+              exchange_bytes=M * msg_w * (P_l - 1) / max(P, 1))
+        c.add_net("exchange_net", machine,
+                  net_bytes=M * msg_w * (P - P_l) / max(P, 1),
+                  latency_s=machine.net_latency_s)
+        if obs.net_scale != 1.0:
+            c.scale_net(obs.net_scale)
+    else:
+        c.add("exchange", machine,
+              exchange_bytes=M * msg_w * (P - 1) / max(P, 1))
 
     if obs.ooc:
         # super-partition streaming I/O: every superstep the vertex block
