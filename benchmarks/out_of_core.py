@@ -389,7 +389,8 @@ def pipeline_race(scale: float, P: int = 8):
     return out
 
 
-def trace_capture(scale: float, trace_out: str, P: int = 8):
+def trace_capture(scale: float, trace_out: str, P: int = 8,
+                  report_out: str = None):
     """Traced disk-tier run -> Chrome trace-event JSON artifact.
 
     A DEDICATED run, separate from every timed leg, so span recording
@@ -398,8 +399,13 @@ def trace_capture(scale: float, trace_out: str, P: int = 8):
     must show the dispatcher/collector main thread plus both
     ``pregelix-io-*`` workers (>= 3 OS threads) with fault / readahead /
     writeback spans overlapping compute and the readiness-stall gap.
-    CI validates the artifact with ``python -m repro.obs.export``."""
-    from repro.obs import trace, write_chrome_trace
+    CI validates the artifact with ``python -m repro.obs.export``.
+
+    With ``report_out`` the SAME run also feeds the plan-audit ledger
+    and the memory watcher, and a ``pregelix-run-report/v1`` JSON lands
+    there — validated with ``python -m repro.obs.report --validate``."""
+    from repro.obs import (explain, memwatch, report, trace,
+                           write_chrome_trace)
     n = max(int(16_000 * scale), 16 * P)
     edges = rmat_graph(n, 10 * n, seed=4)
     prog = PageRank(n, iterations=6)
@@ -412,20 +418,42 @@ def trace_capture(scale: float, trace_out: str, P: int = 8):
     # engine's fault/readahead/writeback spans actually appear
     budget = max(working // 4, 64 * 1024)
     trace.start()
+    if report_out:
+        explain.start()
+        memwatch.start()
+    res = None
     try:
         with tempfile.TemporaryDirectory(prefix="pregelix-trace-") as td:
-            run_out_of_core(vert, prog, plan,
-                            budget_partitions=max(P // 4, 1),
-                            max_supersteps=6, stream=True,
-                            barrier_free=True,
-                            memory_budget_bytes=budget, disk_dir=td,
-                            eviction="mru", io_threads=2)
+            res = run_out_of_core(vert, prog, plan,
+                                  budget_partitions=max(P // 4, 1),
+                                  max_supersteps=6, stream=True,
+                                  barrier_free=True,
+                                  memory_budget_bytes=budget,
+                                  disk_dir=td,
+                                  eviction="mru", io_threads=2)
     finally:
         tracer = trace.stop()
+        aud = explain.stop() if report_out else None
+        mem = memwatch.stop() if report_out else None
     summary = write_chrome_trace(trace_out, tracer)
     record("obs/trace_spans", summary["spans"],
            f"threads={summary['span_threads']},"
            f"cats={','.join(sorted(summary['categories']))}")
+    if report_out and res is not None:
+        rep = report.build_report(
+            stats=res.stats, explain=aud, memwatch=mem,
+            meta={"bench": "trace_capture", "scale": scale,
+                  "n_vertices": n, "parts": P,
+                  "memory_budget_bytes": budget,
+                  "supersteps": res.supersteps,
+                  "wall_s": res.wall_s})
+        report.write_report(report_out, rep)
+        errs = report.validate_report(rep)
+        if errs:
+            raise SystemExit(f"{report_out}: {len(errs)} schema "
+                             f"violation(s): {errs}")
+        record("obs/report_supersteps", len(rep["supersteps"]),
+               f"mean_drift={rep['summary']['mean_drift']:.3f}")
     return summary
 
 
@@ -543,7 +571,8 @@ def main(scale: float = 1.0, out_path: str = "BENCH_ooc.json",
          disk: bool = False, storage_out: str = "BENCH_storage.json",
          pipeline_out: str = "BENCH_pipeline.json",
          trace_out: str = "BENCH_trace.json",
-         sharded: bool = False, sharded_out: str = "BENCH_sharded.json"):
+         sharded: bool = False, sharded_out: str = "BENCH_sharded.json",
+         report_out: str = "BENCH_report.json"):
     if sharded:
         sh = {"scale": scale, **sharded_scaling(scale)}
         validate_sharded(sh)
@@ -575,10 +604,13 @@ def main(scale: float = 1.0, out_path: str = "BENCH_ooc.json",
         hit = max(v["hit_rate"] for v in st["disk_tier"]["disk"].values())
         print(f"wrote {storage_out} (best disk-tier hit rate "
               f"{hit:.2f})", flush=True)
-        ts = trace_capture(scale, trace_out)
+        ts = trace_capture(scale, trace_out, report_out=report_out)
         print(f"wrote {trace_out} ({ts['spans']} spans on "
               f"{ts['span_threads']} threads, categories "
               f"{','.join(sorted(ts['categories']))})", flush=True)
+        if report_out:
+            print(f"wrote {report_out} (plan-audit + memory-pressure "
+                  f"run report from the traced run)", flush=True)
     return out
 
 
@@ -609,6 +641,12 @@ if __name__ == "__main__":
                          "--sharded-out (sets XLA_FLAGS pre-import)")
     ap.add_argument("--sharded-out", default="BENCH_sharded.json",
                     help="sharded scaling curve (CI uploads this)")
+    ap.add_argument("--report-out", default="BENCH_report.json",
+                    help="pregelix-run-report/v1 JSON from the traced "
+                         "disk-tier run (with --disk): plan-audit "
+                         "ledger + memory-pressure peaks; CI validates "
+                         "with python -m repro.obs.report and uploads "
+                         "this. Empty string disables")
     ap.add_argument("--validate-sharded", metavar="PATH", default=None,
                     help="validate an existing BENCH_sharded.json and "
                          "exit (CI gate)")
@@ -621,4 +659,5 @@ if __name__ == "__main__":
     main(0.05 if args.smoke else args.scale, args.out,
          disk=args.disk, storage_out=args.storage_out,
          pipeline_out=args.pipeline_out, trace_out=args.trace_out,
-         sharded=args.sharded, sharded_out=args.sharded_out)
+         sharded=args.sharded, sharded_out=args.sharded_out,
+         report_out=args.report_out)

@@ -30,7 +30,7 @@ from repro.core.relations import (OVF_BUCKET, OVF_EDGE, OVF_FRONTIER,
                                   out_degrees)
 from repro.core.superstep import EngineConfig, make_superstep
 from repro.kernels import backend as kbackend
-from repro.obs import trace
+from repro.obs import explain, memwatch, trace
 from repro.obs.metrics import MetricsRegistry
 
 PlanArg = Union[PhysicalPlan, str]   # a PhysicalPlan or the string "auto"
@@ -214,6 +214,18 @@ def run_host(vert: VertexRel, program: VertexProgram,
                                      ec=ec, auto_config=auto_config,
                                      auto_space=auto_space)
     ec = ec or default_engine_config(vert, program, plan)
+    if explain.enabled():
+        # plan-audit ledger: bind the run context so each superstep's
+        # stats record can be re-priced under the in-effect plan
+        from repro.planner.cost import DEFAULT_MACHINE, EMULATED_MACHINE
+        explain.attach(
+            program, vert=vert,
+            g=controller.g if controller is not None else None,
+            plan=plan,
+            machine=(controller.machine if controller is not None else
+                     (EMULATED_MACHINE if ec.axis_name is None
+                      else DEFAULT_MACHINE)),
+            space_kw=auto_space)
     step = jax.jit(make_superstep(program, plan, ec))
     layout = plan_gather_layout(plan, vert)
     gs = init_gs(program.agg_dims)
@@ -268,6 +280,16 @@ def run_host(vert: VertexRel, program: VertexProgram,
                           wall_s=time.time() - ts,
                           recompiled=this_recompiled)
         stats.append(rec.as_dict())
+        if explain.enabled():
+            # audit the plan that EXECUTED this superstep (a switch
+            # below only affects the next one)
+            explain.superstep(rec, plan=plan, bucket_cap=ec.bucket_cap)
+        if memwatch.enabled():
+            memwatch.configure(ec=ec, Np=vert.capacity,
+                               Ep=vert.edge_src.shape[1],
+                               value_dims=program.value_dims,
+                               msg_dims=program.msg_dims)
+            memwatch.sample(i)
         switched = False
         if controller is not None and not bool(gs.halt):
             # mid-run replanning: switch the physical plan when observed

@@ -157,7 +157,7 @@ from repro.core.program import VertexProgram
 from repro.core.relations import GlobalState, MsgRel, VertexRel, init_gs
 from repro.core.superstep import EngineConfig, jit_superstep
 from repro.kernels import backend as kbackend
-from repro.obs import trace
+from repro.obs import explain, memwatch, trace
 from repro.obs.metrics import MetricsRegistry
 from repro.storage import TieredStore
 
@@ -556,6 +556,27 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
         ec = dataclasses.replace(ec, ooc_collect=True,
                                  frontier_cap=ec.frontier_cap or
                                  max(Np // 2, 1))
+        if explain.enabled():
+            # plan-audit ledger: the shadow auditor re-prices the
+            # in-effect plan per superstep (static resumes without
+            # graph statistics stay decision-log-only)
+            from repro.planner.cost import EMULATED_MACHINE
+            explain.attach(
+                program,
+                vert=shape_vert if resume_from is None else None,
+                g=(controller.g if controller is not None
+                   else graph_stats),
+                plan=plan,
+                machine=(controller.machine if controller is not None
+                         else EMULATED_MACHINE),
+                space_kw=(_OOC_AUTO_SPACE if auto_space is None
+                          else auto_space))
+        if memwatch.enabled():
+            memwatch.configure(
+                ec=ec, Np=Np, Ep=shape_vert.edge_src.shape[1],
+                value_dims=program.value_dims,
+                msg_dims=program.msg_dims,
+                budget_bytes=memory_budget_bytes)
         step = jit_superstep(program, plan, ec, donate_vertex=True)
         seen_widths = set()   # inbox widths this `step` has already traced
 
@@ -1044,6 +1065,15 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                 pager_resident_bytes=pool_now["resident_bytes"],
                 pager_peak_bytes=pool_now["peak_resident_bytes"])
             stats.append(rec.as_dict())
+            if explain.enabled():
+                # audit the plan that EXECUTED this superstep (a switch
+                # below only takes effect on the next one)
+                explain.superstep(rec, plan=plan,
+                                  bucket_cap=ec.bucket_cap)
+            if memwatch.enabled():
+                # tier snapshot at the superstep boundary: only `sp`
+                # partitions are device-resident under the OOC stream
+                memwatch.sample(i, store=store, resident_parts=sp)
             if trace.enabled():
                 trace.counter("active", active)
                 trace.counter("messages", msg_count)

@@ -63,7 +63,7 @@ from repro.core.program import VertexProgram
 from repro.core.relations import (GlobalState, MsgRel, VertexRel,
                                   empty_msgs, init_gs)
 from repro.core.superstep import EngineConfig, make_superstep
-from repro.obs import trace
+from repro.obs import explain, memwatch, trace
 from repro.obs.metrics import MetricsRegistry
 
 _MSG_W = lambda D: (1 + D) * 4 + 1   # dst + payload + valid wire bytes
@@ -204,6 +204,16 @@ def run_sharded(vert: VertexRel, program: VertexProgram,
                                      machine=machine, obs0=obs0)
     ec = ec or default_engine_config(vert, program, plan)
     ec = dataclasses.replace(ec, axis_name=axes, exchange_apart=True)
+    if explain.enabled():
+        explain.attach(
+            program, vert=vert,
+            g=controller.g if controller is not None else None,
+            plan=plan, machine=machine, space_kw=auto_space)
+    if memwatch.enabled():
+        memwatch.configure(ec=ec, Np=vert.capacity,
+                           Ep=vert.edge_src.shape[1],
+                           value_dims=program.value_dims,
+                           msg_dims=program.msg_dims)
 
     lead = _lead_spec(axes)
     rep = lambda x: PSpec()
@@ -314,6 +324,10 @@ def run_sharded(vert: VertexRel, program: VertexProgram,
                           exchange_bytes=ex_bytes,
                           exchange_stall_s=ex_stall)
         stats.append(rec.as_dict())
+        if explain.enabled():
+            explain.superstep(rec, plan=plan, bucket_cap=ec.bucket_cap)
+        if memwatch.enabled():
+            memwatch.sample(i)
         switched = False
         if controller is not None and not bool(gs.halt):
             with trace.span("replan", "replan"):
@@ -411,6 +425,17 @@ def _run_sharded_ooc(vert, program, plan, *, mesh, axes, n_workers,
     base_ec = ec or default_engine_config(vert, program, plan)
     ec = dataclasses.replace(base_ec, axis_name=axes, ooc_collect=True)
     Np = vert.capacity
+    if explain.enabled():
+        # static plan here (resolved once): the shadow auditor still
+        # re-prices it per superstep against the measured legs
+        explain.attach(program, vert=vert, plan=plan, machine=machine,
+                       space_kw=auto_space)
+    if memwatch.enabled():
+        memwatch.configure(ec=ec, Np=Np, Ep=vert.edge_src.shape[1],
+                           value_dims=V, msg_dims=D,
+                           budget_bytes=(memory_budget_bytes * N
+                                         if memory_budget_bytes
+                                         else None))
 
     metrics = MetricsRegistry()
     n_live = int(np.asarray(vert.vid >= 0).sum())
@@ -694,8 +719,10 @@ def _run_sharded_ooc(vert, program, plan, *, mesh, axes, n_workers,
                                      if full_bytes else 1.0),
                      storage=plan.storage,
                      spill=any(s.spilling for s in stores))
-        hits = tier.get("page_hits", 0)
-        total_lookups = hits + tier.get("page_misses", 0)
+        # per-superstep pager interval keys are "hits"/"misses"
+        # (BufferPool.take_interval), summed across the worker stores
+        hits = tier.get("hits", 0)
+        total_lookups = hits + tier.get("misses", 0)
         if total_lookups:
             extra["cache_hit_rate"] = hits / total_lookups
         for k in ("spill_read_bytes", "spill_write_bytes"):
@@ -705,6 +732,11 @@ def _run_sharded_ooc(vert, program, plan, *, mesh, axes, n_workers,
                           wall_s=time.time() - ts,
                           recompiled=this_recompiled, **extra)
         stats.append(rec.as_dict())
+        if explain.enabled():
+            explain.superstep(rec, plan=plan, bucket_cap=ec.bucket_cap)
+        if memwatch.enabled():
+            # N workers each keep b partitions resident at once
+            memwatch.sample(i, stores=stores, resident_parts=N * b)
         if on_superstep is not None:
             on_superstep(i, rec.as_dict())
     # ---- final gather (the HDFS-write analogue, per worker)

@@ -265,6 +265,20 @@ def main():
                     help="print the per-superstep metrics registry "
                          "snapshots (counters / gauges / histogram "
                          "percentiles) collected in SuperstepStats")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="write a schema-validated run report "
+                         "(pregelix-run-report/v1 JSON) to PATH: the "
+                         "per-superstep predicted-vs-measured plan audit, "
+                         "controller decision log, and HBM/DRAM/SSD tier "
+                         "occupancy peaks; validate or diff with "
+                         "python -m repro.obs.report")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the plan-audit ledger after the run: one "
+                         "row per superstep with the chosen plan's "
+                         "predicted cost terms next to the measured leg "
+                         "times and a log-ratio drift score, plus every "
+                         "replan/recalibrate decision with the candidate "
+                         "price table it was made from")
     args = ap.parse_args()
 
     plan = "auto" if args.auto_plan else PhysicalPlan(
@@ -302,13 +316,17 @@ def main():
     import numpy as np
     from repro.core import gather_values, load_graph, run_host
     from repro.graph import DATASETS
-    from repro.obs import progress_line, trace, write_chrome_trace
+    from repro.obs import (explain, fmt_plan, memwatch, progress_line,
+                           report, trace, write_chrome_trace)
     edges, n = DATASETS[args.dataset]()
     program = ALGOS[args.algo](n)
     vert = load_graph(edges, n, P=args.parts,
                       value_dims=program.value_dims)
     if args.trace:
         trace.start()
+    if args.report or args.explain:
+        explain.start()
+        memwatch.start()
     show = None
     if args.progress:
         plan_tag = None if plan == "auto" else plan
@@ -451,6 +469,25 @@ def main():
                 else:
                     body = f"{snap:.6g}"
                 print(f"  {name:<22} {body}")
+    if args.report or args.explain:
+        aud = explain.stop()
+        mem = memwatch.stop()
+        rep = report.build_report(
+            stats=res.stats, explain=aud, memwatch=mem,
+            meta={"algo": args.algo, "dataset": args.dataset,
+                  "mode": mode, "parts": args.parts,
+                  "plan": fmt_plan(res.plan),
+                  "supersteps": res.supersteps,
+                  "wall_s": res.wall_s})
+        if args.explain:
+            print(report.to_markdown(rep))
+        if args.report:
+            report.write_report(args.report, rep)
+            errs = report.validate_report(rep)
+            print(f"report: {args.report} "
+                  f"({len(rep['supersteps'])} supersteps, "
+                  f"{len(rep['decisions'])} decisions, "
+                  f"{len(errs)} schema violation(s))")
     if args.trace:
         tracer = trace.stop()
         summary = write_chrome_trace(args.trace, tracer)

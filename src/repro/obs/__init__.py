@@ -1,4 +1,5 @@
-"""Runtime observability: span tracing, metrics, Chrome-trace export.
+"""Runtime observability: span tracing, metrics, Chrome-trace export,
+plan audit and tier-occupancy ledgers, and schema-validated run reports.
 
 * ``repro.obs.trace`` — thread-safe span recorder (per-thread buffers,
   nestable spans categorized by pipeline leg, instant/counter events;
@@ -8,16 +9,25 @@
 * ``repro.obs.export`` — Chrome trace-event JSON (Perfetto-loadable),
   one track per thread, plus the schema validator CI runs.
 * ``repro.obs.progress`` — the human per-superstep progress line.
+* ``repro.obs.explain`` — per-superstep predicted-vs-measured ledger
+  (the plan audit) plus the controller decision log.
+* ``repro.obs.memwatch`` — HBM/DRAM/SSD occupancy samples with peak
+  watermarks and the OOM-proximity gauge.
+* ``repro.obs.report`` — assembles the above into a schema-validated
+  ``BENCH_report.json``-style run report, with ``compare()``.
 """
-from repro.obs import trace
+from repro.obs import explain, memwatch, report, trace
 from repro.obs.export import (chrome_trace, validate_chrome_trace,
                               write_chrome_trace)
 from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
 from repro.obs.progress import fmt_plan, progress_line
+from repro.obs.report import build_report, compare, validate_report, \
+    write_report
 
 __all__ = [
-    "trace",
+    "trace", "explain", "memwatch", "report",
     "chrome_trace", "validate_chrome_trace", "write_chrome_trace",
+    "build_report", "compare", "validate_report", "write_report",
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "fmt_plan", "progress_line",
 ]

@@ -79,57 +79,72 @@ def write_chrome_trace(path: str,
     return validate_chrome_trace(obj)
 
 
-def validate_chrome_trace(obj, *, min_threads: int = 1) -> dict:
-    """Schema-check a trace-event JSON object. Raises ``ValueError`` on
-    any violation; returns a summary dict (event count, threads with
-    spans, categories seen) on success."""
+def trace_violations(obj, *, min_threads: int = 1):
+    """Collect EVERY schema violation in a trace-event JSON object.
+    Returns ``(violations, summary)`` — an empty list means valid. The
+    first entry is always the violation ``validate_chrome_trace`` would
+    raise (same scan order, same message)."""
+    errs: list = []
     if not isinstance(obj, dict) or "traceEvents" not in obj:
-        raise ValueError("trace: top level must be a dict with traceEvents")
+        return (["trace: top level must be a dict with traceEvents"],
+                None)
     events = obj["traceEvents"]
     if not isinstance(events, list):
-        raise ValueError("trace: traceEvents must be a list")
+        return ["trace: traceEvents must be a list"], None
     span_threads: set = set()
     thread_names: dict = {}
     cats: set = set()
     n_spans = 0
     for i, e in enumerate(events):
         if not isinstance(e, dict):
-            raise ValueError(f"trace: event {i} is not an object")
+            errs.append(f"trace: event {i} is not an object")
+            continue
         ph = e.get("ph")
         if ph not in ("X", "i", "C", "M"):
-            raise ValueError(f"trace: event {i} has unknown phase {ph!r}")
+            errs.append(f"trace: event {i} has unknown phase {ph!r}")
         if "name" not in e or "pid" not in e or "tid" not in e:
-            raise ValueError(f"trace: event {i} missing name/pid/tid")
+            errs.append(f"trace: event {i} missing name/pid/tid")
         if ph == "M":
-            if e["name"] == "thread_name":
-                thread_names[e["tid"]] = e.get("args", {}).get("name", "")
+            if e.get("name") == "thread_name":
+                thread_names[e.get("tid")] = \
+                    e.get("args", {}).get("name", "")
             continue
         ts = e.get("ts")
         if not isinstance(ts, (int, float)) or ts < 0:
-            raise ValueError(f"trace: event {i} has bad ts {ts!r}")
+            errs.append(f"trace: event {i} has bad ts {ts!r}")
         if ph == "X":
             dur = e.get("dur")
             if not isinstance(dur, (int, float)) or dur < 0:
-                raise ValueError(f"trace: event {i} has bad dur {dur!r}")
+                errs.append(f"trace: event {i} has bad dur {dur!r}")
             if e.get("cat") not in _trace.CATEGORIES:
-                raise ValueError(
-                    f"trace: event {i} has unknown category "
-                    f"{e.get('cat')!r}")
+                errs.append(f"trace: event {i} has unknown category "
+                            f"{e.get('cat')!r}")
             n_spans += 1
-            span_threads.add(e["tid"])
-            cats.add(e["cat"])
+            span_threads.add(e.get("tid"))
+            cats.add(e.get("cat"))
     if len(span_threads) < min_threads:
-        raise ValueError(
-            f"trace: spans on {len(span_threads)} thread(s), "
-            f"need >= {min_threads}")
-    return {
+        errs.append(f"trace: spans on {len(span_threads)} thread(s), "
+                    f"need >= {min_threads}")
+    summary = {
         "events": len(events),
         "spans": n_spans,
         "span_threads": len(span_threads),
         "thread_names": sorted(thread_names.get(t, str(t))
                                for t in span_threads),
-        "categories": sorted(cats),
+        "categories": sorted(c for c in cats if c is not None),
     }
+    return errs, summary
+
+
+def validate_chrome_trace(obj, *, min_threads: int = 1) -> dict:
+    """Schema-check a trace-event JSON object. Raises ``ValueError`` on
+    the first violation; returns a summary dict (event count, threads
+    with spans, categories seen) on success. ``trace_violations`` is the
+    collect-everything variant the CLI uses."""
+    errs, summary = trace_violations(obj, min_threads=min_threads)
+    if errs:
+        raise ValueError(errs[0])
+    return summary
 
 
 def main(argv=None) -> int:
@@ -142,7 +157,14 @@ def main(argv=None) -> int:
     args = p.parse_args(argv)
     with open(args.path) as f:
         obj = json.load(f)
-    summary = validate_chrome_trace(obj, min_threads=args.min_threads)
+    violations, summary = trace_violations(obj,
+                                           min_threads=args.min_threads)
+    if violations:
+        # CI logs get the FULL list in one run, not just the first
+        print(f"INVALID {args.path}: {len(violations)} violation(s)")
+        for v in violations:
+            print(f"  - {v}")
+        return 1
     print(f"OK {args.path}: {summary['spans']} spans on "
           f"{summary['span_threads']} threads "
           f"{summary['thread_names']}, categories {summary['categories']}")

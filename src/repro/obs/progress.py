@@ -59,6 +59,12 @@ def progress_line(rec: dict, plan=None, *,
     depth = rec.get("readahead_depth")
     if depth is not None:
         out.append(f"ra {int(depth)}")
+    xstall = rec.get("exchange_stall_s")
+    if xstall is not None:
+        out.append(f"xstall {1e3 * xstall:.1f}ms")
+    xbytes = rec.get("exchange_bytes")
+    if xbytes is not None:
+        out.append(f"xbytes {_si(xbytes)}")
     tag = fmt_plan(plan)
     if tag:
         out.append(f"plan {tag}")

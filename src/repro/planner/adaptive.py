@@ -21,7 +21,8 @@ from repro.core.plan import PhysicalPlan
 from repro.core.relations import MsgRel
 from repro.planner.cost import (DEFAULT_MACHINE, GraphStats, MachineModel,
                                 Observation, estimate)
-from repro.planner.optimizer import choose
+from repro.obs import explain
+from repro.planner.optimizer import choose, rank
 from repro.planner.stats import SuperstepStats
 
 
@@ -138,9 +139,12 @@ class AdaptiveController:
                                          refresh=True)
         self._shapes_dirty = False
         self._last_recal = superstep
-        return {"k_compute": self.machine.k_compute,
-                "k_scatter": self.machine.k_scatter,
-                "sort_pass_frac": self.machine.sort_pass_frac}
+        constants = {"k_compute": self.machine.k_compute,
+                     "k_scatter": self.machine.k_scatter,
+                     "sort_pass_frac": self.machine.sort_pass_frac}
+        if explain.enabled():
+            explain.decision(superstep, "recalibrate", **constants)
+        return constants
 
     def _update_stall_ewma(self, rec: SuperstepStats):
         """Fold a steady superstep's measured readiness stall into the
@@ -254,9 +258,10 @@ class AdaptiveController:
         self._update_stall_ewma(rec)
         self._update_exchange_ewma(rec)
         obs = self._make_observation(rec, bucket_cap=bucket_cap)
-        best, best_cost = choose(self.program, self.g, obs,
-                                 base=self.plan, machine=self.machine,
-                                 **self.space_kw)
+        ranked = rank(self.program, self.g, obs,
+                      base=self.plan, machine=self.machine,
+                      **self.space_kw)
+        best, best_cost = ranked[0]
         cur_s = estimate(self.plan, self.g, obs,
                          self.machine).seconds(self.machine)
         if best == self.plan or \
@@ -275,6 +280,17 @@ class AdaptiveController:
             self._last_switch = rec.superstep
             self._want, self._streak = None, 0
             self.switches.append((rec.superstep, old, best))
+            if explain.enabled():
+                # the losing candidates' prices: the full table the
+                # controller just ranked, under the same observation
+                from repro.obs.progress import fmt_plan
+                explain.decision(
+                    rec.superstep, "replan",
+                    **{"from": fmt_plan(old)}, to=fmt_plan(best),
+                    current_s=float(cur_s),
+                    candidates=[{"plan": fmt_plan(p),
+                                 "seconds": float(c.seconds(self.machine))}
+                                for p, c in ranked])
             return best
         return None
 

@@ -526,6 +526,33 @@ class BufferPool:
                 "spill_write_bytes": self.spill_write_bytes,
             }
 
+    def occupancy(self) -> dict:
+        """Live page accounting for the memory-pressure ledger
+        (``repro.obs.memwatch``): resident / dirty / pinned bytes at
+        this instant, under the pool lock, plus the hard budget and the
+        peak watermark. Unlike ``stats()`` these are walked from the
+        page table, so dirty and pinned bytes — the part of the tier an
+        eviction cannot reclaim — are exact."""
+        with self._mu:
+            resident = dirty = pinned = 0
+            for p in self._pages.values():
+                if not p.resident:
+                    continue
+                resident += p.nbytes
+                if p.dirty:
+                    dirty += p.nbytes
+                if p.pins > 0:
+                    pinned += p.nbytes
+            return {
+                "resident_bytes": resident,
+                "dirty_bytes": dirty,
+                "pinned_bytes": pinned,
+                "budget_bytes": self.budget,
+                "peak_resident_bytes": self.peak_resident_bytes,
+                "spill_read_bytes": self.spill_read_bytes,
+                "spill_write_bytes": self.spill_write_bytes,
+            }
+
     def take_interval(self) -> dict:
         """Counters SINCE THE LAST CALL (one superstep's worth for the
         OOC driver), so the planner observes current — not cumulative —

@@ -105,3 +105,21 @@ class SpillDir:
 
     def slot_for(self, key) -> SpillSlot:
         return SpillSlot(self.root / _key_filename(key))
+
+    def bytes_on_disk(self) -> int:
+        """Bytes currently occupying the SSD tier (every page file in
+        the directory). A directory walk, so only sampled at superstep
+        boundaries (``repro.obs.memwatch``); temp files mid-``replace``
+        are skipped."""
+        total = 0
+        try:
+            with os.scandir(self.root) as it:
+                for e in it:
+                    if e.name.endswith(".npy") and e.is_file():
+                        try:
+                            total += e.stat().st_size
+                        except OSError:
+                            pass
+        except OSError:
+            pass
+        return total

@@ -145,6 +145,16 @@ class TieredStore:
             d.update(self.engine.take_interval())
         return d
 
+    def occupancy(self) -> dict:
+        """Instantaneous tier occupancy for the memory-pressure ledger
+        (``repro.obs.memwatch``): the pool's DRAM page accounting plus
+        the bytes actually occupying the spill directory."""
+        d = self.pool.occupancy()
+        d["spilling"] = self.spilling
+        d["spill_bytes"] = (self.spill.bytes_on_disk()
+                            if self.spill is not None else 0)
+        return d
+
     def page_keys(self):
         return self.pool.keys()
 

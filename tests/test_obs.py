@@ -179,6 +179,38 @@ def test_schema_validation_rejects_malformed_traces():
     assert validate_chrome_trace({"traceEvents": [ok]})["spans"] == 1
 
 
+def test_export_cli_lists_every_violation(tmp_path, capsys):
+    """The --validate CLI collects ALL schema violations in one run and
+    exits nonzero — CI logs show every problem at once, not just the
+    first raise."""
+    from repro.obs.export import main as export_main, trace_violations
+    ok = {"ph": "X", "name": "s", "cat": "compute", "pid": 1, "tid": 1,
+          "ts": 0.0, "dur": 1.0}
+    broken = {"traceEvents": [
+        {**ok, "ph": "Z"},                      # unknown phase
+        {k: v for k, v in ok.items() if k != "tid"},  # missing tid
+        {**ok, "cat": "nonsense"},              # unknown category
+        {**ok, "ts": -1.0},                     # bad ts
+        {**ok, "dur": None},                    # bad dur
+    ]}
+    errs, summary = trace_violations(broken)
+    assert len(errs) == 5
+    # same scan order as the raise-first validator: the first collected
+    # violation IS the one validate_chrome_trace raises
+    with pytest.raises(ValueError, match="unknown phase"):
+        validate_chrome_trace(broken)
+    assert "unknown phase" in errs[0]
+    assert summary["events"] == 5
+    p = tmp_path / "broken.json"
+    p.write_text(json.dumps(broken))
+    assert export_main([str(p)]) == 1
+    out = capsys.readouterr().out
+    assert "INVALID" in out and "5 violation(s)" in out
+    for needle in ("unknown phase", "missing name/pid/tid",
+                   "unknown category", "bad ts", "bad dur"):
+        assert needle in out
+
+
 # -------------------------------------------------------------- metrics
 
 def test_counter_interval_is_a_delta():
@@ -393,6 +425,19 @@ def test_progress_line_formats_the_record():
     assert "[plan-switch]" in progress_line({"superstep": 3,
                                              "event": "plan-switch"})
     assert fmt_plan(None) == ""
+
+
+def test_progress_line_shows_sharded_exchange_extras():
+    """The PR 8 sharded extras render SI-formatted when present and
+    drop out otherwise."""
+    rec = {"superstep": 2, "active": 220, "messages": 1200,
+           "wall_s": 0.01, "exchange_stall_s": 0.0042,
+           "exchange_bytes": 1_300_000}
+    line = progress_line(rec)
+    assert "xstall 4.2ms" in line
+    assert "xbytes 1.3M" in line
+    bare = progress_line({"superstep": 2, "active": 220, "wall_s": 0.01})
+    assert "xstall" not in bare and "xbytes" not in bare
 
 
 # --------------------------------------------- end-to-end traced run

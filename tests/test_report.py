@@ -1,0 +1,352 @@
+"""Plan-audit ledger + memory-pressure accounting suite (ISSUE 9).
+
+Covers the acceptance criteria: a disk-tier OOC run with the ledgers on
+produces a schema-valid ``pregelix-run-report/v1`` document whose every
+superstep row joins per-term predicted against measured leg seconds with
+a FINITE drift score, carries HBM/DRAM/SSD occupancy with the DRAM peak
+under ``memory_budget_bytes``, and whose every replan decision is paired
+with the candidate price table it was made from; ``compare()`` on two
+runs of the same workload returns zero regressions; and the
+disabled-path guard proves the audit hooks cost nothing when off
+(mirroring the ``_NULL`` tracer guard in test_obs.py).
+"""
+import json
+import math
+
+import pytest
+
+from repro.core import PhysicalPlan, load_graph
+from repro.core.ooc import run_out_of_core
+from repro.graph import PageRank, rmat_graph
+from repro.obs import explain, memwatch, report
+from repro.obs.explain import TERM_LEG, drift
+from repro.obs.report import (build_report, compare, to_markdown,
+                              validate_report, write_report)
+from repro.planner import GraphStats
+from repro.planner.adaptive import AdaptiveConfig, AdaptiveController
+from repro.planner.stats import SuperstepStats
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_ledgers():
+    """Every test starts and ends with both ledgers disabled — a leak
+    across tests would defeat the disabled-path overhead guard."""
+    explain.stop()
+    memwatch.stop()
+    yield
+    explain.stop()
+    memwatch.stop()
+
+
+N = 220
+EDGES = rmat_graph(N, 1200, seed=7)
+BUDGET = 16 * 1024
+
+
+def _disk_tier_run(tmp_path, tag):
+    """One small disk-tier OOC run with both ledgers recording; returns
+    the assembled report document."""
+    prog = PageRank(N, iterations=6)
+    vert = load_graph(EDGES, N, P=4, value_dims=2)
+    explain.start()
+    memwatch.start()
+    try:
+        res = run_out_of_core(
+            vert, prog, "auto", budget_partitions=1, max_supersteps=8,
+            stream=True, barrier_free=True,
+            memory_budget_bytes=BUDGET,
+            disk_dir=str(tmp_path / f"spill-{tag}"),
+            eviction="mru", io_threads=2)
+    finally:
+        led = explain.stop()
+        mw = memwatch.stop()
+    return build_report(stats=res.stats, explain=led, memwatch=mw,
+                        meta={"tag": tag, "algo": "pagerank"})
+
+
+# ------------------------------------------------- disabled-path guard
+
+def test_disabled_audit_records_nothing():
+    """Without start() every module hook is a plain early return — no
+    ledger, no rows, no samples (the audit calls sit permanently in the
+    driver hot path, so this is the regression guard for their cost)."""
+    assert not explain.enabled() and not memwatch.enabled()
+    assert explain.get() is None and memwatch.get() is None
+    prog = PageRank(N, iterations=4)
+    # the fire-and-forget module surface is all Nones while off
+    assert explain.attach(prog, plan=PhysicalPlan()) is None
+    assert explain.superstep(SuperstepStats(superstep=0)) is None
+    assert explain.decision(0, "replan") is None
+    assert memwatch.configure(budget_bytes=1) is None
+    assert memwatch.sample(0) is None
+    # and a real run leaves both modules untouched
+    vert = load_graph(EDGES, N, P=4, value_dims=2)
+    res = run_out_of_core(vert, prog, prog.suggested_plan,
+                          budget_partitions=2, max_supersteps=6)
+    assert res.supersteps > 0
+    assert explain.get() is None and memwatch.get() is None
+
+
+def test_stop_detaches_the_ledgers():
+    led = explain.start()
+    mw = memwatch.start()
+    assert explain.enabled() and memwatch.enabled()
+    assert explain.stop() is led and memwatch.stop() is mw
+    assert not explain.enabled() and not memwatch.enabled()
+
+
+# -------------------------------------- acceptance: disk-tier OOC run
+
+def test_disk_tier_report_meets_acceptance(tmp_path):
+    rep = _disk_tier_run(tmp_path, "accept")
+    # schema-valid, with zero violations listed
+    assert validate_report(rep) == []
+    rows = rep["supersteps"]
+    assert rows
+    for r in rows:
+        # (a) per-term predicted vs measured with a finite drift score
+        a = r["audit"]
+        assert "error" not in a
+        assert math.isfinite(a["drift_score"])
+        assert a["predicted"]
+        for term, d in a["predicted"].items():
+            assert d["leg"] == TERM_LEG.get(term, "device")
+            assert math.isfinite(d["seconds"])
+        # the disk-tier pipeline measures at least device + serial +
+        # host_io legs; every joined leg has both sides and finite drift
+        assert {"device", "host_io", "serial"} <= set(a["legs"])
+        for leg in a["legs"].values():
+            assert math.isfinite(leg["drift"])
+            assert leg["measured_s"] >= 0.0
+            assert leg["drift"] == pytest.approx(
+                drift(leg["predicted_s"], leg["measured_s"]))
+        # (b) all three tiers sampled; DRAM peak within the hard budget
+        m = r["memory"]
+        assert m["hbm"]["total_bytes"] > 0
+        assert m["dram"]["budget_bytes"] == BUDGET
+        assert 0 <= m["dram"]["peak_resident_bytes"] <= BUDGET
+        assert m["dram"]["occupancy"] == pytest.approx(
+            m["dram"]["resident_bytes"] / BUDGET)
+        assert m["ssd"]["spill_bytes"] >= 0
+    # paging actually happened (the 16 KiB budget forces the disk tier)
+    assert rep["memory_peaks"]["ssd_spill_bytes"] > 0
+    assert 0 < rep["memory_peaks"]["dram_occupancy"] <= 1.0 + 1e-9
+    # (c) every replan decision carries its candidate price table
+    for d in rep["decisions"]:
+        assert d["kind"] in ("replan", "recalibrate")
+        if d["kind"] == "replan":
+            assert d["candidates"]
+            for c in d["candidates"]:
+                assert c["plan"] and math.isfinite(c["seconds"])
+    s = rep["summary"]
+    assert s["supersteps"] == len(rows)
+    assert math.isfinite(s["mean_drift"]) and math.isfinite(s["max_drift"])
+    assert s["replans"] == sum(1 for d in rep["decisions"]
+                               if d["kind"] == "replan")
+    # the markdown digest renders without blowing up on any row
+    md = to_markdown(rep)
+    assert "Run report" in md and "supersteps" in md
+
+
+def test_same_workload_compares_clean(tmp_path):
+    """compare() across two runs of the SAME workload: zero
+    regressions despite scheduler/cache noise."""
+    a = _disk_tier_run(tmp_path, "a")
+    b = _disk_tier_run(tmp_path, "b")
+    diff = compare(a, b)
+    assert diff["ok"] and diff["regressions"] == []
+    assert diff["base"]["supersteps"] == diff["other"]["supersteps"]
+    # and the flip side: a doctored report with much worse drift and a
+    # fuller DRAM tier is flagged on both axes
+    worse = json.loads(json.dumps(b))
+    worse["summary"]["mean_drift"] = a["summary"]["mean_drift"] + 2.0
+    worse["memory_peaks"]["dram_occupancy"] = min(
+        a["memory_peaks"]["dram_occupancy"] + 0.5, 2.0)
+    diff = compare(a, worse)
+    assert not diff["ok"]
+    assert {r["kind"] for r in diff["regressions"]} == \
+        {"drift", "occupancy"}
+
+
+# ----------------------------------------- decision log (replan audit)
+
+_G = GraphStats(n_vertices=100_000, n_edges=800_000, n_partitions=8,
+                vertex_capacity=16_250, edge_capacity=100_000,
+                value_dims=2, msg_dims=1)
+
+
+def test_replan_decision_carries_the_losing_candidates():
+    """A controller switch while the ledger is on logs the full ranked
+    candidate table the decision was made from — the 'why did auto pick
+    this plan' record."""
+    from repro.planner import Observation, choose
+    prog = PageRank(_G.n_vertices, iterations=5)
+    dense, _ = choose(prog, _G, Observation(frontier_density=1.0))
+    explain.start()
+    ctrl = AdaptiveController(
+        prog, _G, dense,
+        config=AdaptiveConfig(margin=0.05, patience=1, cooldown=0,
+                              min_superstep=0))
+    rec = SuperstepStats(superstep=3, active=100, messages=800,
+                         frontier_density=0.001, wall_s=0.01)
+    new = ctrl.observe(rec)
+    led = explain.stop()
+    assert new is not None and new != dense
+    (d,) = led.decisions
+    assert d["kind"] == "replan" and d["superstep"] == 3
+    assert d["from"] != d["to"]
+    assert math.isfinite(d["current_s"])
+    # cheapest-first, and the winner leads the table
+    secs = [c["seconds"] for c in d["candidates"]]
+    assert secs == sorted(secs)
+    assert d["candidates"][0]["plan"] == d["to"]
+    # the decision log survives the report round trip
+    rep = build_report(stats=[rec.as_dict()], explain=led)
+    assert validate_report(rep) == []
+    assert rep["summary"]["replans"] == 1
+
+
+def test_decision_validation_rejects_bad_entries():
+    base = {"schema": report.SCHEMA, "meta": {},
+            "supersteps": [{"superstep": 0, "wall_s": 0.1}],
+            "summary": {}}
+    ok = dict(base, decisions=[
+        {"superstep": 1, "kind": "replan",
+         "candidates": [{"plan": "a/b", "seconds": 0.5}]},
+        {"superstep": 2, "kind": "recalibrate", "k_compute": 1.0}])
+    assert validate_report(ok) == []
+    # unknown kind, replan without candidates, candidate without price:
+    # ALL collected in one pass
+    bad = dict(base, decisions=[
+        {"superstep": 1, "kind": "mystery"},
+        {"superstep": 2, "kind": "replan"},
+        {"superstep": 3, "kind": "replan",
+         "candidates": [{"plan": "a/b"}]}])
+    errs = validate_report(bad)
+    assert len(errs) == 3
+    assert any("unknown kind" in e for e in errs)
+    assert any("candidate price table" in e for e in errs)
+    assert any("bad candidate" in e for e in errs)
+
+
+# -------------------------------------------------- validator + CLI
+
+def test_validator_collects_every_violation():
+    assert validate_report([]) == ["top level must be a dict"]
+    errs = validate_report({"schema": "nope", "meta": None,
+                            "supersteps": [], "decisions": None,
+                            "summary": None})
+    assert len(errs) == 5                 # one per broken section
+    # a budget-busting DRAM peak and a NaN drift are both caught
+    doc = {"schema": report.SCHEMA,
+           "meta": {"memory_budget_bytes": 100},
+           "supersteps": [
+               {"superstep": 0, "wall_s": 0.1,
+                "audit": {"drift_score": float("nan"), "legs": {},
+                          "predicted": {"send": {"seconds": 1.0}}},
+                "memory": {"dram": {"resident_bytes": 50,
+                                    "dirty_bytes": 0, "pinned_bytes": 0,
+                                    "peak_resident_bytes": 150}}}],
+           "decisions": [], "summary": {}}
+    errs = validate_report(doc)
+    assert any("drift_score" in e for e in errs)
+    assert any("exceeds budget" in e for e in errs)
+
+
+def test_report_cli_validate_and_compare(tmp_path, capsys):
+    good = tmp_path / "good.json"
+    bad = tmp_path / "bad.json"
+    gdoc = {"schema": report.SCHEMA, "meta": {},
+            "supersteps": [{"superstep": 0, "wall_s": 0.1}],
+            "decisions": [], "summary": {"mean_drift": 0.5}}
+    good.write_text(json.dumps(gdoc))
+    bad.write_text(json.dumps({"schema": "wrong", "meta": {},
+                               "supersteps": [], "decisions": [],
+                               "summary": {}}))
+    assert report.main(["--validate", str(good)]) == 0
+    assert "OK" in capsys.readouterr().out
+    # nonzero exit + the FULL violation list on one run
+    assert report.main(["--validate", str(good), str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "INVALID" in out and "schema must be" in out
+    assert "supersteps must be a non-empty list" in out
+    assert report.main(["--validate", str(tmp_path / "missing.json")]) == 1
+    assert "unreadable" in capsys.readouterr().out
+    # compare: clean pair exits 0 either way; regression gates only
+    # under --strict
+    worse = tmp_path / "worse.json"
+    wdoc = json.loads(json.dumps(gdoc))
+    wdoc["summary"]["mean_drift"] = 9.0
+    worse.write_text(json.dumps(wdoc))
+    assert report.main(["--compare", str(good), str(good)]) == 0
+    assert report.main(["--compare", str(good), str(worse)]) == 0
+    assert report.main(["--compare", str(good), str(worse),
+                        "--strict"]) == 1
+    assert "mean drift rose" in capsys.readouterr().out
+
+
+# --------------------------------------------- ledger unit semantics
+
+def test_drift_is_finite_and_symmetric():
+    assert drift(1.0, 1.0) == 0.0
+    assert drift(1.0, 2.0) == pytest.approx(math.log(2), abs=1e-5)
+    assert drift(2.0, 1.0) == pytest.approx(drift(1.0, 2.0), abs=1e-5)
+    assert math.isfinite(drift(0.0, 0.0))
+    assert math.isfinite(drift(0.0, 1e9))
+
+
+def test_memwatch_budget_gauge_and_peaks():
+    class _Store:
+        def occupancy(self):
+            return {"resident_bytes": 60, "dirty_bytes": 10,
+                    "pinned_bytes": 4, "peak_resident_bytes": 80,
+                    "budget_bytes": 100, "spill_bytes": 7,
+                    "spill_read_bytes": 3, "spill_write_bytes": 9}
+    mw = memwatch.start()
+    s = memwatch.sample(0, store=_Store())
+    assert s["dram"]["occupancy"] == pytest.approx(0.6)
+    assert s["dram"]["headroom_bytes"] == 40
+    assert s["ssd"]["spill_bytes"] == 7
+    # sharded: per-worker stores SUM (budgets too)
+    s2 = memwatch.sample(1, stores=[_Store(), _Store()])
+    assert s2["dram"]["resident_bytes"] == 120
+    assert s2["dram"]["budget_bytes"] == 200
+    assert memwatch.stop() is mw
+    assert mw.peaks["dram_resident_bytes"] == 120
+    assert mw.peaks["ssd_spill_bytes"] == 14
+    assert mw.peaks["dram_occupancy"] == pytest.approx(0.6)
+
+
+def test_explain_attach_requires_context():
+    led = explain.start()
+    prog = PageRank(N, iterations=4)
+    # no plan / no graph context -> decision-log-only ledger
+    assert explain.attach(prog) is None
+    assert explain.attach(prog, plan=PhysicalPlan()) is None
+    assert led.superstep(SuperstepStats(superstep=0)) is None
+    # with a vertex relation the shadow auditor prices rows
+    vert = load_graph(EDGES, N, P=4, value_dims=2)
+    assert explain.attach(prog, vert=vert, plan=PhysicalPlan()) is led
+    row = led.superstep(SuperstepStats(
+        superstep=0, active=N, messages=1200, frontier_density=1.0,
+        wall_s=0.01))
+    assert row is not None and math.isfinite(row["drift_score"])
+    assert row["legs"]["device"]["measured_s"] == pytest.approx(0.01)
+    # event records never become audit rows
+    assert led.superstep(SuperstepStats(superstep=1,
+                                        event="plan-switch")) is None
+    explain.stop()
+
+
+def test_write_report_emits_json_and_markdown(tmp_path):
+    doc = {"schema": report.SCHEMA, "meta": {"algo": "pagerank"},
+           "supersteps": [{"superstep": 0, "wall_s": 0.1}],
+           "decisions": [], "summary": {"supersteps": 1, "wall_s": 0.1,
+                                        "mean_drift": None,
+                                        "replans": 0,
+                                        "recalibrations": 0}}
+    p = tmp_path / "rep.json"
+    m = tmp_path / "rep.md"
+    write_report(str(p), doc, markdown=str(m))
+    assert json.loads(p.read_text())["schema"] == report.SCHEMA
+    assert "Run report" in m.read_text()

@@ -124,6 +124,46 @@ def test_sharded_ooc_matches_host(algo, connector, tmp_path):
 
 
 @multi_device
+def test_sharded_ooc_traced_observability(tmp_path):
+    """Observability under the sharded disk-tier driver: a traced run
+    must show (a) spans from the main loop AND the per-worker tiered
+    stores' I/O engine threads, (b) the separately-timed all_to_all as
+    ``exchange``-category spans (one per superstep), and (c) the
+    exchange counters landing in ``SuperstepStats.extra["metrics"]``."""
+    from repro.obs import chrome_trace, trace, validate_chrome_trace
+    prog = PageRank(N, iterations=6)
+    vert = load_graph(EDGES, N, P=8, value_dims=2)
+    trace.start()
+    try:
+        res = run_sharded(vert, prog, prog.suggested_plan, devices=2,
+                          budget_partitions=2, disk_dir=str(tmp_path),
+                          memory_budget_bytes=16 * 1024, io_threads=2,
+                          max_supersteps=30)
+    finally:
+        tracer = trace.stop()
+    obj = chrome_trace(tracer)
+    # (a) per-worker spans: main thread + the stores' io engines
+    summary = validate_chrome_trace(obj, min_threads=3)
+    assert any(t.startswith("pregelix-io-")
+               for t in summary["thread_names"])
+    # (b) the exchange stage is its own span category — the OOC driver
+    # times one all_to_all per destination round (4 partitions/worker at
+    # budget 2 -> 2 rounds per superstep)
+    ex_spans = [e for e in obj["traceEvents"]
+                if e.get("ph") == "X" and e.get("cat") == "exchange"]
+    assert "exchange" in summary["categories"]
+    assert len(ex_spans) == 2 * res.supersteps
+    assert all(e["dur"] >= 0 for e in ex_spans)
+    # (c) exchange counters in the per-superstep metrics snapshots
+    recs = [s for s in res.stats if "exchange_stall_s" in s]
+    assert recs and len(recs) == res.supersteps
+    for s in recs:
+        m = s["metrics"]
+        assert m["exchange.bytes"] > 0
+        assert m["exchange.stall_s"] >= 0
+
+
+@multi_device
 def test_sharded_regrow_spans_exchange():
     """bucket_cap=2 overflows on superstep 0 in BOTH modes; the sharded
     OOC redo must end-pad the already-landed inbox pages to the grown
