@@ -1,0 +1,208 @@
+"""Chaos/recovery benchmark: cost of surviving a seeded fault plan.
+
+Runs each algorithm twice through the out-of-core driver — once clean,
+once under a seeded chaos plan (transient disk reads retried by the I/O
+ladder, one permanent page corruption that poisons the newest
+checkpoint, and a WorkerFailure mid-run) with ``recover=True`` — and
+reports the recovery story: whether the recovered run converged
+BIT-FOR-BIT with the unfailed one (the paper's Section 5.7 claim), which
+snapshot recovery restored, what the injector actually fired, and the
+wall-clock overhead of failing + restoring + replaying.
+
+Writes ``BENCH_faults.json`` (schema ``faults/v1``); ``--validate PATH``
+re-opens an artifact and checks the schema — including that every
+scenario's ``parity`` flag is True, so CI fails when a recovered run
+diverges. ``--smoke`` uses test-sized graphs (the CI chaos job).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+
+SCHEMA = "faults/v1"
+
+# one deterministic chaos plan for every scenario: the superstep-4 tick
+# kills worker 1 right after the corruption lands in the newest
+# checkpoint, so recovery must exercise the fail-over-to-previous rule
+# AND the retry ladder (the restore reads pages through the transient
+# spill.read faults)
+def _chaos_plan():
+    from repro.runtime import faults
+    return faults.FaultPlan(seed=42, faults=[
+        faults.FaultSpec(site="spill.read", kind="transient", times=2),
+        faults.FaultSpec(site="page.corrupt", kind="corrupt", times=1,
+                         match="inbox_dst_4"),
+        faults.FaultSpec(site="superstep", kind="worker", superstep=4,
+                         worker=1, match="ooc", times=1)])
+
+
+def _algos(n_vertices: int):
+    from repro.graph import SSSP, ConnectedComponents, PageRank
+    return {
+        "pagerank": PageRank(n_vertices, iterations=8),
+        "sssp": SSSP(source=0),
+        "cc": ConnectedComponents(),
+    }
+
+
+def _scenario(algo: str, prog, vert_fn, workdir, n_vertices: int) -> dict:
+    import numpy as np
+
+    from repro.core import gather_values
+    from repro.core.ooc import run_out_of_core
+    from repro.runtime import faults
+
+    faults.clear()
+    t0 = time.time()
+    clean = run_out_of_core(vert_fn(), prog, prog.suggested_plan,
+                            budget_partitions=2, max_supersteps=16,
+                            disk_dir=str(workdir / f"{algo}_clean"))
+    clean_wall = time.time() - t0
+
+    faults.install(_chaos_plan())
+    t0 = time.time()
+    res = run_out_of_core(vert_fn(), prog, prog.suggested_plan,
+                          budget_partitions=2, max_supersteps=16,
+                          disk_dir=str(workdir / f"{algo}_chaos"),
+                          checkpoint_every=1,
+                          checkpoint_dir=str(workdir / f"{algo}_ckpt"),
+                          recover=True)
+    chaos_wall = time.time() - t0
+    summary = faults.summary()
+    faults.clear()
+
+    a = gather_values(clean.vertex, n_vertices)[:, 0]
+    b = gather_values(res.vertex, n_vertices)[:, 0]
+    return {
+        "algo": algo,
+        "clean_wall_s": clean_wall,
+        "chaos_wall_s": chaos_wall,
+        "recovery_overhead": chaos_wall / clean_wall if clean_wall else 0.0,
+        "parity": bool(np.array_equal(a, b)),
+        "recovery": list(res.recovery),
+        "injected": summary,
+    }
+
+
+def build(smoke: bool, algos=None) -> dict:
+    import pathlib
+    import tempfile
+
+    from repro.graph import rmat_graph
+
+    if smoke:
+        n_vertices, n_edges = 120, 700
+    else:
+        n_vertices, n_edges = 4_000, 24_000
+
+    from repro.core import load_graph
+    edges = rmat_graph(n_vertices, n_edges, seed=3)
+
+    progs = _algos(n_vertices)
+    if algos:
+        progs = {k: v for k, v in progs.items() if k in algos}
+
+    results = []
+    with tempfile.TemporaryDirectory(prefix="bench_faults_") as td:
+        workdir = pathlib.Path(td)
+        for name, prog in progs.items():
+            results.append(_scenario(
+                name, prog,
+                lambda: load_graph(edges, n_vertices, P=4, value_dims=2),
+                workdir, n_vertices))
+    plan = _chaos_plan()
+    return {
+        "schema": SCHEMA,
+        "smoke": bool(smoke),
+        "n_vertices": n_vertices,
+        "n_edges": n_edges,
+        "plan": json.loads(plan.to_json()),
+        "results": results,
+    }
+
+
+def validate(art: dict) -> list:
+    """Schema gate for BENCH_faults.json. Empty list = valid."""
+    errs = []
+    if art.get("schema") != SCHEMA:
+        errs.append(f"schema={art.get('schema')!r}, want {SCHEMA!r}")
+    for key in ("smoke", "plan", "results"):
+        if key not in art:
+            errs.append(f"missing top-level {key!r}")
+    if errs:
+        return errs
+    if not isinstance(art["results"], list) or not art["results"]:
+        return ["results empty"]
+    for i, r in enumerate(art["results"]):
+        where = f"results[{i}]"
+        for key in ("algo", "clean_wall_s", "chaos_wall_s",
+                    "recovery_overhead", "parity", "recovery", "injected"):
+            if key not in r:
+                errs.append(f"{where} missing {key!r}")
+        if r.get("parity") is not True:
+            errs.append(f"{where}: recovered run diverged from the "
+                        "unfailed run (parity != True)")
+        if not r.get("recovery"):
+            errs.append(f"{where}: no recovery event — the fault plan "
+                        "never triggered the supervisor")
+        for key in ("clean_wall_s", "chaos_wall_s", "recovery_overhead"):
+            v = r.get(key)
+            if key in r and not (isinstance(v, (int, float))
+                                 and math.isfinite(v) and v >= 0):
+                errs.append(f"{where}.{key}={v!r} not a finite "
+                            "non-negative number")
+        inj = r.get("injected") or {}
+        fired = sum(s.get("fired", 0) for s in inj.get("specs", []))
+        if "injected" in r and fired < 1:
+            errs.append(f"{where}: injector reports zero fired faults")
+    return errs
+
+
+def console(art: dict):
+    for r in art["results"]:
+        ev = r["recovery"][0] if r["recovery"] else {}
+        print(f"{r['algo']:>9}: parity={r['parity']} "
+              f"overhead={r['recovery_overhead']:.2f}x "
+              f"restored_from={ev.get('restored_from')} "
+              f"blacklist={ev.get('blacklist')}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="test-sized graphs (CI chaos job)")
+    ap.add_argument("--algos", nargs="*", default=None,
+                    help="subset of pagerank/sssp/cc (default: all)")
+    ap.add_argument("--out", default="BENCH_faults.json")
+    ap.add_argument("--validate", metavar="PATH", default=None,
+                    help="validate an existing artifact and exit")
+    args = ap.parse_args(argv)
+
+    if args.validate:
+        with open(args.validate) as f:
+            art = json.load(f)
+        errs = validate(art)
+        if errs:
+            for e in errs:
+                print(f"INVALID: {e}")
+            raise SystemExit(1)
+        print(f"{args.validate}: valid {art['schema']} "
+              f"({len(art['results'])} scenarios, all parity)")
+        return 0
+
+    art = build(args.smoke, algos=args.algos)
+    errs = validate(art)
+    if errs:   # never ship an artifact the CI gate would reject
+        raise SystemExit("generated artifact failed its own schema: "
+                         + "; ".join(errs))
+    console(art)
+    with open(args.out, "w") as f:
+        json.dump(art, f, indent=1)
+    print(f"wrote {args.out} ({len(art['results'])} scenarios)")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -72,6 +72,7 @@ class RunResult:
     stats: list = field(default_factory=list)
     wall_s: float = 0.0
     plan: Optional[PhysicalPlan] = None   # plan in effect at the end
+    recovery: list = field(default_factory=list)  # supervisor events
 
 
 def _resolve_plan(vert, program, plan: PlanArg, *, adaptive: bool,
@@ -195,6 +196,10 @@ def run_host(vert: VertexRel, program: VertexProgram,
              ec: Optional[EngineConfig] = None,
              checkpoint_every: int = 0,
              checkpoint_dir: Optional[str] = None,
+             resume_from: Optional[str] = None,
+             resume_parts: Optional[int] = None,
+             recover: bool = False,
+             max_retries: int = 3,
              on_superstep: Optional[Callable] = None,
              failure_injector: Optional[Callable] = None,
              auto_config=None,
@@ -204,16 +209,64 @@ def run_host(vert: VertexRel, program: VertexProgram,
     (for tests) failure injection. plan="auto" turns on the cost-based
     planner: the initial plan is chosen for superstep 0's all-active
     frontier and re-chosen at superstep boundaries as observed frontier
-    density crosses the model's thresholds (planner.adaptive)."""
+    density crosses the model's thresholds (planner.adaptive).
+
+    ``resume_from=<ckpt npz>`` restarts from a checkpoint (optionally
+    re-hashed onto ``resume_parts`` partitions — the elastic restore).
+    ``recover=True`` runs the whole job under the failure manager's
+    recovery supervisor: a recoverable failure (WorkerFailure, disk
+    I/O, typed corruption) restores the latest VALID checkpoint onto
+    the surviving partitions and replays; application errors forward."""
     from repro.planner.stats import StatsCollector
+    from repro.runtime import faults
     from repro.runtime.checkpoint import save_checkpoint
 
+    if recover:
+        from repro.runtime.checkpoint import latest_checkpoint
+        from repro.runtime.failure import supervised_run
+        P0 = vert.num_partitions
+
+        def _attempt(healthy, resume):
+            return run_host(
+                vert, program, plan, max_supersteps=max_supersteps,
+                ec=ec, checkpoint_every=checkpoint_every,
+                checkpoint_dir=checkpoint_dir, resume_from=resume,
+                resume_parts=(healthy if resume is not None
+                              and healthy < P0 else None),
+                recover=False, on_superstep=on_superstep,
+                failure_injector=failure_injector,
+                auto_config=auto_config, auto_space=auto_space,
+                kernel_impl=kernel_impl)
+
+        def _pick(bad):
+            if not checkpoint_dir:
+                return None
+            return latest_checkpoint(checkpoint_dir, skip=bad,
+                                     verify=True)
+
+        return supervised_run(_attempt, _pick, n_workers=P0,
+                              max_retries=max_retries,
+                              initial_resume=resume_from)
+
     t0 = time.time()
+    i0, rmsg, rgs = 0, None, None
+    if resume_from is not None:
+        from repro.runtime.checkpoint import load_checkpoint, repartition
+        vert, rmsg, rgs = load_checkpoint(resume_from)
+        if resume_parts is not None \
+                and resume_parts != vert.num_partitions:
+            vert, rmsg = repartition(vert, rmsg, resume_parts)
+        i0 = int(rgs.superstep)
     plan, auto_space = apply_kernel_impl(plan, kernel_impl, auto_space)
     plan, controller = _resolve_plan(vert, program, plan, adaptive=True,
                                      ec=ec, auto_config=auto_config,
                                      auto_space=auto_space)
     ec = ec or default_engine_config(vert, program, plan)
+    if rmsg is not None and rmsg.capacity > ec.n_parts * ec.bucket_cap:
+        # the checkpointed inbox is wider than the derived config (it
+        # grew mid-run): adopt its capacity instead of truncating it
+        ec = dataclasses.replace(
+            ec, bucket_cap=-(-rmsg.capacity // ec.n_parts))
     if explain.enabled():
         # plan-audit ledger: bind the run context so each superstep's
         # stats record can be re-priced under the in-effect plan
@@ -228,10 +281,13 @@ def run_host(vert: VertexRel, program: VertexProgram,
             space_kw=auto_space)
     step = jax.jit(make_superstep(program, plan, ec))
     layout = plan_gather_layout(plan, vert)
-    gs = init_gs(program.agg_dims)
-    vert = init_vertex_values(vert, program, gs)
-    msg = empty_msgs(vert.num_partitions, ec.n_parts * ec.bucket_cap,
-                     program.msg_dims)
+    if rgs is not None:
+        gs, msg = rgs, _regrow_msgs(rmsg, ec)
+    else:
+        gs = init_gs(program.agg_dims)
+        vert = init_vertex_values(vert, program, gs)
+        msg = empty_msgs(vert.num_partitions, ec.n_parts * ec.bucket_cap,
+                         program.msg_dims)
     n_live = (controller.g.n_vertices if controller is not None
               else int(jnp.sum(vert.vid >= 0)))
     metrics = MetricsRegistry()
@@ -242,9 +298,10 @@ def run_host(vert: VertexRel, program: VertexProgram,
     m_regrows = metrics.counter("host.regrows")
     m_switches = metrics.counter("host.plan_switches")
     stats = []
-    i = 0
+    i = i0
     recompiled = True  # first step includes the jit compile
     while i < max_supersteps:
+        faults.superstep_tick(i, "host")
         ts = time.time()
         this_recompiled = recompiled
         recompiled = False

@@ -379,6 +379,8 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
                     checkpoint_every: int = 0,
                     checkpoint_dir: Optional[str] = None,
                     resume_from: Optional[str] = None,
+                    recover: bool = False,
+                    max_retries: int = 3,
                     on_superstep=None) -> RunResult:
     """budget_partitions = how many partitions fit in device memory at once
     (the HBM budget). P % budget_partitions must be 0. plan="auto" picks
@@ -429,9 +431,53 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
     interval snapshot into every record's ``extra["metrics"]``.
     ``on_superstep(i, rec_dict)`` is called after each superstep's
     record lands — the live progress hook ``pregel_run --progress``
-    uses."""
+    uses.
+
+    ``recover=True`` runs the job under the failure manager's recovery
+    supervisor: a recoverable failure (WorkerFailure, disk I/O, typed
+    page/checkpoint corruption) restores the latest VALID committed
+    checkpoint under ``checkpoint_dir`` — deep-verified, skipping any
+    snapshot whose restore surfaced corruption — and replays from it.
+    Replays resume at the checkpoint's own partition layout, so the
+    recovered run converges bit-for-bit with an unfailed one."""
     from repro.planner.stats import StatsCollector
+    from repro.runtime import faults as chaos
     from repro.runtime.checkpoint import save_ooc_checkpoint
+
+    if recover:
+        from repro.runtime.checkpoint import latest_ooc_checkpoint
+        from repro.runtime.failure import supervised_run
+        n_workers = (vert.vid.shape[0] // budget_partitions
+                     if vert is not None else max(1, max_retries + 1))
+
+        def _attempt(healthy, resume):
+            if resume is None and vert is None:
+                raise RuntimeError(
+                    "no valid checkpoint to restore and no initial "
+                    "relations to restart from")
+            return run_out_of_core(
+                vert, program, plan,
+                budget_partitions=budget_partitions,
+                max_supersteps=max_supersteps, ec=ec,
+                auto_config=auto_config, auto_space=auto_space,
+                kernel_impl=kernel_impl, stream=stream,
+                prefetch_depth=prefetch_depth, barrier_free=barrier_free,
+                memory_budget_bytes=memory_budget_bytes,
+                disk_dir=disk_dir, eviction=eviction,
+                io_threads=io_threads, readahead_pages=readahead_pages,
+                checkpoint_every=checkpoint_every,
+                checkpoint_dir=checkpoint_dir, resume_from=resume,
+                recover=False, on_superstep=on_superstep)
+
+        def _pick(bad):
+            if not checkpoint_dir:
+                return None
+            return latest_ooc_checkpoint(checkpoint_dir, skip=bad,
+                                         deep=True)
+
+        return supervised_run(_attempt, _pick, n_workers=n_workers,
+                              max_retries=max_retries,
+                              initial_resume=resume_from)
 
     t0 = time.time()
     sp = budget_partitions
@@ -864,6 +910,7 @@ def run_out_of_core(vert: Optional[VertexRel], program: VertexProgram,
             return done
 
         while i < max_supersteps and not bool(gs.halt):
+            chaos.superstep_tick(i, "ooc")
             ts = time.time()
             this_recompiled = recompiled
             recompiled = False

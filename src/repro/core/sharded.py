@@ -107,6 +107,17 @@ def _exchange_wire_bytes(P: int, n_parts: int, C: int, D: int,
     return int(total * (n_workers - 1) / max(n_workers, 1))
 
 
+def _fit_devices(P: int, healthy: int) -> int:
+    """Largest worker count ≤ ``healthy`` that P partitions divide over —
+    the elastic re-mesh rule. P itself never changes on recovery, so the
+    replay stays bit-for-bit (per-partition results are device-count
+    invariant); only the blocks-per-worker mapping shrinks."""
+    for n in range(min(max(healthy, 1), P), 0, -1):
+        if P % n == 0:
+            return n
+    return 1
+
+
 class ExchangeReadiness:
     """Distributed per-destination readiness bookkeeping.
 
@@ -158,14 +169,30 @@ def run_sharded(vert: VertexRel, program: VertexProgram,
                 io_threads: Optional[int] = None,
                 readahead_pages: int = 8,
                 eviction: str = "lru",
+                checkpoint_every: int = 0,
+                checkpoint_dir: Optional[str] = None,
+                resume_from: Optional[str] = None,
+                recover: bool = False,
+                max_retries: int = 3,
                 machine=None) -> RunResult:
     """Run `program` on a device mesh. ``mesh`` (or ``devices`` for a 1-D
     host mesh) sets the worker count N; the P partitions shard over it in
     contiguous blocks. With ``budget_partitions`` set, each worker
     streams its block through the device ``budget_partitions`` at a time
     from its own tiered store (per-worker OOC). ``on_superstep`` is
-    called as ``on_superstep(i, stats_dict)``."""
+    called as ``on_superstep(i, stats_dict)``.
+
+    ``checkpoint_every``/``checkpoint_dir`` snapshot the gathered global
+    relations as npz at superstep boundaries (in-memory mode only);
+    ``resume_from=<ckpt npz>`` restarts from one. ``recover=True`` runs
+    under the failure manager's recovery supervisor: a recoverable
+    failure blacklists the failed worker, restores the latest VALID
+    checkpoint, re-meshes onto the largest divisor of P that fits the
+    surviving device count (P itself never changes, so the replay is
+    bit-for-bit — per-partition results are device-count invariant),
+    and replays."""
     from repro.launch.mesh import make_host_mesh
+    from repro.runtime import faults
 
     t0 = time.time()
     if mesh is None:
@@ -177,7 +204,39 @@ def run_sharded(vert: VertexRel, program: VertexProgram,
         raise ValueError(f"n_partitions {P} must divide over {N} devices")
     machine = machine or _sharded_machine()
 
+    if recover:
+        from repro.runtime.checkpoint import latest_checkpoint
+        from repro.runtime.failure import supervised_run
+
+        def _attempt(healthy, resume):
+            return run_sharded(
+                vert, program, plan, mesh=None,
+                devices=_fit_devices(P, healthy),
+                max_supersteps=max_supersteps, ec=ec,
+                on_superstep=on_superstep, auto_config=auto_config,
+                auto_space=auto_space, kernel_impl=kernel_impl,
+                budget_partitions=budget_partitions, disk_dir=disk_dir,
+                memory_budget_bytes=memory_budget_bytes,
+                io_threads=io_threads, readahead_pages=readahead_pages,
+                eviction=eviction, checkpoint_every=checkpoint_every,
+                checkpoint_dir=checkpoint_dir, resume_from=resume,
+                recover=False, machine=machine)
+
+        def _pick(bad):
+            if not checkpoint_dir:
+                return None
+            return latest_checkpoint(checkpoint_dir, skip=bad,
+                                     verify=True)
+
+        return supervised_run(_attempt, _pick, n_workers=N,
+                              max_retries=max_retries,
+                              initial_resume=resume_from)
+
     if budget_partitions:
+        if checkpoint_every or resume_from:
+            raise ValueError("sharded npz checkpointing is in-memory "
+                             "mode only (per-worker OOC stores keep "
+                             "their state on their own disk tiers)")
         return _run_sharded_ooc(
             vert, program, plan, mesh=mesh, axes=axes, n_workers=N,
             max_supersteps=max_supersteps, ec=ec,
@@ -189,7 +248,17 @@ def run_sharded(vert: VertexRel, program: VertexProgram,
 
     from repro.planner.cost import Observation
     from repro.planner.stats import StatsCollector
+    from repro.runtime.checkpoint import save_checkpoint
 
+    i0, rmsg, rgs = 0, None, None
+    if resume_from is not None:
+        from repro.runtime.checkpoint import load_checkpoint
+        vert, rmsg, rgs = load_checkpoint(resume_from)
+        if vert.num_partitions != P:
+            raise ValueError(
+                f"checkpoint has {vert.num_partitions} partitions; the "
+                f"sharded driver resumes at a fixed P={P}")
+        i0 = int(rgs.superstep)
     plan, auto_space = apply_kernel_impl(plan, kernel_impl, auto_space)
     if not isinstance(plan, PhysicalPlan):
         # pin the kernel dispatch to the jnp reference inside shard_map
@@ -204,6 +273,9 @@ def run_sharded(vert: VertexRel, program: VertexProgram,
                                      machine=machine, obs0=obs0)
     ec = ec or default_engine_config(vert, program, plan)
     ec = dataclasses.replace(ec, axis_name=axes, exchange_apart=True)
+    if rmsg is not None and rmsg.capacity > ec.n_parts * ec.bucket_cap:
+        ec = dataclasses.replace(
+            ec, bucket_cap=-(-rmsg.capacity // ec.n_parts))
     if explain.enabled():
         explain.attach(
             program, vert=vert,
@@ -256,12 +328,17 @@ def run_sharded(vert: VertexRel, program: VertexProgram,
         return step, ex
 
     step, exchange = build_step(plan, ec)
-    gs = init_gs(program.agg_dims)
-    vert = init_vertex_values(vert, program, gs)
-    vert = put_lead(vert)
-    gs = put_rep(gs)
-    msg = put_lead(empty_msgs(P, ec.n_parts * ec.bucket_cap,
-                              program.msg_dims))
+    if rgs is not None:
+        gs = put_rep(rgs)
+        vert = put_lead(vert)
+        msg = put_lead(_regrow_msgs(rmsg, ec))
+    else:
+        gs = init_gs(program.agg_dims)
+        vert = init_vertex_values(vert, program, gs)
+        vert = put_lead(vert)
+        gs = put_rep(gs)
+        msg = put_lead(empty_msgs(P, ec.n_parts * ec.bucket_cap,
+                                  program.msg_dims))
 
     n_live = (controller.g.n_vertices if controller is not None
               else int(jnp.sum(vert.vid >= 0)))
@@ -274,9 +351,10 @@ def run_sharded(vert: VertexRel, program: VertexProgram,
     m_regrows = metrics.counter("host.regrows")
     m_switches = metrics.counter("host.plan_switches")
     stats = []
-    i = 0
+    i = i0
     recompiled = True
     while i < max_supersteps:
+        faults.superstep_tick(i, "sharded")
         ts = time.time()
         this_recompiled = recompiled
         recompiled = False
@@ -303,6 +381,7 @@ def run_sharded(vert: VertexRel, program: VertexProgram,
                 controller.note_shape_change()
             continue
         # ---- the all_to_all exchange, as its own timed stage ----------
+        faults.hit("sharded.exchange", f"s{i}")
         t_ex = time.time()
         msg = exchange(buckets)
         jax.block_until_ready(msg.valid)
@@ -371,6 +450,10 @@ def run_sharded(vert: VertexRel, program: VertexProgram,
                 recompiled = True
                 if controller is not None:
                     controller.note_shape_change()
+        if checkpoint_every and i % checkpoint_every == 0 \
+                and checkpoint_dir:
+            with trace.span("checkpoint", "checkpoint"):
+                save_checkpoint(checkpoint_dir, i, vert, msg, gs)
         if on_superstep is not None:
             on_superstep(i, rec.as_dict())
         if bool(gs.halt):
@@ -393,6 +476,7 @@ def _run_sharded_ooc(vert, program, plan, *, mesh, axes, n_workers,
                      on_superstep, t0):
     from repro.planner.cost import Observation
     from repro.planner.stats import StatsCollector
+    from repro.runtime import faults
     from repro.storage.tiered import TieredStore
 
     if getattr(program, "mutates", False):
@@ -537,6 +621,7 @@ def _run_sharded_ooc(vert, program, plan, *, mesh, axes, n_workers,
     halted = False
     recompiled = True
     while i < max_supersteps and not halted:
+        faults.superstep_tick(i, "sharded")
         ts = time.time()
         this_recompiled = recompiled
         recompiled = False

@@ -253,6 +253,23 @@ def main():
                     help="--ooc disk tier page-replacement policy: lru, "
                          "or mru (resists the superstep's cyclic "
                          "sequential scan)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="snapshot the run every N supersteps into "
+                         "--checkpoint-dir (required with --recover so "
+                         "a failure has something to restore)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="directory for checkpoints (npz for host/"
+                         "sharded, hard-linked page snapshots for --ooc)")
+    ap.add_argument("--recover", action="store_true",
+                    help="run under the failure manager's recovery "
+                         "supervisor: recoverable failures (worker loss, "
+                         "disk I/O, page/checkpoint corruption) restore "
+                         "the latest VALID checkpoint onto the surviving "
+                         "workers and replay; application errors forward")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="recovery attempts before the failure is "
+                         "forwarded (default 3); also the per-worker "
+                         "recoverable-failure budget before blacklisting")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="record a span timeline of the run and write it "
                          "as Chrome trace-event JSON to PATH (load in "
@@ -322,6 +339,15 @@ def main():
     program = ALGOS[args.algo](n)
     vert = load_graph(edges, n, P=args.parts,
                       value_dims=program.value_dims)
+    from repro.runtime import faults
+    faults.install_from_env()   # REPRO_FAULT_PLAN: chaos harness
+    if args.recover and not args.checkpoint_dir:
+        ap.error("--recover needs --checkpoint-dir (and a nonzero "
+                 "--checkpoint-every) so a failure has a snapshot "
+                 "to restore")
+    ft_kw = dict(checkpoint_every=args.checkpoint_every,
+                 checkpoint_dir=args.checkpoint_dir,
+                 recover=args.recover, max_retries=args.max_retries)
     if args.trace:
         trace.start()
     if args.report or args.explain:
@@ -367,9 +393,14 @@ def main():
             tier = (f", ooc budget={budget}/{per_worker} per worker" +
                     (f", disk tier at {args.disk_dir}/worker*"
                      f" [{args.eviction}]" if args.disk_dir else ""))
+        if args.ooc and (args.checkpoint_every or args.recover):
+            # sharded npz checkpointing is in-memory mode only; recover
+            # without checkpoints would only restart from scratch
+            ft_kw = dict(recover=args.recover,
+                         max_retries=args.max_retries)
         res = run_sharded(vert, program, plan, mesh=mesh,
                           max_supersteps=40, kernel_impl=kimp,
-                          on_superstep=show, **ooc_kw)
+                          on_superstep=show, **ooc_kw, **ft_kw)
         mode = f"sharded x{n_dev} devices{tier}"
         ex = [s for s in res.stats if "exchange_stall_s" in s]
         if ex:
@@ -403,7 +434,7 @@ def main():
                               eviction=args.eviction,
                               io_threads=args.io_threads,
                               readahead_pages=args.readahead_pages,
-                              on_superstep=show)
+                              on_superstep=show, **ft_kw)
         tier = (f", disk tier at {args.disk_dir} "
                 f"[{args.eviction}]" if args.disk_dir else "")
         exe = ("synchronous" if not args.stream else
@@ -416,11 +447,17 @@ def main():
         kimp = (args.kernel_impl if args.auto_plan
                 and args.kernel_impl != "auto" else None)
         res = run_host(vert, program, plan, max_supersteps=40,
-                       kernel_impl=kimp, on_superstep=host_cb)
+                       kernel_impl=kimp, on_superstep=host_cb, **ft_kw)
         mode = "in-memory"
     vals = gather_values(res.vertex, n)
     print(f"{args.algo} on {args.dataset} [{mode}]: "
           f"{res.supersteps} supersteps, {res.wall_s:.2f}s wall")
+    for ev in getattr(res, "recovery", ()) or ():
+        print(f"recovery #{ev.get('attempt')}: restored from "
+              f"{ev.get('restored_from') or 'initial relations'} onto "
+              f"{ev.get('healthy_workers')} worker(s) "
+              f"(blacklist {ev.get('blacklist') or '[]'}) after "
+              f"{ev.get('error')}")
     if args.ooc and args.disk_dir:
         recs = [s for s in res.stats if "cache_hit_rate" in s]
         if recs:
@@ -474,6 +511,7 @@ def main():
         mem = memwatch.stop()
         rep = report.build_report(
             stats=res.stats, explain=aud, memwatch=mem,
+            recovery=getattr(res, "recovery", None),
             meta={"algo": args.algo, "dataset": args.dataset,
                   "mode": mode, "parts": args.parts,
                   "plan": fmt_plan(res.plan),

@@ -16,6 +16,7 @@ Document shape::
                      "memory": {hbm/dram/ssd}|absent,
                      "extra": {...stats extras...}}, ...],
      "decisions": [{"superstep", "kind": replan|recalibrate, ...}],
+     "faults": {recovery/stragglers/io/injected}|absent,
      "memory_peaks": {...memwatch watermarks...},
      "summary": {"supersteps", "wall_s", "mean_drift", "max_drift",
                  "replans", "recalibrations"}}
@@ -48,13 +49,17 @@ _ROW_FIELDS = ("active", "messages", "wall_s", "recompiled",
 # ---- assembly --------------------------------------------------------
 
 def build_report(*, stats: Optional[list] = None, explain=None,
-                 memwatch=None, meta: Optional[dict] = None) -> dict:
+                 memwatch=None, meta: Optional[dict] = None,
+                 recovery: Optional[list] = None) -> dict:
     """Join the run's observability streams into one document.
 
     ``stats`` is ``RunResult.stats`` (dict records; event records feed
     the decision log context but not the rows), ``explain`` an
     ``ExplainLedger`` (or its ``as_dict()``), ``memwatch`` a ``MemWatch``
-    (or its ``as_dict()``)."""
+    (or its ``as_dict()``), ``recovery`` a ``RunResult.recovery`` list
+    (the failure manager's supervisor events). A ``faults`` section is
+    emitted whenever the run saw recovery events, straggler flags, I/O
+    retries/errors, or an active fault injector."""
     exd = explain.as_dict() if hasattr(explain, "as_dict") else \
         (explain or {})
     mwd = memwatch.as_dict() if hasattr(memwatch, "as_dict") else \
@@ -100,10 +105,49 @@ def build_report(*, stats: Optional[list] = None, explain=None,
               "supersteps": rows, "decisions": decisions,
               "memory_peaks": dict(mwd.get("peaks", {})),
               "summary": summary}
+    faults_sec = _faults_section(rows, recovery)
+    if faults_sec:
+        report["faults"] = faults_sec
     if "memory_budget_bytes" in mwd:
         report["meta"].setdefault("memory_budget_bytes",
                                   mwd["memory_budget_bytes"])
     return report
+
+
+def _faults_section(rows, recovery) -> dict:
+    """The "Faults & recovery" stream: supervisor recovery events,
+    straggler flags, the I/O retry/error/degradation counters summed
+    over the rows' per-superstep metrics, and the fault injector's
+    summary when a chaos plan is active."""
+    sec: dict = {}
+    if recovery:
+        sec["recovery"] = list(recovery)
+    stragglers = [r["extra"]["straggler"] for r in rows
+                  if "straggler" in r.get("extra", {})]
+    if stragglers:
+        sec["stragglers"] = stragglers
+    retries = errors = 0
+    degrade_peak = 0
+    seen_io = False
+    for r in rows:
+        m = r.get("extra", {}).get("metrics", {})
+        e = r.get("extra", {})
+        for src in (m, e):
+            if any(k in src for k in ("io.retries", "io_retries",
+                                      "io_errors", "io.errors")):
+                seen_io = True
+        retries += int(m.get("io.retries", e.get("io_retries", 0)) or 0)
+        errors += int(m.get("io.errors", e.get("io_errors", 0)) or 0)
+        degrade_peak = max(degrade_peak,
+                           int(m.get("io.degrade_level",
+                                     e.get("io_degrade_level", 0)) or 0))
+    if seen_io and (retries or errors or degrade_peak):
+        sec["io"] = {"retries": retries, "errors": errors,
+                     "degrade_level_peak": degrade_peak}
+    from repro.runtime import faults as _chaos
+    if _chaos.enabled():
+        sec["injected"] = _chaos.summary()
+    return sec
 
 
 def to_markdown(report: dict) -> str:
@@ -154,6 +198,34 @@ def to_markdown(report: dict) -> str:
         out += ["", "## Memory peaks", ""]
         for k in sorted(peaks):
             out.append(f"- {k}: {peaks[k]}")
+    fl = report.get("faults", {})
+    if fl:
+        out += ["", "## Faults & recovery", ""]
+        for ev in fl.get("recovery", ()):
+            out.append(
+                "- recovery #{}: restored from {} onto {} worker(s), "
+                "blacklist {} — {}".format(
+                    ev.get("attempt"),
+                    ev.get("restored_from") or "initial relations",
+                    ev.get("healthy_workers"),
+                    ev.get("blacklist") or "[]",
+                    ev.get("error", "?")))
+        io = fl.get("io")
+        if io:
+            out.append(f"- I/O: {io.get('retries', 0)} retried op(s), "
+                       f"{io.get('errors', 0)} exhausted failure(s), "
+                       f"peak degradation level "
+                       f"{io.get('degrade_level_peak', 0)}")
+        for s in fl.get("stragglers", ()):
+            out.append(f"- straggler: superstep {s.get('superstep')} "
+                       f"took {s.get('wall_s', 0.0):.4f}s "
+                       f"(median {s.get('median_s', 0.0):.4f}s)")
+        inj = fl.get("injected")
+        if inj:
+            fired = sum(sp.get("fired", 0) for sp in inj.get("specs", ()))
+            out.append(f"- fault injector ACTIVE (seed "
+                       f"{inj.get('seed')}): {fired} fault(s) fired "
+                       f"across {len(inj.get('specs', ()))} spec(s)")
     return "\n".join(out) + "\n"
 
 
@@ -270,6 +342,16 @@ def validate_report(obj) -> List[str]:
                         break
     if not isinstance(obj.get("summary"), dict):
         errs.append("summary must be a dict")
+    fl = obj.get("faults")
+    if fl is not None:
+        if not isinstance(fl, dict):
+            errs.append("faults must be a dict")
+        else:
+            for key in ("recovery", "stragglers"):
+                if key in fl and not isinstance(fl[key], list):
+                    errs.append(f"faults.{key} must be a list")
+            if "io" in fl and not isinstance(fl["io"], dict):
+                errs.append("faults.io must be a dict")
     return errs
 
 

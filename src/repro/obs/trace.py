@@ -29,7 +29,8 @@ Design constraints:
 
 Span categories (one per pipeline leg; ``CATEGORIES``): ``dispatch``,
 ``prepare``, ``compute``, ``collect``, ``commit``, ``fault``,
-``readahead``, ``writeback``, ``checkpoint``, ``replan``, ``exchange``
+``readahead``, ``writeback``, ``checkpoint``, ``replan``, ``exchange``,
+``retry`` / ``degrade`` (the I/O engine's fault-retry ladder)
 (the sharded driver's all_to_all stage — what the planner's network
 axis is calibrated against).
 """
@@ -42,7 +43,7 @@ from typing import Optional
 # pipeline legs; the exporter colors/filters by these
 CATEGORIES = ("dispatch", "prepare", "compute", "collect", "commit",
               "fault", "readahead", "writeback", "checkpoint", "replan",
-              "exchange")
+              "exchange", "retry", "degrade")
 
 # event tuples stored in the per-thread buffers:
 #   ("X", name, cat, t0, dur, args)   complete span (seconds, wall clock)

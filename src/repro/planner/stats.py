@@ -109,6 +109,8 @@ class StatsCollector:
         self.n_vertices = n_vertices
         self.metrics = metrics
         self.records: List[SuperstepStats] = []
+        from repro.runtime.failure import StragglerMonitor
+        self.stragglers = StragglerMonitor()
 
     @property
     def total_vertices(self) -> int:
@@ -123,6 +125,12 @@ class StatsCollector:
             m = self.metrics.interval()
             if m:
                 extra["metrics"] = m
+        if not recompiled:
+            # straggler detection sees only steady-state supersteps — a
+            # jit compile would always look like a 10x straggler
+            flag = self.stragglers.observe(superstep, wall_s)
+            if flag is not None:
+                extra["straggler"] = flag
         rec = SuperstepStats(
             superstep=superstep, active=active, messages=messages,
             frontier_density=min(active / self.total_vertices, 1.0),

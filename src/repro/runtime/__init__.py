@@ -1,8 +1,16 @@
-from repro.runtime.checkpoint import (latest_checkpoint, load_checkpoint,
-                                      repartition, save_checkpoint)
+from repro.runtime.checkpoint import (CheckpointCorruption,
+                                      latest_checkpoint,
+                                      latest_ooc_checkpoint,
+                                      load_checkpoint, repartition,
+                                      save_checkpoint,
+                                      verify_ooc_checkpoint)
 from repro.runtime.failure import (FailureManager, StragglerMonitor,
                                    WorkerFailure)
+from repro.runtime.faults import (FaultInjector, FaultPlan, FaultSpec,
+                                  InjectedFault)
 
-__all__ = ["latest_checkpoint", "load_checkpoint", "repartition",
-           "save_checkpoint", "FailureManager", "StragglerMonitor",
-           "WorkerFailure"]
+__all__ = ["latest_checkpoint", "latest_ooc_checkpoint", "load_checkpoint",
+           "repartition", "save_checkpoint", "verify_ooc_checkpoint",
+           "CheckpointCorruption", "FailureManager", "StragglerMonitor",
+           "WorkerFailure", "FaultInjector", "FaultPlan", "FaultSpec",
+           "InjectedFault"]

@@ -13,6 +13,17 @@ the checkpoint directory instead of being re-serialized through DRAM —
 a disk-resident job checkpoints without ever materializing its relations
 in memory. ``run_out_of_core(resume_from=<dir>)`` restarts a job
 directly from such a directory, faulting pages in on first touch.
+
+VALIDITY: every checkpoint carries an atomic ``COMMIT`` manifest,
+written LAST (npz checkpoints get a ``<name>.COMMIT`` sidecar, OOC
+directories a ``COMMIT.json``), recording the snapshot's files with
+sizes and checksums. A writer that dies mid-checkpoint leaves a
+manifest-less partial that ``latest_checkpoint``/``latest_ooc_checkpoint``
+skip — the ``LATEST`` markers are hints, never trusted over the
+manifest — and ``verify_ooc_checkpoint`` walks the manifest plus the
+per-page CRC trailers so the recovery supervisor can fail over from a
+corrupt snapshot to the previous valid one. The gap between payload and
+manifest is a chaos-harness site (``checkpoint.commit``).
 """
 from __future__ import annotations
 
@@ -29,12 +40,41 @@ import numpy as np
 from repro.core.relations import (N_OVERFLOW, GlobalState, MsgRel,
                                   VertexRel)
 from repro.obs import trace
+from repro.storage.spillfile import page_checksum, verify_page_file
 
 # the host-resident relations an OOC checkpoint carries (one spill page
 # per super-partition each) plus the run-structured inbox chunks
 OOC_RELATIONS = ("vid", "halt", "value", "edge_src", "edge_dst",
                  "edge_val")
 OOC_INBOX = ("inbox_dst", "inbox_pay", "inbox_val")
+
+OOC_COMMIT = "COMMIT.json"
+
+
+class CheckpointCorruption(RuntimeError):
+    """A checkpoint failed its manifest/CRC check. Recoverable: the
+    supervisor fails over to the previous valid snapshot."""
+
+    def __init__(self, path, detail: str):
+        super().__init__(f"corrupt checkpoint {path}: {detail}")
+        self.path = str(path)
+
+
+def _faults():
+    from repro.runtime import faults
+    return faults
+
+
+def _file_crc(path: Path) -> tuple:
+    algo, crc = page_checksum(path.read_bytes())
+    return algo, crc
+
+
+def _write_commit(path: Path, doc: dict):
+    """Atomic manifest publish (tmp + os.replace in the same dir)."""
+    tmp = path.with_name(f".{path.name}.tmp")
+    tmp.write_text(json.dumps(doc))
+    os.replace(tmp, path)
 
 
 def save_checkpoint(ckpt_dir: str, superstep: int, vert: VertexRel,
@@ -58,7 +98,15 @@ def save_checkpoint(ckpt_dir: str, superstep: int, vert: VertexRel,
             gs_overflow=np.asarray(gs.overflow),
             gs_active=np.asarray(gs.active_count),
             gs_msgs=np.asarray(gs.msg_count))
-        os.replace(tmp, path)  # atomic publish
+        os.replace(tmp, path)  # atomic payload publish
+        # the crash-mid-checkpoint window: payload visible, no manifest
+        _faults().hit("checkpoint.commit", path.name)
+        algo, crc = _file_crc(path)
+        _write_commit(d / f"{path.name}.COMMIT",
+                      {"superstep": int(superstep), "file": path.name,
+                       "bytes": path.stat().st_size,
+                       "crc_algo": algo, "crc": crc,
+                       "saved_at": time.time()})
         (d / "LATEST").write_text(path.name)
     return str(path)
 
@@ -69,13 +117,15 @@ def save_ooc_checkpoint(ckpt_dir: str, superstep: int, store, gs, *,
                         controller_state=None) -> str:
     """Snapshot an out-of-core job at a superstep boundary. Pages move at
     the file level (hard-link for immutable inbox generations, kernel
-    copy otherwise — no DRAM round-trip on the disk tier; the pure-DRAM
-    tier falls back to ``np.save`` per page). The checkpoint directory is
-    published atomically via ``os.replace``."""
+    copy otherwise — no DRAM round-trip on the disk tier; every exported
+    page carries its CRC trailer). The directory is written in place and
+    COMMITTED by the atomic ``COMMIT.json`` manifest at the end — a
+    writer that dies mid-export leaves a manifest-less partial that the
+    checkpoint selectors skip."""
     d = Path(ckpt_dir)
     d.mkdir(parents=True, exist_ok=True)
     name = f"ooc_{superstep:06d}"
-    tmp = d / f".tmp_{name}"
+    tmp = d / name
     if tmp.exists():
         shutil.rmtree(tmp)
     tmp.mkdir()
@@ -112,48 +162,150 @@ def save_ooc_checkpoint(ckpt_dir: str, superstep: int, store, gs, *,
          # window from scratch
          "controller": controller_state,
          "saved_at": time.time()}))
-    final = d / name
-    if final.exists():
-        shutil.rmtree(final)
-    os.replace(tmp, final)
+    # the crash-mid-checkpoint window: pages + meta visible, no manifest
+    _faults().hit("checkpoint.commit", name)
+    files = {}
+    crcs = {}
+    for f in sorted(tmp.iterdir()):
+        if f.name == OOC_COMMIT or f.name.startswith("."):
+            continue
+        files[f.name] = f.stat().st_size
+        if f.suffix != ".npy":   # page files carry their own CRC trailer
+            algo, crc = _file_crc(f)
+            crcs[f.name] = [algo, crc]
+    _write_commit(tmp / OOC_COMMIT,
+                  {"superstep": int(superstep), "files": files,
+                   "crcs": crcs, "saved_at": time.time()})
     (d / "LATEST_OOC").write_text(name)
-    return str(final)
+    return str(tmp)
 
 
-def latest_ooc_checkpoint(ckpt_dir: str):
+def verify_ooc_checkpoint(path, *, deep: bool = True) -> list:
+    """Validity check against the COMMIT manifest: every listed file
+    present with its recorded size, manifest'd CRCs matching, and (deep)
+    every page file passing its embedded CRC trailer. Returns the list
+    of violations — empty means the snapshot is safe to resume from."""
+    p = Path(path)
+    errs = []
+    commit = p / OOC_COMMIT
+    if not commit.exists():
+        return [f"{p.name}: no {OOC_COMMIT} manifest (partial checkpoint)"]
+    try:
+        doc = json.loads(commit.read_text())
+    except (OSError, ValueError) as e:
+        return [f"{p.name}: unreadable manifest ({e})"]
+    for name, size in doc.get("files", {}).items():
+        f = p / name
+        if not f.exists():
+            errs.append(f"{p.name}/{name}: listed in manifest but missing")
+            continue
+        if f.stat().st_size != size:
+            errs.append(f"{p.name}/{name}: size {f.stat().st_size} != "
+                        f"manifest {size}")
+            continue
+        if name in doc.get("crcs", {}):
+            algo, want = doc["crcs"][name]
+            got_algo, got = _file_crc(f)
+            if got_algo == algo and got != want:
+                errs.append(f"{p.name}/{name}: CRC mismatch")
+        elif deep and name.endswith(".npy"):
+            if not verify_page_file(f):
+                errs.append(f"{p.name}/{name}: page CRC trailer mismatch")
+    return errs
+
+
+def ooc_checkpoints(ckpt_dir: str) -> list:
+    """COMMITTED checkpoint directories under ``ckpt_dir``, oldest
+    first. Partials (no manifest) are never listed."""
     d = Path(ckpt_dir)
-    marker = d / "LATEST_OOC"
-    if not marker.exists():
-        return None
-    p = d / marker.read_text().strip()
-    return str(p) if p.exists() else None
+    if not d.is_dir():
+        return []
+    return sorted(str(p) for p in d.iterdir()
+                  if p.is_dir() and p.name.startswith("ooc_")
+                  and (p / OOC_COMMIT).exists())
+
+
+def latest_ooc_checkpoint(ckpt_dir: str, *, skip=(), deep: bool = False):
+    """Newest VALID out-of-core checkpoint: committed manifest, not in
+    ``skip``, and (``deep=True``, the recovery path) passing full page
+    CRC verification. The LATEST_OOC marker is only a hint — a partial
+    or corrupt directory is never selected."""
+    skip = {str(Path(s)) for s in skip}
+    for p in reversed(ooc_checkpoints(ckpt_dir)):
+        if str(Path(p)) in skip:
+            continue
+        if deep and verify_ooc_checkpoint(p, deep=True):
+            continue
+        return p
+    return None
 
 
 def load_ooc_meta(path: str):
     """Resolve an OOC checkpoint path (either a checkpoint directory or
-    a parent directory with a LATEST_OOC marker) and load its metadata.
+    a parent directory of checkpoints) and load its metadata. Parent
+    resolution only ever lands on a COMMITTED snapshot.
     Returns (meta dict, gs npz mapping, checkpoint Path)."""
     p = Path(path)
-    if (p / "LATEST_OOC").exists():
-        p = p / (p / "LATEST_OOC").read_text().strip()
     if not (p / "meta.json").exists():
-        raise FileNotFoundError(
-            f"{path!r} is not an out-of-core checkpoint (no meta.json)")
+        cand = latest_ooc_checkpoint(p)
+        if cand is None:
+            raise FileNotFoundError(
+                f"{path!r} is not an out-of-core checkpoint (no meta.json "
+                "and no committed checkpoints inside)")
+        p = Path(cand)
+    elif not (p / OOC_COMMIT).exists():
+        raise CheckpointCorruption(p, "no COMMIT manifest (partial)")
     meta = json.loads((p / "meta.json").read_text())
     gs = dict(np.load(p / "gs.npz"))
     return meta, gs, p
 
 
-def latest_checkpoint(ckpt_dir: str):
+def checkpoints(ckpt_dir: str) -> list:
+    """COMMITTED npz checkpoints under ``ckpt_dir``, oldest first."""
     d = Path(ckpt_dir)
-    marker = d / "LATEST"
-    if not marker.exists():
-        return None
-    p = d / marker.read_text().strip()
-    return str(p) if p.exists() else None
+    if not d.is_dir():
+        return []
+    return sorted(str(p) for p in d.iterdir()
+                  if p.name.startswith("ckpt_") and p.suffix == ".npz"
+                  and p.with_name(f"{p.name}.COMMIT").exists())
+
+
+def latest_checkpoint(ckpt_dir: str, *, skip=(), verify: bool = False):
+    """Newest VALID npz checkpoint (committed sidecar present; with
+    ``verify=True`` the npz's CRC is recomputed against it). Partial or
+    corrupt snapshots are never selected; LATEST is just a hint."""
+    skip = {str(Path(s)) for s in skip}
+    for p in reversed(checkpoints(ckpt_dir)):
+        if str(Path(p)) in skip:
+            continue
+        if verify and _npz_commit_errors(Path(p)):
+            continue
+        return p
+    return None
+
+
+def _npz_commit_errors(path: Path) -> list:
+    commit = path.with_name(f"{path.name}.COMMIT")
+    if not commit.exists():
+        return [f"{path.name}: no COMMIT sidecar (partial checkpoint)"]
+    try:
+        doc = json.loads(commit.read_text())
+    except (OSError, ValueError) as e:
+        return [f"{path.name}: unreadable COMMIT sidecar ({e})"]
+    if path.stat().st_size != doc.get("bytes"):
+        return [f"{path.name}: size != manifest"]
+    algo, got = _file_crc(path)
+    if algo == doc.get("crc_algo") and got != doc.get("crc"):
+        return [f"{path.name}: CRC mismatch"]
+    return []
 
 
 def load_checkpoint(path: str):
+    p = Path(path)
+    if p.with_name(f"{p.name}.COMMIT").exists():
+        errs = _npz_commit_errors(p)
+        if errs:
+            raise CheckpointCorruption(p, "; ".join(errs))
     z = dict(np.load(path))
     if z["gs_overflow"].ndim == 0:
         # pre-split checkpoint: one aggregated counter — restore it into

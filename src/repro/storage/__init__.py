@@ -21,10 +21,13 @@ disk_dir=..., eviction=..., io_threads=..., readahead_pages=...)`` and
 the CLI flags ``--disk-dir`` / ``--memory-budget-bytes`` /
 ``--eviction`` / ``--io-threads`` / ``--readahead-pages``.
 """
-from repro.storage.io_engine import IOEngine
+from repro.storage.io_engine import (DEFAULT_RETRY, IOEngine, RetryPolicy,
+                                     retry_io)
 from repro.storage.pager import EVICTION_POLICIES, BufferPool, Page
-from repro.storage.spillfile import SpillDir, SpillSlot
+from repro.storage.spillfile import (PageCorruption, SpillDir, SpillSlot,
+                                     verify_page_file)
 from repro.storage.tiered import TieredStore
 
 __all__ = ["EVICTION_POLICIES", "BufferPool", "IOEngine", "Page",
-           "SpillDir", "SpillSlot", "TieredStore"]
+           "PageCorruption", "RetryPolicy", "DEFAULT_RETRY", "retry_io",
+           "SpillDir", "SpillSlot", "TieredStore", "verify_page_file"]

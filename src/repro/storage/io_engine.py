@@ -27,30 +27,90 @@ out-of-core engine must overlap its disk leg with everything else):
   never writes a page mid-replacement (versioning) and performs all disk
   I/O *outside* the pool lock.
 
-Worker failures never kill the run silently: per-key errors are kept in
-``errors`` (read failures re-raise from the foreground fault; write
-failures leave the page dirty for the synchronous ``flush`` fallback to
-surface). ``close`` drains the queue — dirty pages handed to the engine
-are on disk before shutdown returns.
+Worker failures never kill the run silently — and transient ones never
+kill it at all:
+
+* **Retry ladder** — every disk op (background AND the pool's foreground
+  faults, which share this module's ``retry_io``) retries transient
+  ``OSError``s with capped exponential backoff + jitter before
+  surfacing. ``PageCorruption`` is never retried: re-reading corrupt
+  bytes returns the same corrupt bytes, so it surfaces immediately for
+  the recovery supervisor. Retries are visible as ``retry`` trace
+  instants and the ``io.retries`` registry counter.
+* **Degradation ladder** — repeated faults raise a health score that
+  first shrinks readahead to one page (stop speculating against a sick
+  disk), then falls back to synchronous foreground I/O entirely; clean
+  ops decay the score back toward full pipelining when the disk heals.
+  Transitions emit ``degrade`` trace instants and the live level rides
+  ``stats()``/``take_interval`` and the ``io.degrade_level`` gauge.
+
+Per-key errors are kept in ``errors`` — BOUNDED (oldest evicted past
+``ERRORS_CAP``) so a persistently bad disk can't grow it without limit —
+and counted on the ``io.errors`` registry counter. Read failures
+re-raise from the foreground fault; write failures leave the page dirty
+for the synchronous ``flush`` fallback to surface. ``close`` drains the
+queue — dirty pages handed to the engine are on disk before shutdown
+returns.
 """
 from __future__ import annotations
 
 import queue
+import random
 import threading
 import time
+from dataclasses import dataclass
 from typing import Optional
 
 from repro.obs import trace
-from repro.obs.metrics import Histogram
+from repro.obs.metrics import Counter, Histogram
+from repro.storage.spillfile import PageCorruption
 
 _SENTINEL = object()
+
+ERRORS_CAP = 64          # bounded error log (satellite: no unbounded growth)
+
+
+@dataclass
+class RetryPolicy:
+    """Capped exponential backoff + jitter for transient disk faults."""
+    attempts: int = 4            # total tries (1 initial + retries)
+    base_s: float = 0.002        # first backoff
+    cap_s: float = 0.25          # backoff ceiling
+    jitter: float = 0.5          # uniform extra fraction of the delay
+
+
+DEFAULT_RETRY = RetryPolicy()
+
+
+def retry_io(fn, policy: RetryPolicy = DEFAULT_RETRY, *, on_retry=None):
+    """Run a disk op under the retry ladder. Retries ``OSError`` (real
+    EIO and injected faults alike); ``PageCorruption`` and application
+    errors surface immediately. ``on_retry(attempt, exc)`` fires before
+    each backoff sleep."""
+    delay = policy.base_s
+    for attempt in range(policy.attempts):
+        try:
+            return fn()
+        except PageCorruption:
+            raise
+        except OSError as exc:
+            if attempt + 1 >= policy.attempts:
+                raise
+            if on_retry is not None:
+                on_retry(attempt, exc)
+            trace.instant("io_retry", "retry", attempt=attempt,
+                          error=type(exc).__name__)
+            time.sleep(min(delay * (1.0 + policy.jitter * random.random()),
+                           policy.cap_s))
+            delay *= 2.0
 
 
 class IOEngine:
     """Worker thread(s) owning a ``BufferPool``'s spill-tier I/O."""
 
     def __init__(self, pool, *, threads: int = 1,
-                 readahead_pages: int = 8, metrics=None):
+                 readahead_pages: int = 8, metrics=None,
+                 retry: Optional[RetryPolicy] = None):
         if threads < 1:
             raise ValueError("io engine needs at least one worker thread")
         self.pool = pool
@@ -59,6 +119,24 @@ class IOEngine:
         # compute time (`autopace`).
         self.readahead_max = max(int(readahead_pages), 1)
         self.readahead_pages = self.readahead_max
+        # Retry + degradation ladder state. The policy and the counters
+        # are SHARED with the pool so foreground faults ride the same
+        # ladder and feed the same health score.
+        self.retry = retry or RetryPolicy()
+        self.retries = 0
+        self.error_count = 0
+        self._c_retries = (metrics.counter("io.retries")
+                           if metrics is not None else Counter())
+        self._c_errors = (metrics.counter("io.errors")
+                          if metrics is not None else Counter())
+        self._g_degrade = (metrics.gauge("io.degrade_level")
+                           if metrics is not None else None)
+        self._health = 0                 # fault pressure; 0 = healthy
+        self.degrade_readahead_at = 4    # health >= this: readahead -> 1
+        self.degrade_sync_at = 8         # health >= this: sync fallback
+        self.degrade_level = 0           # 0 full / 1 throttled / 2 sync
+        pool.retry_policy = self.retry
+        pool.retry_notify = self._note_retry
         self._q: queue.Queue = queue.Queue()
         self._mu = threading.Lock()
         self._queued: set = set()        # (op, key) pending — coalescing
@@ -106,13 +184,25 @@ class IOEngine:
         self._q.put((op, key))
         return True
 
+    def effective_readahead(self) -> int:
+        """Live depth after the degradation ladder: level 1 stops
+        speculating (one page), level 2 is the sync-I/O fallback (no
+        background reads at all — the foreground fault path, with its
+        own retry ladder, does the work)."""
+        if self.degrade_level >= 2:
+            return 0
+        if self.degrade_level == 1:
+            return 1
+        return self.readahead_pages
+
     def prefetch(self, keys) -> int:
         """Schedule background faults for up to ``readahead_pages`` of
-        ``keys`` that are present-but-not-resident. Returns the number
-        scheduled."""
+        ``keys`` that are present-but-not-resident (fewer while the
+        degradation ladder is engaged). Returns the number scheduled."""
         n = 0
+        depth = self.effective_readahead()
         for key in keys:
-            if n >= self.readahead_pages:
+            if n >= depth:
                 break
             if self.pool.wants_prefetch(key) and self._enqueue("read", key):
                 n += 1
@@ -128,8 +218,37 @@ class IOEngine:
                 n += 1
         return n
 
+    # ---- retry / degradation ladder ----------------------------------
+    def _note_retry(self, attempt: int, exc: Exception):
+        """Shared with the pool's foreground faults (``retry_notify``)."""
+        self._c_retries.inc()
+        with self._mu:
+            self.retries += 1
+        self._bump_health(+1)
+
+    def _bump_health(self, delta: int):
+        with self._mu:
+            self._health = max(0, self._health + delta)
+            level = (2 if self._health >= self.degrade_sync_at else
+                     1 if self._health >= self.degrade_readahead_at else 0)
+            prev, self.degrade_level = self.degrade_level, level
+        if level != prev:
+            trace.instant("io_degrade" if level > prev else "io_heal",
+                          "degrade", level=level, health=self._health)
+        if self._g_degrade is not None:
+            self._g_degrade.set(level)
+
+    def _record_error(self, key, e: Exception):
+        self._c_errors.inc()
+        with self._mu:
+            self.error_count += 1
+            self.errors[key] = e
+            while len(self.errors) > ERRORS_CAP:
+                self.errors.pop(next(iter(self.errors)))
+
     # ---- worker ------------------------------------------------------
     def _run(self):
+        from repro.runtime import faults
         while True:
             item = self._q.get()
             if item is _SENTINEL:
@@ -140,7 +259,10 @@ class IOEngine:
                 if op == "read":
                     t0 = time.time()
                     with trace.span("fault_bg", "readahead"):
-                        nbytes = self.pool.fault_background(key)
+                        nbytes = retry_io(
+                            lambda: (faults.hit("io.bg", f"read:{key}"),
+                                     self.pool.fault_background(key))[1],
+                            self.retry, on_retry=self._note_retry)
                     dt = time.time() - t0
                     with self._mu:
                         if nbytes is None:
@@ -151,17 +273,22 @@ class IOEngine:
                             self._int_reads += 1
                             self._int_read_s += dt
                             self.errors.pop(key, None)
+                    self._bump_health(-1)
                 else:
                     with trace.span("writeback_bg", "writeback"):
-                        nbytes = self.pool.writeback_background(key)
+                        nbytes = retry_io(
+                            lambda: (faults.hit("io.bg", f"write:{key}"),
+                                     self.pool.writeback_background(key))[1],
+                            self.retry, on_retry=self._note_retry)
                     if nbytes is not None:
                         with self._mu:
                             self.writes += 1
                             self.write_bytes += nbytes
                             self.errors.pop(key, None)
+                    self._bump_health(-1)
             except Exception as e:  # noqa: BLE001 — surfaced via errors
-                with self._mu:
-                    self.errors[key] = e
+                self._record_error(key, e)
+                self._bump_health(+2)
             finally:
                 with self._mu:
                     self._queued.discard((op, key))
@@ -200,7 +327,9 @@ class IOEngine:
                 "io_dropped_readaheads": self.dropped,
                 "io_queue_depth_peak": self._depth_peak,
                 "io_queue_depth_mean": mean,
-                "io_errors": len(self.errors),
+                "io_errors": self.error_count,
+                "io_retries": self.retries,
+                "io_degrade_level": self.degrade_level,
             }
 
     def autopace(self, compute_s: float) -> int:
@@ -239,6 +368,7 @@ class IOEngine:
                 "io_queue_depth_p90": hist["p90"],
                 "io_queue_depth_max": hist["max"],
                 "readahead_depth": self.readahead_pages,
+                "io_degrade_level": self.degrade_level,
             }
             self._depth_peak = self._outstanding
             self._depth_sum = 0

@@ -54,9 +54,15 @@ from typing import Optional
 import numpy as np
 
 from repro.obs import trace
+from repro.storage.io_engine import DEFAULT_RETRY, retry_io
 from repro.storage.spillfile import SpillDir
 
 EVICTION_POLICIES = ("lru", "mru")
+
+
+def _faults():
+    from repro.runtime import faults
+    return faults
 
 
 class Page:
@@ -116,6 +122,11 @@ class BufferPool:
         self.policy = policy
         self.spill = spill
         self.engine = None          # attached storage.io_engine.IOEngine
+        # Foreground disk ops ride the same retry ladder as the engine's
+        # background ops; an attached IOEngine shares its policy and its
+        # health-score callback through these two attributes.
+        self.retry_policy = DEFAULT_RETRY
+        self.retry_notify = None
         self._mu = threading.RLock()
         self._cv = threading.Condition(self._mu)   # background-fault done
         self._io_busy: set = set()   # keys with in-flight engine I/O
@@ -174,7 +185,8 @@ class BufferPool:
         with trace.span("page_writeback", "writeback"):
             if page.slot is None:
                 page.slot = self.spill.slot_for(page.key)
-            page.slot.store(page.data)
+            retry_io(lambda: page.slot.store(page.data),
+                     self.retry_policy, on_retry=self.retry_notify)
         self.spill_write_bytes += page.nbytes
         page.dirty = False
 
@@ -285,7 +297,9 @@ class BufferPool:
             self._io_busy.add(key)
         try:
             with trace.span("page_fault", "fault"):
-                data = slot.load()
+                _faults().hit("pager.fault", str(key))
+                data = retry_io(slot.load, self.retry_policy,
+                                on_retry=self.retry_notify)
         except BaseException:
             with self._mu:
                 self._io_done(key)

@@ -36,7 +36,7 @@ from typing import Optional
 import numpy as np
 
 from repro.storage.pager import BufferPool
-from repro.storage.spillfile import SpillDir
+from repro.storage.spillfile import SpillDir, SpillSlot
 
 
 class TieredStore:
@@ -167,7 +167,8 @@ class TieredStore:
         """Publish one page at ``dst_path`` for a checkpoint. Disk-tier
         pages move at the FILE level (hard-link for immutable pages such
         as inbox generations, kernel copy otherwise) — no DRAM
-        re-serialization; DRAM-tier pages fall back to ``np.save``."""
+        re-serialization; DRAM-tier pages serialize through a SpillSlot
+        so every exported page carries a CRC trailer either way."""
         page = self.pool.page(key)
         if self.spilling:
             if page.dirty or page.slot is None or not page.slot.exists():
@@ -178,7 +179,7 @@ class TieredStore:
                 page.dirty = False
             page.slot.export_to(dst_path, allow_link=page.immutable)
         else:
-            np.save(dst_path, self.pool.get(key))
+            SpillSlot(dst_path).store(self.pool.get(key))
 
     def adopt_page(self, key, src_path, *, relation: Optional[str] = None,
                    immutable: bool = False):
@@ -194,7 +195,7 @@ class TieredStore:
             del mm
             self.pool.adopt(key, slot, nbytes, immutable=immutable)
         else:
-            arr = np.load(src_path)
+            arr = SpillSlot(src_path).load()   # verifies the CRC trailer
             rows = arr.shape[0]
             self.pool.put(key, arr)
         if relation is not None:

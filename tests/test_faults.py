@@ -1,0 +1,551 @@
+"""Chaos harness + recovery supervision: deterministic fault injection,
+the I/O retry/backoff and degradation ladders, checksummed pages,
+crash-mid-checkpoint validity, and driver-level recovery that converges
+bit-for-bit with unfailed runs (paper Section 5.7)."""
+import json
+import os
+
+if "XLA_FLAGS" not in os.environ:   # effective only when run standalone
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import gather_values, load_graph, run_host
+from repro.core.ooc import run_out_of_core
+from repro.core.sharded import run_sharded
+from repro.graph import ConnectedComponents, PageRank, SSSP, rmat_graph
+from repro.runtime import faults
+from repro.runtime.checkpoint import (CheckpointCorruption, checkpoints,
+                                      latest_checkpoint,
+                                      latest_ooc_checkpoint,
+                                      ooc_checkpoints, save_checkpoint,
+                                      verify_ooc_checkpoint)
+from repro.runtime.failure import FailureManager, StragglerMonitor, \
+    WorkerFailure
+from repro.storage.io_engine import ERRORS_CAP, IOEngine, RetryPolicy, \
+    retry_io
+from repro.storage.pager import BufferPool
+from repro.storage.spillfile import (PageCorruption, SpillSlot,
+                                     verify_page_file)
+
+N = 120
+EDGES = rmat_graph(N, 700, seed=3)
+
+# near-zero backoff keeps the ladder tests fast
+FAST = RetryPolicy(attempts=4, base_s=1e-4, cap_s=1e-3, jitter=0.0)
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >=2 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=8 before jax init)")
+
+
+@pytest.fixture(autouse=True)
+def _disarm():
+    """Every test starts and ends with the chaos harness off."""
+    faults.clear()
+    yield
+    faults.clear()
+
+
+def _vert():
+    return load_graph(EDGES, N, P=4, value_dims=2)
+
+
+def _vals(res):
+    return gather_values(res.vertex, N)[:, 0]
+
+
+# ---------------------------------------------------------------------
+# fault injector
+# ---------------------------------------------------------------------
+
+def test_injector_count_determinism():
+    faults.install(faults.FaultPlan(faults=[
+        faults.FaultSpec(site="spill.read", kind="transient",
+                         after=2, times=2)]))
+    outcomes = []
+    for _ in range(6):
+        try:
+            faults.hit("spill.read", "page.npy")
+            outcomes.append("ok")
+        except faults.InjectedFault:
+            outcomes.append("fault")
+    # hits 1-2 pass (after=2), 3-4 fire (times=2), 5-6 pass again
+    assert outcomes == ["ok", "ok", "fault", "fault", "ok", "ok"]
+    s = faults.summary()
+    assert s["specs"][0]["hits"] == 6
+    assert s["specs"][0]["fired"] == 2
+    faults.clear()
+    faults.hit("spill.read", "page.npy")   # disarmed: no-op
+
+
+def test_injector_match_and_sites():
+    faults.install(faults.FaultPlan(faults=[
+        faults.FaultSpec(site="spill.write", kind="permanent", times=0,
+                         match="value")]))
+    faults.hit("spill.write", "edge_src_0.npy")       # no match: passes
+    with pytest.raises(faults.InjectedFault):
+        faults.hit("spill.write", "value_1.npy")
+    with pytest.raises(ValueError):
+        faults.FaultSpec(site="not-a-site")
+    with pytest.raises(ValueError):
+        faults.FaultSpec(site="spill.read", kind="not-a-kind")
+
+
+def test_worker_failure_at_superstep():
+    faults.install(faults.FaultPlan(faults=[
+        faults.FaultSpec(site="superstep", kind="worker", superstep=3,
+                         worker=2, match="ooc")]))
+    faults.superstep_tick(3, "host")      # wrong driver: passes
+    faults.superstep_tick(2, "ooc")       # wrong superstep: passes
+    with pytest.raises(WorkerFailure) as ei:
+        faults.superstep_tick(3, "ooc")
+    assert ei.value.worker == 2
+    faults.superstep_tick(3, "ooc")       # times=1: consumed
+
+
+def test_plan_env_roundtrip(tmp_path, monkeypatch):
+    plan = faults.FaultPlan(seed=7, faults=[
+        faults.FaultSpec(site="spill.read", kind="transient", times=2),
+        faults.FaultSpec(site="superstep", kind="worker", superstep=5,
+                         worker=1)])
+    back = faults.FaultPlan.from_json(plan.to_json())
+    assert back == plan
+    # inline JSON
+    monkeypatch.setenv(faults.ENV_PLAN, plan.to_json())
+    inj = faults.install_from_env()
+    assert inj is not None and inj.plan == plan
+    # path to JSON
+    p = tmp_path / "plan.json"
+    p.write_text(plan.to_json())
+    monkeypatch.setenv(faults.ENV_PLAN, str(p))
+    assert faults.install_from_env().plan == plan
+    monkeypatch.delenv(faults.ENV_PLAN)
+    assert faults.install_from_env() is None
+
+
+# ---------------------------------------------------------------------
+# checksummed pages
+# ---------------------------------------------------------------------
+
+def test_page_checksum_roundtrip(tmp_path):
+    slot = SpillSlot(tmp_path / "page.npy")
+    arr = np.arange(64, dtype=np.float32).reshape(8, 8)
+    slot.store(arr)
+    assert verify_page_file(slot.path)
+    assert np.array_equal(slot.load(), arr)
+    # flip one payload byte: CRC must catch it
+    raw = bytearray(slot.path.read_bytes())
+    raw[90] ^= 0xFF
+    slot.path.write_bytes(bytes(raw))
+    assert not verify_page_file(slot.path)
+    with pytest.raises(PageCorruption):
+        slot.load()
+
+
+def test_injected_write_corruption_detected(tmp_path):
+    faults.install(faults.FaultPlan(faults=[
+        faults.FaultSpec(site="page.corrupt", kind="corrupt", times=1)]))
+    slot = SpillSlot(tmp_path / "page.npy")
+    slot.store(np.ones(16, dtype=np.int32))
+    with pytest.raises(PageCorruption):
+        slot.load()
+    # the fault was times=1: the next write is clean
+    slot.store(np.ones(16, dtype=np.int32))
+    assert np.array_equal(slot.load(), np.ones(16, dtype=np.int32))
+
+
+# ---------------------------------------------------------------------
+# retry + degradation ladders
+# ---------------------------------------------------------------------
+
+def test_retry_ladder_transient_succeeds():
+    calls = {"n": 0}
+    retried = []
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise OSError("transient EIO")
+        return "ok"
+
+    out = retry_io(flaky, FAST, on_retry=lambda a, e: retried.append(a))
+    assert out == "ok" and calls["n"] == 3 and retried == [0, 1]
+
+
+def test_retry_ladder_permanent_and_corruption():
+    def dead():
+        raise OSError("dead disk")
+
+    with pytest.raises(OSError):
+        retry_io(dead, FAST)
+
+    calls = {"n": 0}
+
+    def corrupt():
+        calls["n"] += 1
+        raise PageCorruption("p.npy")
+
+    with pytest.raises(PageCorruption):
+        retry_io(corrupt, FAST)
+    assert calls["n"] == 1    # corruption is never retried
+
+
+def test_degradation_ladder_and_healing(tmp_path):
+    pool = BufferPool(None, spill=None)
+    engine = IOEngine(pool, threads=1, readahead_pages=8, retry=FAST)
+    try:
+        assert engine.effective_readahead() == 8
+        for _ in range(4):                   # health 4: throttle
+            engine._note_retry(0, OSError())
+        assert engine.degrade_level == 1
+        assert engine.effective_readahead() == 1
+        for _ in range(2):                   # health 8: sync fallback
+            engine._bump_health(+2)
+        assert engine.degrade_level == 2
+        assert engine.effective_readahead() == 0
+        for _ in range(8):                   # clean ops heal it back
+            engine._bump_health(-1)
+        assert engine.degrade_level == 0
+        assert engine.effective_readahead() == 8
+        assert engine.stats()["io_retries"] == 4
+    finally:
+        engine.close()
+
+
+def test_error_log_bounded():
+    pool = BufferPool(None, spill=None)
+    engine = IOEngine(pool, threads=1)
+    try:
+        for k in range(ERRORS_CAP + 40):
+            engine._record_error(("page", k), OSError("EIO"))
+        assert len(engine.errors) <= ERRORS_CAP
+        assert engine.error_count == ERRORS_CAP + 40
+        assert engine.stats()["io_errors"] == ERRORS_CAP + 40
+    finally:
+        engine.close()
+
+
+def test_transient_spill_faults_survive_ooc_run(tmp_path):
+    """Transient read/write faults on the disk tier are absorbed by the
+    retry ladder — the run completes without recovery and stays
+    bit-for-bit with the clean run."""
+    pr = PageRank(N, iterations=6)
+    clean = run_out_of_core(_vert(), pr, pr.suggested_plan,
+                            budget_partitions=2, max_supersteps=10,
+                            disk_dir=str(tmp_path / "clean"))
+    faults.install(faults.FaultPlan(faults=[
+        faults.FaultSpec(site="spill.write", kind="transient", times=3),
+        faults.FaultSpec(site="io.bg", kind="transient", times=2)]))
+    chaotic = run_out_of_core(_vert(), pr, pr.suggested_plan,
+                              budget_partitions=2, max_supersteps=10,
+                              disk_dir=str(tmp_path / "chaos"),
+                              memory_budget_bytes=1 << 18,
+                              io_threads=1)
+    assert np.array_equal(_vals(chaotic), _vals(clean))
+
+
+# ---------------------------------------------------------------------
+# failure manager
+# ---------------------------------------------------------------------
+
+def test_failure_manager_blacklists_repeat_offender():
+    fm = FailureManager(n_workers=4, max_retries=3)
+    assert fm.record(OSError("EIO"), worker=1)
+    assert fm.record(OSError("EIO"), worker=1)
+    assert 1 not in fm.blacklist          # two strikes: benefit of doubt
+    assert fm.record(PageCorruption("p.npy"), worker=1)
+    assert 1 in fm.blacklist              # third recoverable failure
+    assert fm.healthy_workers() == 3
+    # a WorkerFailure blacklists immediately
+    assert fm.record(WorkerFailure(2, "power off"))
+    assert 2 in fm.blacklist
+    # application errors are not recoverable and never blacklist
+    assert not fm.record(ValueError("bug"), worker=3)
+    assert 3 not in fm.blacklist
+
+
+def test_straggler_monitor_and_stats_wiring():
+    mon = StragglerMonitor(threshold=2.0)
+    for i in range(5):
+        assert mon.observe(i, 0.1) is None
+    flag = mon.observe(5, 0.5)
+    assert flag and flag["action"] == "flag-straggler"
+
+    from repro.planner.stats import StatsCollector
+    coll = StatsCollector(n_partitions=4, vertex_capacity=32, msg_dims=1)
+    for i in range(6):
+        rec = coll.record(i, active=10, messages=5, wall_s=0.01)
+        assert "straggler" not in rec.extra
+    slow = coll.record(6, active=10, messages=5, wall_s=0.5)
+    assert slow.extra["straggler"]["superstep"] == 6
+    # jit-compile steps are excluded from the straggler baseline
+    comp = coll.record(7, active=10, messages=5, wall_s=9.0,
+                       recompiled=True)
+    assert "straggler" not in comp.extra
+
+
+# ---------------------------------------------------------------------
+# checkpoint validity: COMMIT manifests, crash-mid-checkpoint
+# ---------------------------------------------------------------------
+
+def test_crash_mid_npz_checkpoint(tmp_path):
+    """The fault injector kills the writer between payload publish and
+    the COMMIT manifest; recovery must restore the PREVIOUS committed
+    snapshot, never the newer partial."""
+    pr = PageRank(N, iterations=6)
+    clean = run_host(_vert(), pr, pr.suggested_plan, max_supersteps=10)
+    faults.install(faults.FaultPlan(faults=[
+        faults.FaultSpec(site="checkpoint.commit", kind="permanent",
+                         times=1, match="ckpt_000004")]))
+    res = run_host(_vert(), pr, pr.suggested_plan, max_supersteps=10,
+                   checkpoint_every=2, checkpoint_dir=str(tmp_path),
+                   recover=True)
+    # restore landed on ckpt_000002 — the ckpt_000004 payload existed at
+    # restore time but carried no manifest (the replay later rewrites it)
+    assert res.recovery and res.recovery[0]["restored_from"] \
+        == str(tmp_path / "ckpt_000002.npz")
+    assert np.allclose(_vals(res), _vals(clean), atol=1e-6)
+
+
+def test_partial_npz_never_selected(tmp_path):
+    v = _vert()
+    pr = PageRank(N, iterations=6)
+    res = run_host(v, pr, pr.suggested_plan, max_supersteps=6,
+                   checkpoint_every=2, checkpoint_dir=str(tmp_path))
+    assert res.supersteps >= 4
+    good = latest_checkpoint(str(tmp_path))
+    # a later payload without a manifest must never win, even though the
+    # (untrusted) LATEST hint points at it
+    faults.install(faults.FaultPlan(faults=[
+        faults.FaultSpec(site="checkpoint.commit", kind="permanent")]))
+    from repro.runtime.checkpoint import load_checkpoint
+    gv, gm, ggs = load_checkpoint(good)
+    with pytest.raises(faults.InjectedFault):
+        save_checkpoint(str(tmp_path), 99, gv, gm, ggs)
+    faults.clear()
+    assert (tmp_path / "ckpt_000099.npz").exists()
+    assert latest_checkpoint(str(tmp_path)) == good
+    assert all("000099" not in c for c in checkpoints(str(tmp_path)))
+
+
+def test_corrupt_npz_fails_over_to_previous(tmp_path):
+    pr = PageRank(N, iterations=6)
+    run_host(_vert(), pr, pr.suggested_plan, max_supersteps=6,
+             checkpoint_every=2, checkpoint_dir=str(tmp_path))
+    newest = latest_checkpoint(str(tmp_path))
+    raw = bytearray((tmp_path / os.path.basename(newest)).read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    (tmp_path / os.path.basename(newest)).write_bytes(bytes(raw))
+    # verify=True rejects the damaged snapshot outright
+    assert latest_checkpoint(str(tmp_path), verify=True) != newest
+    from repro.runtime.checkpoint import load_checkpoint
+    with pytest.raises(CheckpointCorruption):
+        load_checkpoint(newest)
+
+
+def test_crash_mid_ooc_checkpoint(tmp_path):
+    """Same crash window for the OOC (directory) checkpoint writer: the
+    partial snapshot stays visible on disk without a manifest, selection
+    skips it, and a resume lands on the previous valid snapshot."""
+    pr = PageRank(N, iterations=6)
+    clean = run_out_of_core(_vert(), pr, pr.suggested_plan,
+                            budget_partitions=2, max_supersteps=10,
+                            disk_dir=str(tmp_path / "clean"))
+    faults.install(faults.FaultPlan(faults=[
+        faults.FaultSpec(site="checkpoint.commit", kind="permanent",
+                         after=1, times=1)]))
+    ck = tmp_path / "ckpt"
+    with pytest.raises(faults.InjectedFault):
+        run_out_of_core(_vert(), pr, pr.suggested_plan,
+                        budget_partitions=2, max_supersteps=10,
+                        disk_dir=str(tmp_path / "chaos"),
+                        checkpoint_every=2, checkpoint_dir=str(ck))
+    # the writer died mid-checkpoint at superstep 4: the partial dir is
+    # visible, manifest-less, and never selected
+    assert (ck / "ooc_000004").is_dir()
+    assert not (ck / "ooc_000004" / "COMMIT.json").exists()
+    assert str(ck / "ooc_000004") not in ooc_checkpoints(str(ck))
+    assert latest_ooc_checkpoint(str(ck)) == str(ck / "ooc_000002")
+    # a resume pointed at the checkpoint PARENT resolves to the valid
+    # snapshot and finishes bit-for-bit (vert=None: shapes come from it)
+    res = run_out_of_core(None, pr, pr.suggested_plan,
+                          budget_partitions=2, max_supersteps=10,
+                          disk_dir=str(tmp_path / "resume"),
+                          resume_from=str(ck))
+    assert np.array_equal(_vals(res), _vals(clean))
+
+
+def test_verify_ooc_checkpoint_deep(tmp_path):
+    pr = PageRank(N, iterations=6)
+    ck = tmp_path / "ckpt"
+    run_out_of_core(_vert(), pr, pr.suggested_plan, budget_partitions=2,
+                    max_supersteps=6, disk_dir=str(tmp_path / "spill"),
+                    checkpoint_every=2, checkpoint_dir=str(ck))
+    snaps = ooc_checkpoints(str(ck))
+    assert len(snaps) >= 2
+    assert verify_ooc_checkpoint(snaps[-1]) == []
+    # damage one page payload inside the newest snapshot
+    import pathlib
+    pages = sorted(pathlib.Path(snaps[-1]).glob("*.npy"))
+    raw = bytearray(pages[0].read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    # break the hard link first: the live spill file must stay clean
+    pages[0].unlink()
+    pages[0].write_bytes(bytes(raw))
+    assert verify_ooc_checkpoint(snaps[-1]) != []
+    # deep selection fails over to the previous valid snapshot
+    assert latest_ooc_checkpoint(str(ck), deep=True) == snaps[-2]
+
+
+# ---------------------------------------------------------------------
+# chaos parity: recovery converges bit-for-bit with unfailed runs
+# ---------------------------------------------------------------------
+
+_CHAOS_ALGOS = {
+    "pagerank": lambda: PageRank(N, iterations=8),
+    "sssp": lambda: SSSP(source=0),
+    "cc": lambda: ConnectedComponents(),
+}
+
+
+@pytest.mark.parametrize("algo", sorted(_CHAOS_ALGOS))
+def test_ooc_recovery_parity(tmp_path, algo):
+    """Seeded chaos plan — transient disk reads, one permanent page
+    corruption, a WorkerFailure at superstep 5 — against
+    ``run_out_of_core(recover=True)``: completes bit-for-bit identical
+    to the unfailed run, restoring from a committed checkpoint."""
+    prog = _CHAOS_ALGOS[algo]()
+    clean = run_out_of_core(_vert(), prog, prog.suggested_plan,
+                            budget_partitions=2, max_supersteps=12,
+                            disk_dir=str(tmp_path / "clean"))
+    # the corruption hits the gen-4 inbox page exported into checkpoint
+    # ooc_000004; worker 1 then dies at superstep 4, so recovery must
+    # reject the newest (corrupt) snapshot, restore ooc_000003 — whose
+    # page reads run through the transient spill.read faults — and
+    # replay to a bit-for-bit identical result
+    faults.install(faults.FaultPlan(seed=42, faults=[
+        faults.FaultSpec(site="spill.read", kind="transient", times=2),
+        faults.FaultSpec(site="page.corrupt", kind="corrupt", times=1,
+                         match="inbox_dst_4"),
+        faults.FaultSpec(site="superstep", kind="worker", superstep=4,
+                         worker=1, match="ooc", times=1)]))
+    res = run_out_of_core(_vert(), prog, prog.suggested_plan,
+                          budget_partitions=2, max_supersteps=12,
+                          disk_dir=str(tmp_path / "chaos"),
+                          checkpoint_every=1,
+                          checkpoint_dir=str(tmp_path / "ckpt"),
+                          recover=True)
+    summ = faults.summary()
+    assert summ["specs"][0]["fired"] == 2       # transients retried away
+    assert summ["specs"][1]["fired"] == 1       # corruption landed
+    assert summ["specs"][2]["fired"] == 1       # worker failed once
+    assert len(res.recovery) == 1
+    assert res.recovery[0]["restored_from"] \
+        == str(tmp_path / "ckpt" / "ooc_000003")
+    assert np.array_equal(_vals(res), _vals(clean))
+
+
+def test_ooc_recovery_from_live_page_corruption(tmp_path):
+    """A corrupt LIVE page raises typed PageCorruption on fault-in under
+    budget pressure; the supervisor restores and the run converges."""
+    pr = PageRank(N, iterations=8)
+    clean = run_out_of_core(_vert(), pr, pr.suggested_plan,
+                            budget_partitions=2, max_supersteps=12,
+                            disk_dir=str(tmp_path / "clean"))
+    faults.install(faults.FaultPlan(faults=[
+        faults.FaultSpec(site="page.corrupt", kind="corrupt", times=1,
+                         match="value", after=4)]))
+    res = run_out_of_core(_vert(), pr, pr.suggested_plan,
+                          budget_partitions=2, max_supersteps=12,
+                          disk_dir=str(tmp_path / "chaos"),
+                          memory_budget_bytes=1 << 17,
+                          checkpoint_every=2,
+                          checkpoint_dir=str(tmp_path / "ckpt"),
+                          recover=True)
+    assert np.array_equal(_vals(res), _vals(clean))
+
+
+def test_host_recovery_elastic(tmp_path):
+    """WorkerFailure blacklists a worker; the host driver re-partitions
+    the latest checkpoint onto the survivors (P=4 -> P=3) and
+    converges."""
+    pr = PageRank(N, iterations=8)
+    clean = run_host(_vert(), pr, pr.suggested_plan, max_supersteps=12)
+    faults.install(faults.FaultPlan(faults=[
+        faults.FaultSpec(site="superstep", kind="worker", superstep=5,
+                         worker=2, match="host", times=1)]))
+    res = run_host(_vert(), pr, pr.suggested_plan, max_supersteps=12,
+                   checkpoint_every=2, checkpoint_dir=str(tmp_path),
+                   recover=True)
+    assert len(res.recovery) == 1
+    assert res.recovery[0]["blacklist"] == [2]
+    assert res.vertex.num_partitions == 3
+    assert np.allclose(_vals(res), _vals(clean), atol=1e-6)
+
+
+def test_supervisor_forwards_application_errors():
+    pr = PageRank(N, iterations=4)
+
+    def boom(i, rec):
+        if i == 2:
+            raise ValueError("application bug")
+
+    with pytest.raises(ValueError):
+        run_out_of_core(_vert(), pr, pr.suggested_plan,
+                        budget_partitions=2, max_supersteps=8,
+                        recover=True, on_superstep=boom)
+
+
+# ---------------------------------------------------------------------
+# sharded driver recovery (multi-device: runs in the CI chaos job under
+# XLA_FLAGS=--xla_force_host_platform_device_count=8)
+# ---------------------------------------------------------------------
+
+def _vert8():
+    return load_graph(EDGES, N, P=8, value_dims=2)
+
+
+@multi_device
+def test_sharded_recovery_parity(tmp_path):
+    """WorkerFailure on the mesh: recovery blacklists the device-worker,
+    restores the latest valid npz checkpoint, re-meshes onto the largest
+    divisor of P that fits the 7 survivors (P stays 8, so per-partition
+    results are device-count invariant) and replays bit-for-bit."""
+    pr = PageRank(N, iterations=8)
+    clean = run_sharded(_vert8(), pr, pr.suggested_plan,
+                        max_supersteps=12)
+    faults.install(faults.FaultPlan(faults=[
+        faults.FaultSpec(site="superstep", kind="worker", superstep=3,
+                         worker=5, match="sharded", times=1)]))
+    res = run_sharded(_vert8(), pr, pr.suggested_plan, max_supersteps=12,
+                      checkpoint_every=2, checkpoint_dir=str(tmp_path),
+                      recover=True)
+    assert len(res.recovery) == 1
+    assert res.recovery[0]["blacklist"] == [5]
+    assert res.recovery[0]["restored_from"] \
+        == str(tmp_path / "ckpt_000002.npz")
+    assert np.array_equal(_vals(res), _vals(clean))
+
+
+@multi_device
+def test_sharded_exchange_fault_restarts(tmp_path):
+    """A transient exchange-transport fault before the first checkpoint
+    is recoverable but leaves nothing to restore: the supervisor
+    restarts from the initial relations and still converges
+    bit-for-bit."""
+    pr = PageRank(N, iterations=6)
+    clean = run_sharded(_vert8(), pr, pr.suggested_plan,
+                        max_supersteps=10)
+    faults.install(faults.FaultPlan(faults=[
+        faults.FaultSpec(site="sharded.exchange", kind="transient",
+                         times=1)]))
+    res = run_sharded(_vert8(), pr, pr.suggested_plan, max_supersteps=10,
+                      checkpoint_every=4, checkpoint_dir=str(tmp_path),
+                      recover=True)
+    assert len(res.recovery) == 1
+    assert res.recovery[0]["restored_from"] is None
+    assert np.array_equal(_vals(res), _vals(clean))
